@@ -1,0 +1,110 @@
+//! Hardware-aware compression of the AlexNet proxy (paper §5, Table 9).
+//!
+//! Runs the Fig. 5 algorithm live: compute-proportional α reduction under
+//! an accuracy constraint (binary-searched with real short ADMM probes),
+//! break-even restoration against the calibrated hardware model, and the
+//! synthesized per-layer / overall speedup report.
+//!
+//! Run: `cargo run --release --example hw_aware_alexnet [-- --fast]`
+
+use admm_nn::coordinator::hw_aware::{hw_aware_compress, HwAwareConfig};
+use admm_nn::coordinator::{AdmmConfig, TrainConfig, Trainer};
+use admm_nn::data;
+use admm_nn::hwmodel::HwConfig;
+use admm_nn::report::MeasuredRun;
+use admm_nn::runtime::{Runtime, TrainState};
+use admm_nn::util::fmt_ratio;
+
+fn main() -> admm_nn::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let (pre, iters, spi, retrain, probes) =
+        if fast { (150, 2, 40, 60, 2) } else { (500, 3, 80, 150, 4) };
+
+    let rt = Runtime::load("artifacts")?;
+    let sess = rt.model("alexnet_proxy")?;
+    let ds = data::for_input_shape(&sess.entry.input_shape);
+    let hw = HwConfig::default();
+    println!(
+        "hardware model: break-even portion {:.1}% -> ratio {}",
+        hw.break_even_portion() * 100.0,
+        fmt_ratio(hw.break_even_ratio())
+    );
+
+    // dense pretraining
+    println!("== dense pretraining ({pre} steps) ==");
+    let mut st = TrainState::init(&sess.entry, 0);
+    let mut trainer = Trainer::new(&sess, ds.as_ref());
+    trainer.run(&mut st, &TrainConfig {
+        steps: pre,
+        verbose: true,
+        ..Default::default()
+    })?;
+
+    // hardware-aware compression (Fig. 5)
+    println!("\n== hardware-aware compression ==");
+    let cfg = HwAwareConfig {
+        hw,
+        acc_drop_tol: 0.02,
+        admm: AdmmConfig { iters, steps_per_iter: spi, ..Default::default() },
+        retrain_steps: retrain,
+        search_probes: probes,
+        eval_batches: 4,
+        verbose: true,
+        ..Default::default()
+    };
+    let res = hw_aware_compress(&sess, ds.as_ref(), &st, &cfg)?;
+
+    // Table-9-style report on the proxy
+    println!("\n== synthesized speedups (proxy conv layers) ==");
+    println!("{:<10} {:>8} {:>10} {:>10}", "layer", "keep", "ratio", "speedup");
+    for (name, alpha, speedup) in &res.speedup.layers {
+        println!(
+            "{:<10} {:>7.1}% {:>10} {:>9.2}x{}",
+            name,
+            alpha * 100.0,
+            fmt_ratio(1.0 / alpha),
+            speedup,
+            if *alpha == 1.0 { "   <- restored (below break-even)" } else { "" }
+        );
+    }
+    println!("overall conv speedup: {:.2}x", res.speedup.overall);
+    println!(
+        "accuracy: dense {:.4} -> compressed {:.4} (tolerance {:.3})",
+        res.dense_accuracy, res.accuracy, cfg.acc_drop_tol
+    );
+    println!("probes evaluated: {}", res.probes.len());
+    for (s, acc, ok) in &res.probes {
+        println!("  s={s:.3} acc={acc:.4} {}", if *ok { "accept" } else { "reject" });
+    }
+
+    // persist
+    std::fs::create_dir_all("results")?;
+    let wps: Vec<_> = sess.entry.weight_params().collect();
+    MeasuredRun {
+        model: "alexnet_proxy".into(),
+        method: "hw-aware admm".into(),
+        dense_accuracy: res.dense_accuracy,
+        accuracy: res.accuracy,
+        prune_ratio: {
+            let total: f64 = wps.iter().map(|p| p.numel() as f64).sum();
+            let kept: f64 = wps.iter().zip(&res.keep)
+                .map(|(p, &a)| p.numel() as f64 * a).sum();
+            total / kept
+        },
+        layer_keep: wps
+            .iter()
+            .zip(&res.keep)
+            .map(|(p, &a)| {
+                (p.name.clone(), p.numel(),
+                 (p.numel() as f64 * a).round() as usize)
+            })
+            .collect(),
+        bits: vec![32; wps.len()],
+        data_bytes: 0.0,
+        model_bytes: 0.0,
+        wall_s: 0.0,
+    }
+    .save(std::path::Path::new("results"))?;
+    println!("\nresults written to results/");
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! End-to-end headline experiment: LeNet-5 joint compression (Tables 1, 5).
+//!
+//! The full workload a user of the framework would run, proving every
+//! layer composes (synthetic data → rust coordinator → AOT JAX/Pallas
+//! artifacts via PJRT → compressed model container):
+//!
+//! 1. dense-train the *exact* Caffe LeNet-5 (430.5K params) on the
+//!    synthetic digit dataset, logging the loss curve to CSV;
+//! 2. joint ADMM prune (layer-wise α, paper-style CONV/FC asymmetry)
+//!    + quantize (3b conv / 2b fc, Table 5's widths);
+//! 3. run the paper's baselines at the same target for comparison:
+//!    iterative magnitude pruning (Han), one-shot projection, and
+//!    L1-regularization pruning (Wen-style);
+//! 4. print Table-1/5-style rows and write MeasuredRun JSON so
+//!    `admm-nn report --table 1/5` picks the numbers up.
+//!
+//! Runtime budget: ~15-25 min CPU. Override with --fast for a smoke run.
+//!
+//! Run: `cargo run --release --example lenet_compress [-- --fast]`
+
+use std::time::Instant;
+
+use admm_nn::baselines;
+use admm_nn::coordinator::{pipeline, AdmmConfig, PipelineConfig, TrainConfig, Trainer};
+use admm_nn::data;
+use admm_nn::report::MeasuredRun;
+use admm_nn::runtime::{Runtime, TrainState};
+use admm_nn::util::{fmt_bytes, fmt_ratio};
+
+fn main() -> admm_nn::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    // (pretrain, admm iters, steps/iter, retrain, baseline rounds)
+    let (pre, iters, spi, retrain, rounds) =
+        if fast { (200, 2, 60, 100, 2) } else { (900, 5, 150, 400, 4) };
+
+    let rt = Runtime::load("artifacts")?;
+    let sess = rt.model("lenet5")?;
+    let ds = data::for_input_shape(&sess.entry.input_shape);
+    std::fs::create_dir_all("results")?;
+
+    // Layer-wise keep ratios in the paper's 85×-run shape: conv1 stays
+    // denser (input-adjacent), fc1 is pruned hardest.
+    let keep = vec![0.55, 0.08, 0.012, 0.12];
+    let target_ratio = {
+        let total: f64 = sess.entry.weight_params().map(|p| p.numel() as f64).sum();
+        let kept: f64 = sess
+            .entry
+            .weight_params()
+            .zip(&keep)
+            .map(|(p, &a)| p.numel() as f64 * a)
+            .sum();
+        total / kept
+    };
+    println!(
+        "LeNet-5 joint compression — target {} pruning, 3b conv / 2b fc",
+        fmt_ratio(target_ratio)
+    );
+
+    // -- 1. dense pretraining ----------------------------------------------
+    let t0 = Instant::now();
+    let mut st = TrainState::init(&sess.entry, 0);
+    let mut trainer = Trainer::new(&sess, ds.as_ref());
+    let log = trainer.run(&mut st, &TrainConfig {
+        steps: pre,
+        eval_every: (pre / 6).max(1),
+        eval_batches: 8,
+        verbose: true,
+        ..Default::default()
+    })?;
+    std::fs::write("results/lenet_dense_loss.csv", log.to_csv())?;
+    let dense_acc = sess.evaluate(&st, ds.as_ref(), 16)?.accuracy();
+    println!("dense accuracy {:.4} ({:.0}s)", dense_acc, t0.elapsed().as_secs_f64());
+    let dense_state = st.clone();
+
+    // -- 2. ADMM joint pipeline ---------------------------------------------
+    let t_admm = Instant::now();
+    let cfg = PipelineConfig {
+        prune_keep: keep.clone(),
+        quant_bits: Some(vec![3, 3, 2, 2]),
+        admm: AdmmConfig { iters, steps_per_iter: spi, verbose: true, ..Default::default() },
+        retrain_steps: retrain,
+        verbose: true,
+        ..Default::default()
+    };
+    let rep = pipeline::run_pipeline(&sess, ds.as_ref(), &mut st, &cfg)?;
+    let admm_wall = t_admm.elapsed().as_secs_f64();
+    let size = rep.model.size_report(sess.entry.total_weight_count() as u64);
+    rep.model.save("results/lenet5_admm.admm")?;
+
+    // -- 3. baselines at the same layer-wise target --------------------------
+    println!("\n== baselines (same per-layer keep targets) ==");
+    let t_b = Instant::now();
+    let mut bst = dense_state.clone();
+    let han = baselines::iterative_magnitude(
+        &sess, ds.as_ref(), &mut bst, &keep, rounds, retrain / rounds as u64,
+        1e-3, 8,
+    )?;
+    let han_wall = t_b.elapsed().as_secs_f64();
+    println!("  {:<28} acc {:.4}  prune {}", han.name, han.accuracy,
+             fmt_ratio(han.overall_prune_ratio));
+
+    let mut bst = dense_state.clone();
+    let oneshot = baselines::one_shot_prune(
+        &sess, ds.as_ref(), &mut bst, &keep, retrain, 1e-3, 8)?;
+    println!("  {:<28} acc {:.4}  prune {}", oneshot.name, oneshot.accuracy,
+             fmt_ratio(oneshot.overall_prune_ratio));
+
+    let mut bst = dense_state.clone();
+    let l1 = baselines::l1_then_prune(
+        &sess, ds.as_ref(), &mut bst, 5e-5, iters as u64 * spi, &keep,
+        retrain, 1e-3, 8)?;
+    println!("  {:<28} acc {:.4}  prune {}", l1.name, l1.accuracy,
+             fmt_ratio(l1.overall_prune_ratio));
+
+    // -- 4. report ------------------------------------------------------------
+    println!("\n== LeNet-5 results (synthetic digits) ==");
+    println!("{:<30} {:>9} {:>11}", "method", "accuracy", "prune ratio");
+    println!("{:<30} {:>9.4} {:>11}", "dense", dense_acc, "1x");
+    println!("{:<30} {:>9.4} {:>11}", "ADMM-NN joint (ours)", rep.final_acc,
+             fmt_ratio(rep.overall_prune_ratio));
+    println!("{:<30} {:>9.4} {:>11}", han.name, han.accuracy,
+             fmt_ratio(han.overall_prune_ratio));
+    println!("{:<30} {:>9.4} {:>11}", oneshot.name, oneshot.accuracy,
+             fmt_ratio(oneshot.overall_prune_ratio));
+    println!("{:<30} {:>9.4} {:>11}", l1.name, l1.accuracy,
+             fmt_ratio(l1.overall_prune_ratio));
+    println!(
+        "\nmodel size: dense {} -> data {} ({}) -> with indices {} ({})",
+        fmt_bytes(size.dense_bytes()),
+        fmt_bytes(size.data_bytes()),
+        fmt_ratio(size.data_compress_ratio()),
+        fmt_bytes(size.model_bytes()),
+        fmt_ratio(size.model_compress_ratio())
+    );
+    println!(
+        "wall: ADMM pipeline {:.0}s vs iterative baseline {:.0}s",
+        admm_wall, han_wall
+    );
+
+    // Persist for `admm-nn report` + EXPERIMENTS.md.
+    for (method, acc, ratio, lk, bits) in [
+        ("admm joint", rep.final_acc, rep.overall_prune_ratio,
+         rep.layer_keep.clone(), rep.quant.iter().map(|q| q.bits).collect::<Vec<_>>()),
+        ("iterative magnitude", han.accuracy, han.overall_prune_ratio,
+         han.layer_keep.clone(), vec![32; 4]),
+        ("one-shot prune", oneshot.accuracy, oneshot.overall_prune_ratio,
+         oneshot.layer_keep.clone(), vec![32; 4]),
+        ("l1 regularization", l1.accuracy, l1.overall_prune_ratio,
+         l1.layer_keep.clone(), vec![32; 4]),
+    ] {
+        MeasuredRun {
+            model: "lenet5".into(),
+            method: method.into(),
+            dense_accuracy: dense_acc,
+            accuracy: acc,
+            prune_ratio: ratio,
+            layer_keep: lk,
+            bits,
+            data_bytes: size.data_bytes(),
+            model_bytes: size.model_bytes(),
+            wall_s: admm_wall,
+        }
+        .save(std::path::Path::new("results"))?;
+    }
+    println!("\nresults written to results/ (see `admm-nn report --table 1`)");
+    Ok(())
+}

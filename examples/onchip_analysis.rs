@@ -1,0 +1,90 @@
+//! On-chip feasibility + hardware analysis (paper §4.3, Fig. 4, Table 9).
+//!
+//! Pure-analysis example: no training, no artifacts needed. Regenerates
+//! the storage/compute arithmetic over the exact network descriptors and
+//! the calibrated hardware model, including an ablation sweep over the
+//! model's constants (index width, SRAM split) showing how the break-even
+//! ratio moves.
+//!
+//! Run: `cargo run --release --example onchip_analysis`
+
+use admm_nn::hwmodel::HwConfig;
+use admm_nn::models;
+use admm_nn::report;
+use admm_nn::sparsity::{best_index_bits, LayerSize, SizeReport};
+use admm_nn::util::{fmt_bytes, fmt_ratio};
+
+fn main() {
+    // §4.3 feasibility table
+    println!("{}", report::onchip());
+
+    // Fig. 4 sweep + break-even
+    let hw = HwConfig::default();
+    println!("{}", report::fig4(&hw));
+
+    // Table 9
+    println!("{}", report::table9(&hw));
+
+    // Ablation: how the break-even ratio depends on the co-design knobs.
+    println!("Break-even sensitivity (ablation over hardware constants)");
+    println!("{}", "-".repeat(64));
+    println!("{:<44} {:>8} {:>10}", "configuration", "portion", "ratio");
+    let mut configs: Vec<(String, HwConfig)> =
+        vec![("default (calibrated to paper)".into(), hw)];
+    for bits in [2u32, 4, 8] {
+        let cfg = HwConfig { index_bits: bits, ..hw };
+        configs.push((format!("index bits = {bits}"), cfg));
+    }
+    for frac in [0.55, 0.65, 0.85] {
+        let cfg = HwConfig { weight_sram_frac: frac, ..hw };
+        configs.push((format!("weight SRAM fraction = {frac}"), cfg));
+    }
+    for pen in [0.0, 0.2] {
+        let cfg = HwConfig { freq_penalty: pen, ..hw };
+        configs.push((format!("sparse clock penalty = {pen}"), cfg));
+    }
+    for (name, cfg) in configs {
+        println!(
+            "{:<44} {:>7.1}% {:>10}",
+            name,
+            cfg.break_even_portion() * 100.0,
+            fmt_ratio(cfg.break_even_ratio())
+        );
+    }
+
+    // Storage deep-dive: what makes AlexNet fit on-chip (paper: 2.45MB).
+    println!("\nAlexNet on-chip storage budget (ADMM-NN profile)");
+    println!("{}", "-".repeat(72));
+    let net = models::alexnet();
+    let profile = models::profiles::alexnet_ours_table7();
+    let bits = [5u32, 5, 5, 5, 5, 3, 3, 3]; // Table 6 widths
+    println!(
+        "{:<8} {:>10} {:>7} {:>6} {:>7} {:>12} {:>12}",
+        "layer", "kept", "keep%", "wbits", "ibits", "data", "with index"
+    );
+    let mut layers = Vec::new();
+    for ((l, &a), &b) in net.layers.iter().zip(&profile.keep).zip(&bits) {
+        let ib = best_index_bits(a, b);
+        let ls = LayerSize::estimate(l.weights, a, b, ib);
+        println!(
+            "{:<8} {:>10} {:>6.1}% {:>6} {:>7} {:>12} {:>12}",
+            l.name,
+            ls.kept_weights,
+            a * 100.0,
+            b,
+            ib,
+            fmt_bytes(ls.data_bits() as f64 / 8.0),
+            fmt_bytes(ls.model_bits() as f64 / 8.0)
+        );
+        layers.push(ls);
+    }
+    let report = SizeReport { dense_params: net.total_params(), layers };
+    println!(
+        "total: data {} ({}), with indices {} ({}) — vs dense {}",
+        fmt_bytes(report.data_bytes()),
+        fmt_ratio(report.data_compress_ratio()),
+        fmt_bytes(report.model_bytes()),
+        fmt_ratio(report.model_compress_ratio()),
+        fmt_bytes(report.dense_bytes())
+    );
+}

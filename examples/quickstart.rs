@@ -1,0 +1,77 @@
+//! Quickstart: compress a small MLP with the ADMM-NN joint pipeline.
+//!
+//! Demonstrates the whole public API in ~2 minutes on a laptop CPU:
+//! 1. load the AOT artifacts (`make artifacts` first),
+//! 2. dense-train an MLP on the synthetic digit dataset,
+//! 3. run the joint ADMM prune (10×) + quantize pipeline,
+//! 4. print the accuracy / size summary and save the compressed model.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use admm_nn::coordinator::{pipeline, AdmmConfig, PipelineConfig, TrainConfig, Trainer};
+use admm_nn::data;
+use admm_nn::runtime::{Runtime, TrainState};
+use admm_nn::util::fmt_bytes;
+
+fn main() -> admm_nn::Result<()> {
+    let rt = Runtime::load("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+    let sess = rt.model("mlp")?;
+    let ds = data::for_input_shape(&sess.entry.input_shape);
+
+    // 1. dense pretraining
+    println!("== dense pretraining ==");
+    let mut st = TrainState::init(&sess.entry, 0);
+    let mut trainer = Trainer::new(&sess, ds.as_ref());
+    trainer.run(&mut st, &TrainConfig { steps: 300, verbose: true, ..Default::default() })?;
+    let dense = sess.evaluate(&st, ds.as_ref(), 8)?;
+    println!("dense accuracy: {:.4}", dense.accuracy());
+
+    // 2. joint ADMM compression: 10x pruning, auto bit selection
+    println!("\n== joint ADMM prune (10x) + quantize ==");
+    let n_w = sess.entry.n_weights();
+    let cfg = PipelineConfig {
+        prune_keep: vec![0.1; n_w],
+        admm: AdmmConfig { iters: 3, steps_per_iter: 80, verbose: true, ..Default::default() },
+        retrain_steps: 150,
+        verbose: true,
+        ..Default::default()
+    };
+    let rep = pipeline::run_pipeline(&sess, ds.as_ref(), &mut st, &cfg)?;
+
+    // 3. summary
+    println!("\n== summary ==");
+    println!("{:<12} {:>9} {:>9} {:>7} {:>6}", "layer", "total", "kept", "keep%", "bits");
+    for ((name, total, kept), q) in rep.layer_keep.iter().zip(&rep.quant) {
+        println!(
+            "{:<12} {:>9} {:>9} {:>6.1}% {:>6}",
+            name, total, kept,
+            *kept as f64 / *total as f64 * 100.0,
+            q.bits
+        );
+    }
+    let size = rep.model.size_report(sess.entry.total_weight_count() as u64);
+    println!(
+        "\naccuracy: dense {:.4} -> pruned {:.4} -> stored {:.4}",
+        rep.dense_acc, rep.pruned_acc, rep.final_acc
+    );
+    println!(
+        "size: dense {} -> data {} ({:.0}x) -> with indices {} ({:.0}x)",
+        fmt_bytes(size.dense_bytes()),
+        fmt_bytes(size.data_bytes()),
+        size.data_compress_ratio(),
+        fmt_bytes(size.model_bytes()),
+        size.model_compress_ratio()
+    );
+
+    // 4. persist + reload round trip
+    std::fs::create_dir_all("results")?;
+    rep.model.save("results/quickstart_mlp.admm")?;
+    let loaded = admm_nn::coordinator::CompressedModel::load("results/quickstart_mlp.admm")?;
+    println!(
+        "saved + reloaded compressed model: {} layers, stored accuracy {:.4}",
+        loaded.layers.len(),
+        loaded.accuracy
+    );
+    Ok(())
+}

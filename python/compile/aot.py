@@ -1,0 +1,199 @@
+"""AOT compile path: lower every L2 graph + L1 projection to HLO text.
+
+Python runs exactly once (``make artifacts``); the rust coordinator then
+loads ``artifacts/*.hlo.txt`` through the PJRT C API and never touches
+python again.
+
+Interchange is HLO **text**, not a serialized ``HloModuleProto``: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts per model (shapes static; batch sizes in the manifest):
+  <model>_train.hlo.txt     ADAM+ADMM step     (see model.make_train_step)
+  <model>_eval.hlo.txt      loss + #correct    (eval batch)
+  <model>_infer_b1.hlo.txt  logits, batch 1
+  <model>_infer_b64.hlo.txt logits, batch 64
+Artifacts per distinct flat weight-tensor size n:
+  proj_prune_<n>.hlo.txt    (v[n], k)          -> Π_cardinality(v)
+  proj_quant_<n>.hlo.txt    (v[n], q, halfM)   -> Π_levels(v)
+  quant_err_<n>.hlo.txt     (v[n], q, halfM)   -> Σ err²
+plus ``manifest.json`` — the single source of truth the rust side parses:
+model topology, parameter order, argument layout, artifact file names.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import prune_project, quant_error, quant_project
+
+TRAIN_BATCH = 64
+EVAL_BATCH = 256
+INFER_BATCHES = (1, 64)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple, even for single outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape=()):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(shape=()):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _write(out_dir: str, name: str, text: str) -> str:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    return name
+
+
+def lower_model(spec: M.ModelSpec, out_dir: str) -> dict:
+    """Lower train/eval/infer for one model; return its manifest entry."""
+    pshapes = [f32(p.shape) for p in spec.params]
+    wshapes = [f32(p.shape) for p in spec.weight_specs]
+    P, W = len(pshapes), len(wshapes)
+
+    def xspec(b):
+        return f32((b,) + tuple(spec.input_shape))
+
+    entry = {
+        "input_shape": list(spec.input_shape),
+        "n_classes": spec.n_classes,
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "params": [
+            {
+                "name": p.name, "shape": list(p.shape), "kind": p.kind,
+                "layer": p.layer, "layer_type": p.layer_type,
+                "fan_in": p.fan_in, "fan_out": p.fan_out, "macs": p.macs,
+            }
+            for p in spec.params
+        ],
+        # Argument layout of the train artifact, in order:
+        "train_args": (
+            ["param"] * P + ["adam_m"] * P + ["adam_v"] * P + ["step"]
+            + ["mask"] * W + ["z"] * W + ["u"] * W + ["rho"] * W
+            + ["lr", "l1_lambda", "x", "y"]
+        ),
+        "artifacts": {},
+    }
+
+    t0 = time.time()
+    train_args = (
+        pshapes + pshapes + pshapes + [f32()]
+        + wshapes + wshapes + wshapes + [f32()] * W
+        + [f32(), f32(), xspec(TRAIN_BATCH), i32((TRAIN_BATCH,))]
+    )
+    lowered = jax.jit(M.make_train_step(spec)).lower(*train_args)
+    entry["artifacts"]["train"] = _write(
+        out_dir, f"{spec.name}_train.hlo.txt", to_hlo_text(lowered))
+
+    eval_args = pshapes + wshapes + [xspec(EVAL_BATCH), i32((EVAL_BATCH,))]
+    lowered = jax.jit(M.make_eval_step(spec)).lower(*eval_args)
+    entry["artifacts"]["eval"] = _write(
+        out_dir, f"{spec.name}_eval.hlo.txt", to_hlo_text(lowered))
+
+    for b in INFER_BATCHES:
+        infer_args = pshapes + wshapes + [xspec(b)]
+        lowered = jax.jit(M.make_infer(spec)).lower(*infer_args)
+        entry["artifacts"][f"infer_b{b}"] = _write(
+            out_dir, f"{spec.name}_infer_b{b}.hlo.txt", to_hlo_text(lowered))
+
+    print(f"  {spec.name}: {P} params, lowered in {time.time() - t0:.1f}s",
+          file=sys.stderr)
+    return entry
+
+
+def lower_projections(sizes, out_dir: str) -> dict:
+    """Per-size projection artifacts shared by all models."""
+    out = {}
+    for n in sorted(sizes):
+        t0 = time.time()
+        prune = jax.jit(lambda v, k: (prune_project(v, k),))
+        quant = jax.jit(lambda v, q, hm: (quant_project(v, q, hm),))
+        qerr = jax.jit(lambda v, q, hm: (quant_error(v, q, hm),))
+        out[str(n)] = {
+            "prune": _write(out_dir, f"proj_prune_{n}.hlo.txt",
+                            to_hlo_text(prune.lower(f32((n,)), f32()))),
+            "quant": _write(out_dir, f"proj_quant_{n}.hlo.txt",
+                            to_hlo_text(quant.lower(f32((n,)), f32(), f32()))),
+            "qerr": _write(out_dir, f"quant_err_{n}.hlo.txt",
+                           to_hlo_text(qerr.lower(f32((n,)), f32(), f32()))),
+        }
+        print(f"  proj[{n}]: lowered in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+    return out
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources, stored in the manifest so
+    ``make artifacts`` can skip a rebuild when nothing changed."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in os.walk(base):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--models", default=",".join(M.MODELS),
+                    help="comma-separated subset of models to lower")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    names = [n for n in args.models.split(",") if n]
+    manifest = {
+        "fingerprint": source_fingerprint(),
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "infer_batches": list(INFER_BATCHES),
+        "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS},
+        "models": {},
+    }
+
+    sizes = set()
+    for name in names:
+        spec = M.get_model(name)
+        print(f"lowering {name} ...", file=sys.stderr)
+        manifest["models"][name] = lower_model(spec, args.out)
+        sizes |= {int(jnp.prod(jnp.array(w.shape)))
+                  for w in spec.weight_specs}
+
+    print("lowering projection artifacts ...", file=sys.stderr)
+    manifest["projections"] = lower_projections(sizes, args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out}/manifest.json "
+          f"({len(manifest['models'])} models, {len(sizes)} proj sizes)",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

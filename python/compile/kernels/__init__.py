@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for ADMM-NN's compute hot-spots.
+
+All kernels are interpret-mode (CPU PJRT cannot execute Mosaic custom-calls)
+but tiled TPU-style; see common.py.  ``ref`` holds the pure-jnp oracles the
+pytest suite validates against.
+"""
+
+from . import ref  # noqa: F401
+from .admm_penalty import admm_penalty  # noqa: F401
+from .masked_gemm import masked_dense, masked_gemm  # noqa: F401
+from .prune_project import prune_project, threshold_mask  # noqa: F401
+from .quant_project import quant_error, quant_project  # noqa: F401

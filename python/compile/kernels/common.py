@@ -1,0 +1,37 @@
+"""Shared helpers for the Pallas kernels (L1).
+
+All kernels run with ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls that the CPU PJRT plugin cannot execute.  The kernels are still
+*written* TPU-style — 1-D element-wise kernels are tiled into VMEM-sized
+blocks, GEMM kernels into MXU-shaped (128, 128) tiles — so the BlockSpec
+structure documents the HBM<->VMEM schedule a real TPU build would use.
+DESIGN.md §7 estimates VMEM footprint / MXU utilization from these shapes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Element-wise kernels stream f32 blocks of this many elements through VMEM.
+# 8192 elements * 4 B = 32 KiB per operand block; the widest kernel
+# (admm_penalty) touches 4 operands + 1 output = 160 KiB, comfortably inside
+# the ~16 MiB VMEM budget and large enough to amortize grid overhead.
+ELEM_BLOCK = 8192
+
+# MXU systolic-array tile for the masked GEMM kernels.
+MXU_TILE = 128
+
+
+def pad_to_multiple(x: jnp.ndarray, multiple: int, axis: int = 0) -> jnp.ndarray:
+    """Zero-pad ``x`` along ``axis`` up to the next multiple of ``multiple``."""
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)

@@ -1,0 +1,108 @@
+"""Pallas kernel: sparsity-masked GEMM with a custom VJP.
+
+y = x @ (w ⊙ m) is the compute shape of a pruned fully-connected layer: the
+mask is the hard sparsity pattern fixed after ADMM pruning, and masked
+retraining (the "restore accuracy with the pattern frozen" phase) needs both
+the forward product and the masked gradients
+
+    dx = g @ (w ⊙ m)ᵀ          dw = (xᵀ @ g) ⊙ m .
+
+All three products run as MXU-tiled Pallas kernels (128×128 blocks with a
+K-reduction grid axis), so forward and backward stay on the same code path a
+TPU build would use.  ``pallas_call`` has no autodiff rule, hence the
+explicit ``jax.custom_vjp``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import MXU_TILE, ceil_div, pad_to_multiple
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """Tiled matmul with K as the innermost grid axis (accumulate in o)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def _mm_masked_kernel(a_ref, b_ref, m_ref, o_ref):
+    """Same, with the RHS masked tile-by-tile inside VMEM."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...] * m_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def _tiled_matmul(a: jnp.ndarray, b: jnp.ndarray,
+                  mask: jnp.ndarray | None = None,
+                  tile: int = MXU_TILE) -> jnp.ndarray:
+    """(M,K) @ (K,N) with optional (K,N) mask on b, MXU-tiled via Pallas."""
+    mm, kk = a.shape
+    _, nn = b.shape
+    ap = pad_to_multiple(pad_to_multiple(a, tile, 0), tile, 1)
+    bp = pad_to_multiple(pad_to_multiple(b, tile, 0), tile, 1)
+    grid = (ceil_div(mm, tile), ceil_div(nn, tile), ceil_div(kk, tile))
+    a_spec = pl.BlockSpec((tile, tile), lambda i, j, k: (i, k))
+    b_spec = pl.BlockSpec((tile, tile), lambda i, j, k: (k, j))
+    o_spec = pl.BlockSpec((tile, tile), lambda i, j, k: (i, j))
+    if mask is None:
+        out = pl.pallas_call(
+            _mm_kernel,
+            grid=grid,
+            in_specs=[a_spec, b_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]),
+                                           jnp.float32),
+            interpret=True,
+        )(ap, bp)
+    else:
+        mp = pad_to_multiple(pad_to_multiple(mask, tile, 0), tile, 1)
+        out = pl.pallas_call(
+            _mm_masked_kernel,
+            grid=grid,
+            in_specs=[a_spec, b_spec, b_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]),
+                                           jnp.float32),
+            interpret=True,
+        )(ap, bp, mp)
+    return out[:mm, :nn]
+
+
+@jax.custom_vjp
+def masked_gemm(x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray):
+    """y = x @ (w ⊙ mask);  x: (B,K), w/mask: (K,N) → (B,N)."""
+    return _tiled_matmul(x, w, mask)
+
+
+def _fwd(x, w, mask):
+    return masked_gemm(x, w, mask), (x, w, mask)
+
+
+def _bwd(res, g):
+    x, w, mask = res
+    # dx = g @ (w ⊙ m)ᵀ — computed as another masked product, transposed.
+    dx = _tiled_matmul(g, (w * mask).T)
+    # dw = (xᵀ @ g) ⊙ m — gradients never leak into pruned positions.
+    dw = _tiled_matmul(x.T, g) * mask
+    return dx, dw, None
+
+
+masked_gemm.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def masked_dense(x, w, b, mask):
+    """Masked fully-connected layer: masked_gemm + bias."""
+    return masked_gemm(x, w, mask) + b

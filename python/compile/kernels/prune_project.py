@@ -1,0 +1,56 @@
+"""Pallas kernel: Euclidean projection onto the cardinality constraint set.
+
+ADMM-NN §3.3: the optimal projection of V onto S = {||x||_0 <= k} keeps the
+k largest-magnitude entries and zeroes the rest.  The threshold (magnitude of
+the k-th largest entry) is a global order statistic, computed once with a
+sort in the surrounding jnp graph; the element-wise thresholding — the O(n)
+hot part that touches every weight — is the Pallas kernel, streamed through
+VMEM in ``ELEM_BLOCK``-sized tiles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .common import ELEM_BLOCK, ceil_div, pad_to_multiple
+
+
+def _threshold_kernel(v_ref, t_ref, o_ref):
+    """o = v * (|v| >= t); t broadcast from a (1,)-shaped scalar block."""
+    v = v_ref[...]
+    t = t_ref[0]
+    o_ref[...] = jnp.where(jnp.abs(v) >= t, v, 0.0)
+
+
+def threshold_mask(v: jnp.ndarray, thresh: jnp.ndarray,
+                   block: int = ELEM_BLOCK) -> jnp.ndarray:
+    """Apply magnitude-threshold masking to a flat f32 vector via Pallas."""
+    n = v.shape[0]
+    vp = pad_to_multiple(v, block)
+    grid = (ceil_div(n, block),)
+    out = pl.pallas_call(
+        _threshold_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),  # scalar threshold, replicated
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(vp.shape, vp.dtype),
+        interpret=True,
+    )(vp, thresh.reshape(1))
+    return out[:n]
+
+
+def prune_project(v: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Π_S(v): keep the k largest-|v| entries of a flat vector.
+
+    ``k`` is a runtime float scalar so the AOT artifact serves any target
+    sparsity.  The threshold comes from the jnp sort (ref.prune_threshold);
+    the masking pass is the Pallas kernel.
+    """
+    t = ref.prune_threshold(v, k)
+    return threshold_mask(v, t)

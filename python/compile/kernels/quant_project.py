@@ -1,0 +1,79 @@
+"""Pallas kernels: equal-interval quantization projection and its error.
+
+ADMM-NN §3.4.2 / Fig. 3: levels are {±q, ±2q, ..., ±(M/2) q}.  Zero is NOT a
+level — a zero weight encodes "pruned", so the projection preserves zeros.
+Both the projection (used by ADMM subproblem 2 and final hard quantization)
+and the total-squared-error reduction (the objective of the binary search
+that picks q_i per layer) are element-wise streams over the weight vector,
+tiled into VMEM-sized blocks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import ELEM_BLOCK, ceil_div, pad_to_multiple
+
+
+def _quant_kernel(v_ref, q_ref, m_ref, o_ref):
+    v = v_ref[...]
+    q = q_ref[0]
+    half_m = m_ref[0]
+    level = jnp.clip(jnp.round(jnp.abs(v) / q), 1.0, half_m)
+    snapped = jnp.sign(v) * level * q
+    o_ref[...] = jnp.where(v == 0.0, 0.0, snapped)
+
+
+def quant_project(v: jnp.ndarray, q: jnp.ndarray, half_m: jnp.ndarray,
+                  block: int = ELEM_BLOCK) -> jnp.ndarray:
+    """Snap nonzero entries of flat f32 ``v`` to the nearest ±j·q level."""
+    n = v.shape[0]
+    vp = pad_to_multiple(v, block)
+    grid = (ceil_div(n, block),)
+    out = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(vp.shape, vp.dtype),
+        interpret=True,
+    )(vp, q.reshape(1), half_m.reshape(1))
+    return out[:n]
+
+
+def _quant_err_kernel(v_ref, q_ref, m_ref, o_ref):
+    """Per-block partial sum of squared quantization error (nonzeros only)."""
+    v = v_ref[...]
+    q = q_ref[0]
+    half_m = m_ref[0]
+    level = jnp.clip(jnp.round(jnp.abs(v) / q), 1.0, half_m)
+    snapped = jnp.sign(v) * level * q
+    err = jnp.where(v == 0.0, 0.0, v - snapped)
+    o_ref[0] = jnp.sum(err * err)
+
+
+def quant_error(v: jnp.ndarray, q: jnp.ndarray, half_m: jnp.ndarray,
+                block: int = ELEM_BLOCK) -> jnp.ndarray:
+    """Σ (v − Π_q(v))² over nonzero entries: block partials, then jnp.sum."""
+    n = v.shape[0]
+    vp = pad_to_multiple(v, block)
+    nblocks = ceil_div(n, block)
+    partials = pl.pallas_call(
+        _quant_err_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+        interpret=True,
+    )(vp, q.reshape(1), half_m.reshape(1))
+    return jnp.sum(partials)

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the pytest suite checks the kernels against, and
+they double as readable statements of the paper's math:
+
+* ``prune_project``  — Euclidean projection onto the cardinality set
+  S = { ||W||_0 <= k }: keep the k largest-magnitude entries (ADMM-NN §3.3).
+* ``quant_project``  — Euclidean projection onto the equal-interval level set
+  {±q, ±2q, ..., ±(M/2) q} (0 excluded: a zero weight means *pruned*, §3.4.2,
+  Fig. 3).  Already-zero entries stay zero.
+* ``quant_error``    — Σ_j |w_j − f(w_j)|² for a candidate interval q, the
+  objective of the binary search that picks q_i per layer (§3.4.2).
+* ``admm_penalty``   — value and gradient of the augmented-Lagrangian term
+  ρ/2 ||W − Z + U||_F² added to the loss in subproblem 1 (Eqn. 5).
+* ``masked_gemm``    — X @ (W ⊙ M): the dense-compute shape of a
+  sparsity-masked layer, used for masked retraining and pruned inference.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# pruning projection
+# --------------------------------------------------------------------------
+
+def prune_threshold(v: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Magnitude threshold below which entries are pruned to keep ~k entries.
+
+    ``k`` is a float scalar so it can be a runtime input of an AOT artifact.
+    k <= 0 prunes everything; k >= v.size keeps everything.
+    """
+    flat = jnp.abs(v.reshape(-1))
+    n = flat.shape[0]
+    descending = jnp.sort(flat)[::-1]
+    kk = jnp.clip(jnp.round(k).astype(jnp.int32), 0, n)
+    # threshold = magnitude of the k-th largest entry (1-indexed); +inf if k=0
+    idx = jnp.clip(kk - 1, 0, n - 1)
+    thresh = descending[idx]
+    return jnp.where(kk <= 0, jnp.float32(jnp.inf), thresh)
+
+
+def prune_project(v: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Π_S(v) for S = {||x||_0 <= k}: zero all but the k largest |v|."""
+    t = prune_threshold(v, k)
+    return jnp.where(jnp.abs(v) >= t, v, 0.0).astype(v.dtype)
+
+
+# --------------------------------------------------------------------------
+# quantization projection
+# --------------------------------------------------------------------------
+
+def quant_project(v: jnp.ndarray, q: jnp.ndarray, half_m: jnp.ndarray) -> jnp.ndarray:
+    """Snap each nonzero entry of v to the nearest level in {±q..±(M/2)q}.
+
+    ``half_m`` = M/2 = number of positive levels.  Zero entries (pruned
+    weights) are preserved as zero — 0 is *not* a quantization level.
+    """
+    mag = jnp.abs(v)
+    level = jnp.clip(jnp.round(mag / q), 1.0, half_m)
+    snapped = jnp.sign(v) * level * q
+    return jnp.where(v == 0.0, 0.0, snapped).astype(v.dtype)
+
+
+def quant_error(v: jnp.ndarray, q: jnp.ndarray, half_m: jnp.ndarray) -> jnp.ndarray:
+    """Total squared quantization error over the nonzero entries of v."""
+    err = v - quant_project(v, q, half_m)
+    err = jnp.where(v == 0.0, 0.0, err)
+    return jnp.sum(err.astype(jnp.float32) ** 2)
+
+
+# --------------------------------------------------------------------------
+# ADMM penalty (subproblem-1 regularizer)
+# --------------------------------------------------------------------------
+
+def admm_penalty_value(w, z, u, rho) -> jnp.ndarray:
+    """ρ/2 ||W − Z + U||_F² (Eqn. 5, second term)."""
+    d = (w - z + u).astype(jnp.float32)
+    return 0.5 * rho * jnp.sum(d * d)
+
+
+def admm_penalty_grad(w, z, u, rho) -> jnp.ndarray:
+    """∇_W of the penalty: ρ (W − Z + U)."""
+    return (rho * (w - z + u)).astype(w.dtype)
+
+
+# --------------------------------------------------------------------------
+# masked GEMM
+# --------------------------------------------------------------------------
+
+def masked_gemm(x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ (w * mask);  x: (B, K), w/mask: (K, N) -> (B, N)."""
+    return jnp.matmul(x, w * mask)

@@ -1,0 +1,419 @@
+"""L2: JAX model zoo + ADMM training graphs (build-time only).
+
+Defines every trainable network in the repo and the three graphs that get
+AOT-lowered per model by ``aot.py``:
+
+* ``train_step``  — one ADAM step on  f(W,b) + Σ_i ρ_i/2 ‖W_i − Z_i + U_i‖²
+                    (+ λ‖W‖₁ for the Wen-style baseline), with hard sparsity
+                    masks folded into forward and gradients.  ρ = 0, λ = 0
+                    degrades to plain training, so a single artifact serves
+                    dense pretraining, ADMM subproblem 1, masked retraining,
+                    and both regularization baselines.
+* ``eval_step``   — mean loss + #correct over a batch.
+* ``infer``       — logits (batch-1 latency and batch-64 throughput shapes).
+
+Dense (FC) layers run through the Pallas ``masked_gemm`` kernel (custom VJP,
+MXU-tiled); the ADMM penalty value/gradient run through the fused Pallas
+``admm_penalty`` kernel; conv layers use ``lax.conv_general_dilated`` with
+the mask multiplied into the filter (XLA fuses the elementwise mask into the
+convolution's operand).
+
+Models:
+  mlp           — LeNet-300-100-style MLP (quickstart-scale)
+  lenet5        — the exact Caffe LeNet-5 (430.5K params) from Table 1
+  alexnet_proxy — 5-conv + 3-FC net with AlexNet's FC-heavy param split
+  vgg_proxy     — VGG-style 3×3 conv stacks + 2 FC
+  resnet_proxy  — ResNet-style residual net, GAP head (conv-dominated)
+
+The ImageNet-scale originals are represented by exact *descriptors* on the
+rust side for all size/MAC arithmetic; these proxies carry the trainable
+accuracy experiments (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.admm_penalty import admm_penalty
+from .kernels.masked_gemm import masked_gemm
+
+
+# --------------------------------------------------------------------------
+# parameter bookkeeping
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One parameter tensor of a model, in canonical (manifest) order."""
+    name: str          # e.g. "conv1.w"
+    shape: tuple       # conv: (kh, kw, cin, cout); dense: (din, dout)
+    kind: str          # "weight" | "bias"
+    layer: str         # layer name, e.g. "conv1"
+    layer_type: str    # "conv" | "dense"
+    fan_in: int
+    fan_out: int
+    macs: int          # MACs this tensor's layer contributes per sample
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    input_shape: tuple             # (H, W, C) or (D,) for the MLP
+    n_classes: int
+    params: tuple                  # tuple[ParamSpec]
+    forward: Callable              # (params: dict, masks: dict, x) -> logits
+
+    @property
+    def weight_specs(self):
+        return tuple(p for p in self.params if p.kind == "weight")
+
+    def init_params(self, seed: int = 0) -> dict:
+        """He-normal weights, zero biases (python-test convenience; rust
+        re-implements the same init from the manifest's fan_in)."""
+        rng = jax.random.PRNGKey(seed)
+        out = {}
+        for p in self.params:
+            rng, sub = jax.random.split(rng)
+            if p.kind == "bias":
+                out[p.name] = jnp.zeros(p.shape, jnp.float32)
+            else:
+                std = jnp.sqrt(2.0 / p.fan_in)
+                out[p.name] = std * jax.random.normal(sub, p.shape, jnp.float32)
+        return out
+
+    def ones_masks(self) -> dict:
+        return {p.name: jnp.ones(p.shape, jnp.float32)
+                for p in self.weight_specs}
+
+
+def _conv(x, w, stride=1, padding="SAME"):
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _maxpool2(x):
+    return lax.reduce_window(x, -jnp.inf, lax.max,
+                             (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def _masked(params, masks, name):
+    w = params[name]
+    m = masks.get(name)
+    return w if m is None else w * m
+
+
+# --------------------------------------------------------------------------
+# model builders
+# --------------------------------------------------------------------------
+
+def _conv_spec(layer, kh, kw, cin, cout, out_hw):
+    """ParamSpecs for a conv layer; MACs = kh*kw*cin*cout*outH*outW."""
+    macs = kh * kw * cin * cout * out_hw * out_hw
+    fan_in = kh * kw * cin
+    return [
+        ParamSpec(f"{layer}.w", (kh, kw, cin, cout), "weight", layer, "conv",
+                  fan_in, cout, macs),
+        ParamSpec(f"{layer}.b", (cout,), "bias", layer, "conv",
+                  fan_in, cout, 0),
+    ]
+
+
+def _dense_spec(layer, din, dout):
+    return [
+        ParamSpec(f"{layer}.w", (din, dout), "weight", layer, "dense",
+                  din, dout, din * dout),
+        ParamSpec(f"{layer}.b", (dout,), "bias", layer, "dense",
+                  din, dout, 0),
+    ]
+
+
+def build_mlp() -> ModelSpec:
+    """LeNet-300-100-shaped MLP over 784-dim inputs."""
+    specs = (_dense_spec("fc1", 784, 300) + _dense_spec("fc2", 300, 100)
+             + _dense_spec("fc3", 100, 10))
+
+    def forward(params, masks, x):
+        h = x.reshape(x.shape[0], -1)
+        h = jax.nn.relu(masked_gemm(h, params["fc1.w"],
+                                    masks["fc1.w"]) + params["fc1.b"])
+        h = jax.nn.relu(masked_gemm(h, params["fc2.w"],
+                                    masks["fc2.w"]) + params["fc2.b"])
+        return masked_gemm(h, params["fc3.w"], masks["fc3.w"]) + params["fc3.b"]
+
+    return ModelSpec("mlp", (784,), 10, tuple(specs), forward)
+
+
+def build_lenet5() -> ModelSpec:
+    """The exact Caffe LeNet-5 of Table 1: 20/50 conv filters, 500-d FC —
+    430.5K params total, 99.2% on MNIST in the paper."""
+    specs = (
+        _conv_spec("conv1", 5, 5, 1, 20, 24)       # 28→24 (VALID), pool→12
+        + _conv_spec("conv2", 5, 5, 20, 50, 8)     # 12→8  (VALID), pool→4
+        + _dense_spec("fc1", 4 * 4 * 50, 500)
+        + _dense_spec("fc2", 500, 10)
+    )
+
+    def forward(params, masks, x):
+        h = _conv(x, _masked(params, masks, "conv1.w"),
+                  padding="VALID") + params["conv1.b"]
+        h = _maxpool2(jax.nn.relu(h))
+        h = _conv(h, _masked(params, masks, "conv2.w"),
+                  padding="VALID") + params["conv2.b"]
+        h = _maxpool2(jax.nn.relu(h))
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(masked_gemm(h, params["fc1.w"],
+                                    masks["fc1.w"]) + params["fc1.b"])
+        return masked_gemm(h, params["fc2.w"], masks["fc2.w"]) + params["fc2.b"]
+
+    return ModelSpec("lenet5", (28, 28, 1), 10, tuple(specs), forward)
+
+
+def build_alexnet_proxy() -> ModelSpec:
+    """5 conv + 3 FC on 32×32×3, preserving AlexNet's structure: conv1 is
+    large-kernel and prune-resistant, FC layers hold ~78% of the weights."""
+    specs = (
+        _conv_spec("conv1", 5, 5, 3, 24, 32)       # 32×32, pool→16
+        + _conv_spec("conv2", 3, 3, 24, 48, 16)    # pool→8
+        + _conv_spec("conv3", 3, 3, 48, 64, 8)
+        + _conv_spec("conv4", 3, 3, 64, 64, 8)
+        + _conv_spec("conv5", 3, 3, 64, 48, 8)     # pool→4
+        + _dense_spec("fc1", 4 * 4 * 48, 384)
+        + _dense_spec("fc2", 384, 192)
+        + _dense_spec("fc3", 192, 10)
+    )
+
+    def forward(params, masks, x):
+        h = jax.nn.relu(_conv(x, _masked(params, masks, "conv1.w"))
+                        + params["conv1.b"])
+        h = _maxpool2(h)
+        h = jax.nn.relu(_conv(h, _masked(params, masks, "conv2.w"))
+                        + params["conv2.b"])
+        h = _maxpool2(h)
+        h = jax.nn.relu(_conv(h, _masked(params, masks, "conv3.w"))
+                        + params["conv3.b"])
+        h = jax.nn.relu(_conv(h, _masked(params, masks, "conv4.w"))
+                        + params["conv4.b"])
+        h = jax.nn.relu(_conv(h, _masked(params, masks, "conv5.w"))
+                        + params["conv5.b"])
+        h = _maxpool2(h)
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(masked_gemm(h, params["fc1.w"],
+                                    masks["fc1.w"]) + params["fc1.b"])
+        h = jax.nn.relu(masked_gemm(h, params["fc2.w"],
+                                    masks["fc2.w"]) + params["fc2.b"])
+        return masked_gemm(h, params["fc3.w"], masks["fc3.w"]) + params["fc3.b"]
+
+    return ModelSpec("alexnet_proxy", (32, 32, 3), 10, tuple(specs), forward)
+
+
+def build_vgg_proxy() -> ModelSpec:
+    """VGG-style 3×3 stacks (conv-heavy compute, 2-FC head)."""
+    specs = (
+        _conv_spec("conv1_1", 3, 3, 3, 32, 32)
+        + _conv_spec("conv1_2", 3, 3, 32, 32, 32)   # pool→16
+        + _conv_spec("conv2_1", 3, 3, 32, 64, 16)
+        + _conv_spec("conv2_2", 3, 3, 64, 64, 16)   # pool→8
+        + _conv_spec("conv3_1", 3, 3, 64, 128, 8)
+        + _conv_spec("conv3_2", 3, 3, 128, 128, 8)  # pool→4
+        + _dense_spec("fc1", 4 * 4 * 128, 256)
+        + _dense_spec("fc2", 256, 10)
+    )
+
+    def forward(params, masks, x):
+        h = x
+        for blk in ("conv1", "conv2", "conv3"):
+            for sub in ("_1", "_2"):
+                name = blk + sub
+                h = jax.nn.relu(_conv(h, _masked(params, masks, f"{name}.w"))
+                                + params[f"{name}.b"])
+            h = _maxpool2(h)
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(masked_gemm(h, params["fc1.w"],
+                                    masks["fc1.w"]) + params["fc1.b"])
+        return masked_gemm(h, params["fc2.w"], masks["fc2.w"]) + params["fc2.b"]
+
+    return ModelSpec("vgg_proxy", (32, 32, 3), 10, tuple(specs), forward)
+
+
+def build_resnet_proxy() -> ModelSpec:
+    """ResNet-style: stem + 3 stages × 2 residual blocks + GAP head.
+
+    Conv-dominated (the FC head is 650 params), mirroring why ResNet-50's
+    compression story is about CONV layers."""
+    specs = list(_conv_spec("stem", 3, 3, 3, 16, 32))
+    stages = [("s1", 16, 16, 32, 1), ("s2", 16, 32, 16, 2),
+              ("s3", 32, 64, 8, 2)]
+    for sname, cin, cout, hw, stride in stages:
+        for b in (1, 2):
+            bin_ = cin if b == 1 else cout
+            specs += _conv_spec(f"{sname}b{b}a", 3, 3, bin_, cout, hw)
+            specs += _conv_spec(f"{sname}b{b}b", 3, 3, cout, cout, hw)
+            if bin_ != cout:
+                specs += _conv_spec(f"{sname}b{b}sc", 1, 1, bin_, cout, hw)
+    specs += _dense_spec("fc", 64, 10)
+
+    def forward(params, masks, x):
+        h = jax.nn.relu(_conv(x, _masked(params, masks, "stem.w"))
+                        + params["stem.b"])
+        for sname, cin, cout, hw, stride in stages:
+            for b in (1, 2):
+                bin_ = cin if b == 1 else cout
+                bst = stride if b == 1 else 1
+                ident = h
+                y = jax.nn.relu(
+                    _conv(h, _masked(params, masks, f"{sname}b{b}a.w"),
+                          stride=bst) + params[f"{sname}b{b}a.b"])
+                y = _conv(y, _masked(params, masks, f"{sname}b{b}b.w")) \
+                    + params[f"{sname}b{b}b.b"]
+                if bin_ != cout:
+                    ident = _conv(ident,
+                                  _masked(params, masks, f"{sname}b{b}sc.w"),
+                                  stride=bst) + params[f"{sname}b{b}sc.b"]
+                h = jax.nn.relu(y + ident)
+        h = jnp.mean(h, axis=(1, 2))  # global average pool
+        return masked_gemm(h, params["fc.w"], masks["fc.w"]) + params["fc.b"]
+
+    return ModelSpec("resnet_proxy", (32, 32, 3), 10, tuple(specs), forward)
+
+
+MODELS = {
+    "mlp": build_mlp,
+    "lenet5": build_lenet5,
+    "alexnet_proxy": build_alexnet_proxy,
+    "vgg_proxy": build_vgg_proxy,
+    "resnet_proxy": build_resnet_proxy,
+}
+
+
+def get_model(name: str) -> ModelSpec:
+    return MODELS[name]()
+
+
+# --------------------------------------------------------------------------
+# loss / metrics
+# --------------------------------------------------------------------------
+
+def cross_entropy(logits, labels):
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def num_correct(logits, labels):
+    return jnp.sum((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# the three AOT graphs
+# --------------------------------------------------------------------------
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def make_train_step(spec: ModelSpec):
+    """Flat-argument ADAM + ADMM training step (the artifact entry point).
+
+    Argument order (all f32 except y: i32; recorded in the manifest):
+      params[P], m[P], v[P], step, masks[W], zs[W], us[W], rhos[W],
+      lr, l1_lambda, x, y
+    Returns: params'[P], m'[P], v'[P], loss, acc.
+    """
+    pspecs = spec.params
+    wspecs = spec.weight_specs
+    P, W = len(pspecs), len(wspecs)
+
+    def train_step(*args):
+        params = {p.name: a for p, a in zip(pspecs, args[:P])}
+        m = {p.name: a for p, a in zip(pspecs, args[P:2 * P])}
+        v = {p.name: a for p, a in zip(pspecs, args[2 * P:3 * P])}
+        step = args[3 * P]
+        off = 3 * P + 1
+        masks = {w.name: a for w, a in zip(wspecs, args[off:off + W])}
+        zs = {w.name: a for w, a in zip(wspecs, args[off + W:off + 2 * W])}
+        us = {w.name: a for w, a in zip(wspecs, args[off + 2 * W:off + 3 * W])}
+        rhos = {w.name: a for w, a in
+                zip(wspecs, args[off + 3 * W:off + 4 * W])}
+        lr = args[off + 4 * W]
+        l1_lambda = args[off + 4 * W + 1]
+        x = args[off + 4 * W + 2]
+        y = args[off + 4 * W + 3]
+
+        def data_loss(params):
+            logits = spec.forward(params, masks, x)
+            return cross_entropy(logits, y), logits
+
+        (loss, logits), grads = jax.value_and_grad(
+            data_loss, has_aux=True)(params)
+        acc = num_correct(logits, y) / x.shape[0]
+
+        # ADMM penalty: fused Pallas kernel gives grad and value per weight.
+        penalty_total = jnp.float32(0.0)
+        for w in wspecs:
+            gw, pv = admm_penalty(
+                params[w.name].reshape(-1), zs[w.name].reshape(-1),
+                us[w.name].reshape(-1), rhos[w.name])
+            penalty_total = penalty_total + pv
+            g = grads[w.name] + gw.reshape(w.shape)
+            # L1 subgradient for the Wen-style regularization baseline.
+            g = g + l1_lambda * jnp.sign(params[w.name])
+            # Hard masks freeze pruned positions during masked retraining.
+            grads[w.name] = g * masks[w.name]
+        loss = loss + penalty_total
+
+        # ADAM with bias correction; `step` is 1-based.
+        t = step
+        new_p, new_m, new_v = [], [], []
+        for p in pspecs:
+            g = grads[p.name]
+            mi = ADAM_B1 * m[p.name] + (1 - ADAM_B1) * g
+            vi = ADAM_B2 * v[p.name] + (1 - ADAM_B2) * g * g
+            mhat = mi / (1 - ADAM_B1 ** t)
+            vhat = vi / (1 - ADAM_B2 ** t)
+            upd = lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+            pn = params[p.name] - upd
+            if p.kind == "weight":
+                pn = pn * masks[p.name]  # keep pruned positions at exactly 0
+            new_p.append(pn)
+            new_m.append(mi)
+            new_v.append(vi)
+
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss, acc)
+
+    return train_step
+
+
+def make_eval_step(spec: ModelSpec):
+    """(params[P], masks[W], x, y) -> (mean loss, #correct)."""
+    pspecs, wspecs = spec.params, spec.weight_specs
+    P, W = len(pspecs), len(wspecs)
+
+    def eval_step(*args):
+        params = {p.name: a for p, a in zip(pspecs, args[:P])}
+        masks = {w.name: a for w, a in zip(wspecs, args[P:P + W])}
+        x, y = args[P + W], args[P + W + 1]
+        logits = spec.forward(params, masks, x)
+        return cross_entropy(logits, y), num_correct(logits, y)
+
+    return eval_step
+
+
+def make_infer(spec: ModelSpec):
+    """(params[P], masks[W], x) -> logits."""
+    pspecs, wspecs = spec.params, spec.weight_specs
+    P, W = len(pspecs), len(wspecs)
+
+    def infer(*args):
+        params = {p.name: a for p, a in zip(pspecs, args[:P])}
+        masks = {w.name: a for w, a in zip(wspecs, args[P:P + W])}
+        return spec.forward(params, masks, args[P + W])
+
+    return infer

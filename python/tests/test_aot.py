@@ -1,0 +1,94 @@
+"""AOT pipeline tests: manifests are consistent, HLO text parses, argument
+layouts match what the rust runtime will feed."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_hlo_text_roundtrip_small():
+    """Lower a trivial fn and confirm the text contains an ENTRY module."""
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "f32[4]" in text
+
+
+def test_manifest_models_cover_registry():
+    man = manifest()
+    for name in M.MODELS:
+        assert name in man["models"], name
+
+
+def test_manifest_param_shapes_match_specs():
+    man = manifest()
+    for name, entry in man["models"].items():
+        spec = M.get_model(name)
+        assert len(entry["params"]) == len(spec.params)
+        for pj, ps in zip(entry["params"], spec.params):
+            assert pj["name"] == ps.name
+            assert tuple(pj["shape"]) == tuple(ps.shape)
+            assert pj["kind"] == ps.kind
+
+
+def test_manifest_train_arg_layout():
+    """train_args layout must be params,m,v,step,masks,zs,us,rhos,lr,l1,x,y."""
+    man = manifest()
+    for name, entry in man["models"].items():
+        spec = M.get_model(name)
+        P, W = len(spec.params), len(spec.weight_specs)
+        ta = entry["train_args"]
+        assert len(ta) == 3 * P + 1 + 4 * W + 4
+        assert ta[:P] == ["param"] * P
+        assert ta[3 * P] == "step"
+        assert ta[-4:] == ["lr", "l1_lambda", "x", "y"]
+
+
+def test_artifact_files_exist():
+    man = manifest()
+    for entry in man["models"].values():
+        for fn in entry["artifacts"].values():
+            assert os.path.exists(os.path.join(ART, fn)), fn
+    for sizes in man["projections"].values():
+        for fn in sizes.values():
+            assert os.path.exists(os.path.join(ART, fn)), fn
+
+
+def test_projection_sizes_cover_all_weight_tensors():
+    man = manifest()
+    sizes = {int(s) for s in man["projections"]}
+    for name in man["models"]:
+        spec = M.get_model(name)
+        for w in spec.weight_specs:
+            assert int(np.prod(w.shape)) in sizes, (name, w.name)
+
+
+def test_hlo_artifacts_have_entry_computation():
+    man = manifest()
+    entry = man["models"]["mlp"]
+    for fn in entry["artifacts"].values():
+        with open(os.path.join(ART, fn)) as f:
+            head = f.read(4096)
+        assert "ENTRY" in head or "ENTRY" in open(
+            os.path.join(ART, fn)).read(), fn
+
+
+def test_fingerprint_is_stable():
+    assert aot.source_fingerprint() == aot.source_fingerprint()

@@ -1,0 +1,255 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against ref.py.
+
+Hypothesis sweeps shapes/values; ``assert_allclose`` against the pure-jnp
+oracle is THE correctness signal for L1 (the same kernels are baked into the
+AOT artifacts the rust coordinator executes).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+SET = dict(max_examples=25, deadline=None)
+
+
+def farr(rng, n, scale=1.0):
+    return jnp.asarray(rng.normal(size=n).astype("float32") * scale)
+
+
+# --------------------------------------------------------------------------
+# prune_project
+# --------------------------------------------------------------------------
+
+@settings(**SET)
+@given(n=st.integers(1, 5000), frac=st.floats(0.0, 1.0), seed=st.integers(0, 2**31))
+def test_prune_project_matches_ref(n, frac, seed):
+    rng = np.random.default_rng(seed)
+    v = farr(rng, n)
+    k = jnp.float32(round(frac * n))
+    out = kernels.prune_project(v, k)
+    want = ref.prune_project(v, k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+
+
+@settings(**SET)
+@given(n=st.integers(1, 3000), frac=st.floats(0.0, 1.0), seed=st.integers(0, 2**31))
+def test_prune_project_cardinality(n, frac, seed):
+    """||Π_S(v)||_0 <= k (ties can only reduce the count below k)."""
+    rng = np.random.default_rng(seed)
+    v = farr(rng, n)
+    k = round(frac * n)
+    out = np.asarray(kernels.prune_project(v, jnp.float32(k)))
+    assert (out != 0).sum() <= max(k, 0) or np.unique(np.abs(np.asarray(v))).size < n
+
+
+def test_prune_keeps_largest_exactly():
+    v = jnp.asarray([0.1, -5.0, 2.0, -0.3, 4.0], jnp.float32)
+    out = np.asarray(kernels.prune_project(v, jnp.float32(2)))
+    np.testing.assert_allclose(out, [0, -5.0, 0, 0, 4.0])
+
+
+def test_prune_k_zero_and_full():
+    v = jnp.asarray(np.random.default_rng(0).normal(size=100).astype("float32"))
+    assert np.all(np.asarray(kernels.prune_project(v, jnp.float32(0))) == 0)
+    np.testing.assert_allclose(
+        np.asarray(kernels.prune_project(v, jnp.float32(100))), np.asarray(v))
+
+
+def test_prune_idempotent():
+    """Projecting twice with the same k is a no-op (projection property)."""
+    v = jnp.asarray(np.random.default_rng(3).normal(size=512).astype("float32"))
+    once = kernels.prune_project(v, jnp.float32(100))
+    twice = kernels.prune_project(once, jnp.float32(100))
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice))
+
+
+# --------------------------------------------------------------------------
+# quant_project / quant_error
+# --------------------------------------------------------------------------
+
+@settings(**SET)
+@given(n=st.integers(1, 5000), q=st.floats(1e-3, 1.0),
+       bits=st.integers(1, 8), seed=st.integers(0, 2**31))
+def test_quant_project_matches_ref(n, q, bits, seed):
+    rng = np.random.default_rng(seed)
+    v = farr(rng, n)
+    qq, hm = jnp.float32(q), jnp.float32(2 ** (bits - 1))
+    out = kernels.quant_project(v, qq, hm)
+    want = ref.quant_project(v, qq, hm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+@settings(**SET)
+@given(n=st.integers(1, 5000), q=st.floats(1e-3, 1.0),
+       bits=st.integers(1, 8), seed=st.integers(0, 2**31))
+def test_quant_error_matches_ref(n, q, bits, seed):
+    rng = np.random.default_rng(seed)
+    v = farr(rng, n)
+    qq, hm = jnp.float32(q), jnp.float32(2 ** (bits - 1))
+    out = kernels.quant_error(v, qq, hm)
+    want = ref.quant_error(v, qq, hm)
+    np.testing.assert_allclose(float(out), float(want), rtol=1e-4, atol=1e-6)
+
+
+def test_quant_levels_are_multiples_of_q():
+    rng = np.random.default_rng(1)
+    v = farr(rng, 4096)
+    q, hm = jnp.float32(0.25), jnp.float32(4)
+    out = np.asarray(kernels.quant_project(v, q, hm))
+    levels = np.round(out / 0.25)
+    assert np.all(np.abs(levels[out != 0]) >= 1)
+    assert np.all(np.abs(levels) <= 4)
+    np.testing.assert_allclose(out, levels * 0.25, atol=1e-6)
+
+
+def test_quant_preserves_zeros():
+    """Pruned (zero) weights must remain zero — 0 is not a level."""
+    v = jnp.asarray([0.0, 0.01, -0.01, 0.0, 1.0], jnp.float32)
+    out = np.asarray(kernels.quant_project(v, jnp.float32(0.5), jnp.float32(2)))
+    assert out[0] == 0 and out[3] == 0
+    assert out[1] == 0.5 and out[2] == -0.5  # small nonzeros snap OUT, not to 0
+
+
+def test_quant_idempotent():
+    rng = np.random.default_rng(2)
+    v = farr(rng, 1000)
+    q, hm = jnp.float32(0.1), jnp.float32(8)
+    once = kernels.quant_project(v, q, hm)
+    twice = kernels.quant_project(once, q, hm)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-7)
+    # and the error of an already-quantized vector is ~0
+    assert float(kernels.quant_error(once, q, hm)) < 1e-8
+
+
+# --------------------------------------------------------------------------
+# admm_penalty
+# --------------------------------------------------------------------------
+
+@settings(**SET)
+@given(n=st.integers(1, 20000), rho=st.floats(0.0, 1.0), seed=st.integers(0, 2**31))
+def test_admm_penalty_matches_ref(n, rho, seed):
+    rng = np.random.default_rng(seed)
+    w, z, u = farr(rng, n), farr(rng, n), farr(rng, n)
+    r = jnp.float32(rho)
+    g, p = kernels.admm_penalty(w, z, u, r)
+    np.testing.assert_allclose(np.asarray(g),
+                               np.asarray(ref.admm_penalty_grad(w, z, u, r)),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(p),
+                               float(ref.admm_penalty_value(w, z, u, r)),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_admm_penalty_zero_rho():
+    rng = np.random.default_rng(0)
+    w, z, u = farr(rng, 100), farr(rng, 100), farr(rng, 100)
+    g, p = kernels.admm_penalty(w, z, u, jnp.float32(0.0))
+    assert float(p) == 0.0
+    assert np.all(np.asarray(g) == 0.0)
+
+
+def test_admm_penalty_at_target_is_zero_when_u_zero():
+    """W == Z, U == 0  =>  no pull."""
+    rng = np.random.default_rng(0)
+    w = farr(rng, 256)
+    g, p = kernels.admm_penalty(w, w, jnp.zeros_like(w), jnp.float32(3e-3))
+    np.testing.assert_allclose(np.asarray(g), 0.0, atol=1e-8)
+    assert float(p) < 1e-10
+
+
+# --------------------------------------------------------------------------
+# masked_gemm (+ custom VJP)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 40), k=st.integers(1, 260), n=st.integers(1, 200),
+       density=st.floats(0.0, 1.0), seed=st.integers(0, 2**31))
+def test_masked_gemm_matches_ref(b, k, n, density, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, k)).astype("float32"))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype("float32"))
+    m = jnp.asarray((rng.random((k, n)) < density).astype("float32"))
+    out = kernels.masked_gemm(x, w, m)
+    want = ref.masked_gemm(x, w, m)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_masked_gemm_grad_respects_mask():
+    """dW must be exactly zero at masked positions (no regrowth)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype("float32"))
+    w = jnp.asarray(rng.normal(size=(64, 32)).astype("float32"))
+    m = jnp.asarray((rng.random((64, 32)) < 0.5).astype("float32"))
+
+    def loss(w):
+        return jnp.sum(kernels.masked_gemm(x, w, m) ** 2)
+
+    dw = np.asarray(jax.grad(loss)(w))
+    assert np.all(dw[np.asarray(m) == 0] == 0.0)
+
+
+def test_masked_gemm_grads_match_ref():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(16, 130)).astype("float32"))
+    w = jnp.asarray(rng.normal(size=(130, 70)).astype("float32"))
+    m = jnp.asarray((rng.random((130, 70)) < 0.7).astype("float32"))
+
+    def loss_k(w, x):
+        return jnp.sum(jnp.tanh(kernels.masked_gemm(x, w, m)))
+
+    def loss_r(w, x):
+        return jnp.sum(jnp.tanh(ref.masked_gemm(x, w, m)))
+
+    gw_k, gx_k = jax.grad(loss_k, argnums=(0, 1))(w, x)
+    gw_r, gx_r = jax.grad(loss_r, argnums=(0, 1))(w, x)
+    np.testing.assert_allclose(np.asarray(gw_k), np.asarray(gw_r),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gx_k), np.asarray(gx_r),
+                               rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# projection optimality (the §3.3 claims)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_prune_projection_is_euclidean_optimal(seed):
+    """Among all k-sparse vectors, Π_S(v) minimizes ||x − v||₂ — verified
+    against random k-sparse candidates."""
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=64).astype("float32")
+    k = 16
+    proj = np.asarray(kernels.prune_project(jnp.asarray(v), jnp.float32(k)))
+    best = np.linalg.norm(proj - v)
+    for _ in range(50):
+        idx = rng.choice(64, size=k, replace=False)
+        cand = np.zeros_like(v)
+        cand[idx] = v[idx]
+        assert np.linalg.norm(cand - v) >= best - 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_quant_projection_is_nearest_level(seed):
+    """Each output is the argmin over the full level set."""
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=128).astype("float32")
+    q, hm = 0.3, 4
+    levels = np.array([j * q for j in range(-hm, hm + 1) if j != 0])
+    proj = np.asarray(kernels.quant_project(
+        jnp.asarray(v), jnp.float32(q), jnp.float32(hm)))
+    for vi, pi in zip(v, proj):
+        if vi == 0:
+            assert pi == 0
+        else:
+            nearest = levels[np.argmin(np.abs(levels - vi))]
+            assert abs(pi - vi) <= abs(nearest - vi) + 1e-6

@@ -1,0 +1,187 @@
+"""L2 model tests: shapes, masking semantics, ADMM penalty behaviour, and
+training sanity (loss decreases, masks are respected end-to-end)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def make_batch(spec, b, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b,) + tuple(spec.input_shape))
+                    .astype("float32"))
+    y = jnp.asarray(rng.integers(0, spec.n_classes, size=b).astype("int32"))
+    return x, y
+
+
+def flat_train_args(spec, params, masks, zs, us, rhos, step=1.0,
+                    lr=1e-3, l1=0.0, batch=None):
+    plist = [params[p.name] for p in spec.params]
+    mlist = [jnp.zeros_like(p) for p in plist]
+    vlist = [jnp.zeros_like(p) for p in plist]
+    wn = [w.name for w in spec.weight_specs]
+    x, y = batch
+    return (plist + mlist + vlist + [jnp.float32(step)]
+            + [masks[n] for n in wn] + [zs[n] for n in wn]
+            + [us[n] for n in wn] + [jnp.float32(rhos[n]) for n in wn]
+            + [jnp.float32(lr), jnp.float32(l1), x, y])
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_forward_shapes(name):
+    spec = M.get_model(name)
+    params = spec.init_params(0)
+    masks = spec.ones_masks()
+    x, _ = make_batch(spec, 4)
+    logits = spec.forward(params, masks, x)
+    assert logits.shape == (4, spec.n_classes)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_lenet5_param_count_matches_paper():
+    """Table 1: the original LeNet-5 has 430.5K parameters."""
+    spec = M.get_model("lenet5")
+    total = sum(int(np.prod(p.shape)) for p in spec.params)
+    assert total == 431_080  # 430.5K in the paper's rounding
+
+
+def test_alexnet_proxy_is_fc_heavy():
+    """The proxy must preserve AlexNet's size skew: FC ≫ CONV weights."""
+    spec = M.get_model("alexnet_proxy")
+    conv = sum(int(np.prod(p.shape)) for p in spec.weight_specs
+               if p.layer_type == "conv")
+    fc = sum(int(np.prod(p.shape)) for p in spec.weight_specs
+             if p.layer_type == "dense")
+    assert fc > 2.5 * conv
+
+
+def test_vgg_proxy_is_conv_compute_heavy():
+    """...while compute (MACs) must be CONV-dominated, as in the paper."""
+    spec = M.get_model("vgg_proxy")
+    conv = sum(p.macs for p in spec.weight_specs if p.layer_type == "conv")
+    fc = sum(p.macs for p in spec.weight_specs if p.layer_type == "dense")
+    assert conv > 10 * fc
+
+
+@pytest.mark.parametrize("name", ["mlp", "lenet5"])
+def test_mask_zeroes_contributions(name):
+    """With all-zero masks, logits depend only on biases — same for any W."""
+    spec = M.get_model(name)
+    p1, p2 = spec.init_params(0), spec.init_params(1)
+    for p in spec.params:  # share biases
+        if p.kind == "bias":
+            p2[p.name] = p1[p.name]
+    masks = {w.name: jnp.zeros(w.shape) for w in spec.weight_specs}
+    x, _ = make_batch(spec, 2)
+    l1 = spec.forward(p1, masks, x)
+    l2 = spec.forward(p2, masks, x)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_train_step_loss_decreases():
+    spec = M.get_model("mlp")
+    params = spec.init_params(0)
+    masks = spec.ones_masks()
+    zs = {w.name: jnp.zeros(w.shape) for w in spec.weight_specs}
+    us = {w.name: jnp.zeros(w.shape) for w in spec.weight_specs}
+    rhos = {w.name: 0.0 for w in spec.weight_specs}
+    batch = make_batch(spec, 32)
+    ts = jax.jit(M.make_train_step(spec))
+    P = len(spec.params)
+    args = flat_train_args(spec, params, masks, zs, us, rhos, batch=batch)
+    losses = []
+    for step in range(1, 9):
+        out = ts(*args)
+        losses.append(float(out[-2]))
+        args = (list(out[:3 * P]) + [jnp.float32(step + 1)]
+                + args[3 * P + 1:])
+    assert losses[-1] < losses[0] * 0.7
+
+
+def test_train_step_respects_masks():
+    """Masked positions stay exactly zero through ADAM updates."""
+    spec = M.get_model("mlp")
+    params = spec.init_params(0)
+    rng = np.random.default_rng(0)
+    masks, zeros_at = {}, {}
+    for w in spec.weight_specs:
+        m = (rng.random(w.shape) < 0.5).astype("float32")
+        masks[w.name] = jnp.asarray(m)
+        zeros_at[w.name] = m == 0
+        params[w.name] = params[w.name] * masks[w.name]
+    zs = {w.name: jnp.zeros(w.shape) for w in spec.weight_specs}
+    us = {w.name: jnp.zeros(w.shape) for w in spec.weight_specs}
+    rhos = {w.name: 0.0 for w in spec.weight_specs}
+    ts = jax.jit(M.make_train_step(spec))
+    args = flat_train_args(spec, params, masks, zs, us, rhos,
+                           batch=make_batch(spec, 32))
+    out = ts(*args)
+    for i, p in enumerate(spec.params):
+        if p.kind == "weight":
+            new_w = np.asarray(out[i])
+            assert np.all(new_w[zeros_at[p.name]] == 0.0), p.name
+
+
+def test_admm_penalty_pulls_weights_toward_target():
+    """With a huge ρ and Z=0, weights should shrink toward zero fast."""
+    spec = M.get_model("mlp")
+    params = spec.init_params(0)
+    masks = spec.ones_masks()
+    zs = {w.name: jnp.zeros(w.shape) for w in spec.weight_specs}
+    us = {w.name: jnp.zeros(w.shape) for w in spec.weight_specs}
+    ts = jax.jit(M.make_train_step(spec))
+    batch = make_batch(spec, 32)
+
+    def norm_after(rho_val, steps=5):
+        rhos = {w.name: rho_val for w in spec.weight_specs}
+        args = flat_train_args(spec, params, masks, zs, us, rhos,
+                               lr=1e-2, batch=batch)
+        P = len(spec.params)
+        for step in range(1, steps + 1):
+            out = ts(*args)
+            args = (list(out[:3 * P]) + [jnp.float32(step + 1)]
+                    + args[3 * P + 1:])
+        return float(sum(jnp.sum(out[i] ** 2)
+                         for i, p in enumerate(spec.params)
+                         if p.kind == "weight"))
+
+    assert norm_after(10.0) < norm_after(0.0) * 0.9
+
+
+def test_eval_step_counts_correct():
+    spec = M.get_model("mlp")
+    params = spec.init_params(0)
+    masks = spec.ones_masks()
+    x, _ = make_batch(spec, 64)
+    logits = spec.forward(params, masks, x)
+    y = jnp.argmax(logits, axis=1).astype(jnp.int32)  # labels = predictions
+    ev = M.make_eval_step(spec)
+    plist = [params[p.name] for p in spec.params]
+    mlist = [masks[w.name] for w in spec.weight_specs]
+    loss, correct = ev(*(plist + mlist + [x, y]))
+    assert float(correct) == 64.0
+
+
+def test_infer_matches_forward():
+    spec = M.get_model("lenet5")
+    params = spec.init_params(0)
+    masks = spec.ones_masks()
+    x, _ = make_batch(spec, 2)
+    inf = M.make_infer(spec)
+    plist = [params[p.name] for p in spec.params]
+    mlist = [masks[w.name] for w in spec.weight_specs]
+    got = inf(*(plist + mlist + [x]))
+    want = spec.forward(params, masks, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_cross_entropy_uniform():
+    logits = jnp.zeros((4, 10))
+    y = jnp.asarray([0, 3, 5, 9], jnp.int32)
+    np.testing.assert_allclose(float(M.cross_entropy(logits, y)),
+                               np.log(10.0), rtol=1e-5)

@@ -1,0 +1,86 @@
+//! End-to-end PJRT benchmarks: the per-step costs of the coordinator's
+//! request path (train step, eval, inference, projection artifacts).
+//!
+//! This is the bench behind EXPERIMENTS.md §Perf — it separates the
+//! PJRT execute time from the literal-marshalling overhead so L3 tuning
+//! is measurable.
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench admm_step`
+
+use admm_nn::coordinator::{TrainConfig, Trainer};
+use admm_nn::data::{self, Split};
+use admm_nn::runtime::{Hyper, Runtime, TrainState};
+use admm_nn::util::bench::{bench, black_box};
+use admm_nn::util::Rng;
+
+fn main() -> admm_nn::Result<()> {
+    let rt = Runtime::load("artifacts")?;
+    println!("platform: {}\n", rt.platform());
+
+    for model in ["mlp", "lenet5", "alexnet_proxy"] {
+        println!("== {model} ==");
+        let sess = rt.model(model)?;
+        let ds = data::for_input_shape(&sess.entry.input_shape);
+        let mut st = TrainState::init(&sess.entry, 0);
+        let hyper = Hyper::default();
+        let b = sess.entry.train_batch;
+        let batch = ds.batch(Split::Train, 0, b);
+
+        // warm the executable caches (compile once)
+        sess.train_step(&mut st, &hyper, &batch)?;
+        let r = bench(&format!("{model} train_step (B={b})"), 2, 12, || {
+            sess.train_step(&mut st, &hyper, &batch).unwrap();
+        });
+        println!(
+            "    -> {:.1} samples/s",
+            b as f64 / r.median_s
+        );
+
+        bench(&format!("{model} eval batch (B={})", sess.entry.eval_batch),
+              1, 8, || {
+            black_box(sess.evaluate(&st, ds.as_ref(), 1).unwrap());
+        });
+
+        let x1 = ds.batch(Split::Test, 0, 1);
+        sess.infer(&st, &x1.x, 1)?;
+        let r1 = bench(&format!("{model} infer B=1 (latency)"), 3, 20, || {
+            black_box(sess.infer(&st, &x1.x, 1).unwrap());
+        });
+        let x64 = ds.batch(Split::Test, 0, 64);
+        let r64 = bench(&format!("{model} infer B=64 (throughput)"), 3, 20, || {
+            black_box(sess.infer(&st, &x64.x, 64).unwrap());
+        });
+        println!(
+            "    -> latency {:.2}ms, throughput {:.0} samples/s",
+            r1.median_s * 1e3,
+            64.0 / r64.median_s
+        );
+        println!();
+    }
+
+    println!("== projection artifacts (Pallas kernels via PJRT) ==");
+    let mut rng = Rng::new(7);
+    for n in [25_000usize, 400_000] {
+        let v = rng.normal_vec(n, 0.1);
+        rt.prune(&v, n / 20)?; // warm compile
+        bench(&format!("proj_prune artifact n={n}"), 2, 10, || {
+            black_box(rt.prune(black_box(&v), n / 20).unwrap());
+        });
+        rt.quant(&v, 0.02, 4.0 as u32 as f32 as u32)?;
+        bench(&format!("proj_quant artifact n={n}"), 2, 10, || {
+            black_box(rt.quant(black_box(&v), 0.02, 4).unwrap());
+        });
+    }
+
+    println!("\n== coordinator loop overhead (10-step run) ==");
+    let sess = rt.model("mlp")?;
+    let ds = data::for_input_shape(&sess.entry.input_shape);
+    let mut st = TrainState::init(&sess.entry, 1);
+    let mut trainer = Trainer::new(&sess, ds.as_ref());
+    bench("mlp 10-step training run", 1, 5, || {
+        trainer
+            .run(&mut st, &TrainConfig { steps: 10, ..Default::default() })
+            .unwrap();
+    });
+    Ok(())
+}

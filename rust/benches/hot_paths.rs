@@ -1,0 +1,83 @@
+//! Micro-benchmarks of the L3 hot paths (no PJRT needed).
+//!
+//! These are the operations the coordinator runs between train steps —
+//! projections, quantizer search, sparse encoding, the hardware model —
+//! sized at real layer shapes (LeNet-5 fc1 = 400K, AlexNet fc1 = 37.7M
+//! scaled to 1M for iteration count sanity).
+//!
+//! Run: `cargo bench --bench hot_paths`
+
+use admm_nn::hwmodel::HwConfig;
+use admm_nn::projection;
+use admm_nn::quantize;
+use admm_nn::sparsity::{Csr, RelIndex};
+use admm_nn::util::bench::{bench, black_box};
+use admm_nn::util::Rng;
+
+fn main() {
+    println!("== L3 hot paths ==");
+    let mut rng = Rng::new(42);
+
+    for n in [25_000usize, 400_000, 1_000_000] {
+        let v = rng.normal_vec(n, 0.1);
+        let k = n / 20;
+        bench(&format!("prune_topk n={n} k=5%"), 3, 15, || {
+            black_box(projection::prune_topk(black_box(&v), k));
+        });
+    }
+
+    let v400k = rng.normal_vec(400_000, 0.1);
+    bench("prune_threshold n=400K", 3, 15, || {
+        black_box(projection::prune_threshold(black_box(&v400k), 20_000));
+    });
+
+    let pruned = projection::prune_topk(&v400k, 20_000);
+    bench("quant_nearest n=400K (3 bits)", 3, 15, || {
+        black_box(projection::quant_nearest(black_box(&pruned), 0.02, 4));
+    });
+    bench("quant_error n=400K", 3, 15, || {
+        black_box(projection::quant_error(black_box(&pruned), 0.02, 4));
+    });
+    bench("search_interval n=400K (golden, 80 iters)", 1, 5, || {
+        black_box(quantize::search_interval(black_box(&pruned), 3));
+    });
+    bench("select_bits n=400K (tol 2e-2)", 1, 5, || {
+        black_box(quantize::select_bits(black_box(&pruned), 2e-2, 8));
+    });
+
+    println!("\n== sparse encoding ==");
+    let cfg = quantize::search_interval(&pruned, 3);
+    let codes = quantize::encode_levels(&cfg.apply(&pruned), &cfg);
+    bench("RelIndex::encode n=400K (5% dense)", 3, 15, || {
+        black_box(RelIndex::encode(black_box(&codes), 8));
+    });
+    let enc = RelIndex::encode(&codes, 8);
+    bench("RelIndex::decode n=400K", 3, 15, || {
+        black_box(enc.decode());
+    });
+    bench("Csr::encode 800x500 (5% dense)", 3, 15, || {
+        black_box(Csr::encode(black_box(&codes), 800, 500));
+    });
+
+    println!("\n== hardware model ==");
+    let hw = HwConfig::default();
+    bench("speedup() single point", 10, 50, || {
+        black_box(hw.speedup(black_box(0.2)));
+    });
+    bench("break_even_portion (60 bisections)", 5, 30, || {
+        black_box(hw.break_even_portion());
+    });
+    let portions: Vec<f64> = (1..=90).map(|i| i as f64 / 100.0).collect();
+    bench("fig4 sweep (90 points)", 5, 30, || {
+        black_box(hw.sweep(black_box(&portions)));
+    });
+
+    println!("\n== dual update (tensor ops) ==");
+    use admm_nn::tensor::Tensor;
+    let w = Tensor::new(vec![400_000], rng.normal_vec(400_000, 0.1));
+    let z = Tensor::new(vec![400_000], rng.normal_vec(400_000, 0.1));
+    let mut u = Tensor::zeros(vec![400_000]);
+    bench("dual update U += W - Z (400K)", 3, 20, || {
+        u.add_assign(&w.sub(&z));
+    });
+}

@@ -1,0 +1,45 @@
+//! Table/figure regeneration harness: prints every table and figure of
+//! the paper's evaluation (the same rows/series), and times each
+//! generator. `cargo bench --bench tables` is the one-command
+//! reproduction of the analytic half of the evaluation; measured rows
+//! appear automatically once the examples have written `results/*.json`.
+
+use std::time::Instant;
+
+use admm_nn::hwmodel::HwConfig;
+use admm_nn::report::{self, MeasuredRun};
+
+fn main() {
+    let runs = MeasuredRun::load_all(std::path::Path::new("results"));
+    if runs.is_empty() {
+        println!(
+            "(no measured runs in results/ — run the examples to add \
+             measured rows)\n"
+        );
+    } else {
+        println!("({} measured runs loaded from results/)\n", runs.len());
+    }
+    let hw = HwConfig::default();
+
+    let blocks: Vec<(&str, Box<dyn Fn() -> String>)> = vec![
+        ("Table 1", Box::new(|| report::table_pruning("lenet5", &runs))),
+        ("Table 2", Box::new(|| report::table_pruning("alexnet", &runs))),
+        ("Table 3", Box::new(|| report::table_pruning("vgg16", &runs))),
+        ("Table 4", Box::new(|| report::table_pruning("resnet50", &runs))),
+        ("Table 5", Box::new(|| report::table_model_size("lenet5", &runs))),
+        ("Table 6", Box::new(|| report::table_model_size("alexnet", &runs))),
+        ("Table 7", Box::new(|| report::table7(&runs))),
+        ("Table 8", Box::new(report::table8)),
+        ("Table 9", Box::new(move || report::table9(&hw))),
+        ("Fig 4", Box::new(move || report::fig4(&hw))),
+        ("§4.3 on-chip", Box::new(report::onchip)),
+    ];
+
+    for (name, gen) in &blocks {
+        let t0 = Instant::now();
+        let text = gen();
+        let dt = t0.elapsed().as_secs_f64();
+        println!("################ {name}  (generated in {:.1}ms)", dt * 1e3);
+        println!("{text}");
+    }
+}

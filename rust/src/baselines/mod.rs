@@ -1,0 +1,191 @@
+//! Comparator methods the paper evaluates against.
+//!
+//! * [`iterative_magnitude`] — Han et al. [24]: repeatedly prune the
+//!   smallest-magnitude weights a bit further, then retrain with the mask
+//!   frozen. The geometric keep schedule mirrors the original "prune and
+//!   retrain" rounds.
+//! * [`l1_then_prune`] — Wen et al. [53]-style: train with an L1
+//!   regularizer (the artifact's λ input), then one-shot prune + retrain.
+//! * [`one_shot_prune`] — projection-only ablation: hard magnitude prune
+//!   with no ADMM phase, then retrain. Isolates the ADMM contribution.
+//! * [`quant_only`] — quantization without pruning (the binary/ternary
+//!   rows of Table 6): per-layer interval search at fixed bits, snap,
+//!   evaluate. No retraining (matching the table's "quant." baselines).
+
+use crate::coordinator::trainer::{TrainConfig, Trainer};
+use crate::data::Dataset;
+use crate::projection;
+use crate::quantize::search_interval;
+use crate::runtime::{ModelSession, TrainState};
+use crate::tensor::Tensor;
+
+/// Outcome of a baseline compression run.
+#[derive(Clone, Debug)]
+pub struct BaselineReport {
+    pub name: String,
+    pub accuracy: f64,
+    /// (layer, total, kept) per weight tensor.
+    pub layer_keep: Vec<(String, usize, usize)>,
+    pub overall_prune_ratio: f64,
+}
+
+fn snapshot(sess: &ModelSession, st: &TrainState) -> Vec<(String, usize, usize)> {
+    let wi = TrainState::weight_indices(&sess.entry);
+    sess.entry
+        .weight_params()
+        .zip(&wi)
+        .map(|(p, &pi)| {
+            let t = &st.params[pi];
+            (p.name.clone(), t.len(), t.count_nonzero())
+        })
+        .collect()
+}
+
+fn overall(layer_keep: &[(String, usize, usize)]) -> f64 {
+    let total: usize = layer_keep.iter().map(|(_, t, _)| t).sum();
+    let kept: usize = layer_keep.iter().map(|(_, _, k)| k).sum();
+    total as f64 / kept.max(1) as f64
+}
+
+/// Hard-prune `st` to per-layer keep ratios and freeze masks.
+pub fn hard_prune(sess: &ModelSession, st: &mut TrainState, keep: &[f64]) {
+    let wi = TrainState::weight_indices(&sess.entry);
+    for (li, &pi) in wi.iter().enumerate() {
+        let w = &st.params[pi];
+        let k = ((w.len() as f64 * keep[li]).round() as usize).min(w.len());
+        let pruned = projection::prune_topk(w.data(), k);
+        st.masks[li] = Tensor::new(w.shape().to_vec(),
+                                   projection::mask_of(&pruned));
+        st.params[pi] = Tensor::new(w.shape().to_vec(), pruned);
+    }
+    st.reset_adam();
+    sess.invalidate_slow();
+}
+
+/// Han-style iterative magnitude pruning.
+pub fn iterative_magnitude(
+    sess: &ModelSession,
+    data: &dyn Dataset,
+    st: &mut TrainState,
+    target_keep: &[f64],
+    rounds: usize,
+    retrain_steps_per_round: u64,
+    lr: f32,
+    eval_batches: u64,
+) -> crate::Result<BaselineReport> {
+    assert!(rounds >= 1);
+    let mut trainer = Trainer::new(sess, data);
+    for r in 1..=rounds {
+        // geometric interpolation 1 → target over the rounds
+        let frac = r as f64 / rounds as f64;
+        let keep: Vec<f64> = target_keep
+            .iter()
+            .map(|&t| t.powf(frac).clamp(t, 1.0))
+            .collect();
+        hard_prune(sess, st, &keep);
+        trainer.run(st, &TrainConfig {
+            steps: retrain_steps_per_round,
+            lr,
+            ..Default::default()
+        })?;
+    }
+    let accuracy = sess.evaluate(st, data, eval_batches)?.accuracy();
+    let layer_keep = snapshot(sess, st);
+    Ok(BaselineReport {
+        name: "iterative magnitude (Han)".into(),
+        accuracy,
+        overall_prune_ratio: overall(&layer_keep),
+        layer_keep,
+    })
+}
+
+/// L1-regularized training followed by one-shot pruning + retrain.
+pub fn l1_then_prune(
+    sess: &ModelSession,
+    data: &dyn Dataset,
+    st: &mut TrainState,
+    lambda: f32,
+    reg_steps: u64,
+    target_keep: &[f64],
+    retrain_steps: u64,
+    lr: f32,
+    eval_batches: u64,
+) -> crate::Result<BaselineReport> {
+    let mut trainer = Trainer::new(sess, data);
+    trainer.run(st, &TrainConfig {
+        steps: reg_steps,
+        lr,
+        l1_lambda: lambda,
+        ..Default::default()
+    })?;
+    hard_prune(sess, st, target_keep);
+    trainer.run(st, &TrainConfig { steps: retrain_steps, lr, ..Default::default() })?;
+    let accuracy = sess.evaluate(st, data, eval_batches)?.accuracy();
+    let layer_keep = snapshot(sess, st);
+    Ok(BaselineReport {
+        name: "L1 regularization (Wen)".into(),
+        accuracy,
+        overall_prune_ratio: overall(&layer_keep),
+        layer_keep,
+    })
+}
+
+/// One-shot magnitude prune + retrain (no ADMM, no iteration).
+pub fn one_shot_prune(
+    sess: &ModelSession,
+    data: &dyn Dataset,
+    st: &mut TrainState,
+    target_keep: &[f64],
+    retrain_steps: u64,
+    lr: f32,
+    eval_batches: u64,
+) -> crate::Result<BaselineReport> {
+    hard_prune(sess, st, target_keep);
+    let mut trainer = Trainer::new(sess, data);
+    trainer.run(st, &TrainConfig { steps: retrain_steps, lr, ..Default::default() })?;
+    let accuracy = sess.evaluate(st, data, eval_batches)?.accuracy();
+    let layer_keep = snapshot(sess, st);
+    Ok(BaselineReport {
+        name: "one-shot prune".into(),
+        accuracy,
+        overall_prune_ratio: overall(&layer_keep),
+        layer_keep,
+    })
+}
+
+/// Quantize the dense model (no pruning, no retrain) at fixed bits.
+pub fn quant_only(
+    sess: &ModelSession,
+    data: &dyn Dataset,
+    st: &mut TrainState,
+    bits: u32,
+    eval_batches: u64,
+) -> crate::Result<BaselineReport> {
+    let wi = TrainState::weight_indices(&sess.entry);
+    for &pi in &wi {
+        let w = &st.params[pi];
+        let cfg = search_interval(w.data(), bits);
+        st.params[pi] = Tensor::new(w.shape().to_vec(), cfg.apply(w.data()));
+    }
+    sess.invalidate_slow();
+    let accuracy = sess.evaluate(st, data, eval_batches)?.accuracy();
+    let layer_keep = snapshot(sess, st);
+    Ok(BaselineReport {
+        name: format!("{bits}-bit quantization only"),
+        accuracy,
+        overall_prune_ratio: 1.0,
+        layer_keep,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn overall_ratio_math() {
+        let rows = vec![
+            ("a".to_string(), 100usize, 10usize),
+            ("b".to_string(), 300, 30),
+        ];
+        assert!((super::overall(&rows) - 10.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,307 @@
+//! Hardware-aware DNN model compression (paper §5.1, Fig. 5).
+//!
+//! Given a pretrained model, the algorithm:
+//! 1. initializes per-layer keep ratios αᵢ (from prior work / a profile);
+//! 2. iteratively reduces CONV-layer αᵢ *proportionally to each layer's
+//!    computation Cᵢ* ("reduce the computation to a larger extent in those
+//!    layers that are more computationally intensive"), with FC layers
+//!    pruned in accordance (§5.1's coordination observation: FC must be
+//!    pruned ~3-4× even when targeting CONV, else accuracy drops);
+//! 3. binary-searches the most aggressive reduction that keeps accuracy
+//!    within the tolerance — each probe is a real (short) ADMM prune +
+//!    masked retrain on a cloned state;
+//! 4. checks every CONV layer's achieved pruning ratio 1/αᵢ against the
+//!    hardware break-even ratio; layers below it are *restored to dense*
+//!    (pruning them would slow the accelerator down) and the freed
+//!    accuracy margin is spent on a second search round over the
+//!    surviving layers;
+//! 5. reports the final configuration with synthesized per-layer and
+//!    overall speedups from the hardware model.
+
+use crate::coordinator::admm::{AdmmConfig, AdmmRunner, Constraint};
+use crate::coordinator::trainer::{TrainConfig, Trainer};
+use crate::data::Dataset;
+use crate::hwmodel::{network_speedup, HwConfig, NetworkSpeedup};
+use crate::runtime::{ModelSession, TrainState};
+
+/// Configuration of the hardware-aware search.
+#[derive(Clone, Debug)]
+pub struct HwAwareConfig {
+    pub hw: HwConfig,
+    /// Allowed accuracy drop relative to the dense model (absolute).
+    pub acc_drop_tol: f64,
+    pub admm: AdmmConfig,
+    pub retrain_steps: u64,
+    /// Binary-search probes per round (each probe = one compress run).
+    pub search_probes: usize,
+    pub eval_batches: u64,
+    /// Initial keep ratios (weight-tensor order); defaults to 1.0.
+    pub init_keep: Option<Vec<f64>>,
+    /// Most aggressive keep ratio the search may reach.
+    pub min_keep: f64,
+    /// FC keep ratio is tied to the conv reduction, scaled by this factor
+    /// (the paper's "prune FC moderately, 3-4×" coordination rule).
+    pub fc_coupling: f64,
+    pub verbose: bool,
+}
+
+impl Default for HwAwareConfig {
+    fn default() -> Self {
+        HwAwareConfig {
+            hw: HwConfig::default(),
+            acc_drop_tol: 0.01,
+            admm: AdmmConfig { iters: 3, steps_per_iter: 80, ..Default::default() },
+            retrain_steps: 150,
+            search_probes: 4,
+            eval_batches: 4,
+            init_keep: None,
+            min_keep: 0.02,
+            fc_coupling: 0.5,
+            verbose: false,
+        }
+    }
+}
+
+/// Outcome of the hardware-aware compression.
+#[derive(Debug)]
+pub struct HwAwareResult {
+    /// Final keep ratios per weight tensor.
+    pub keep: Vec<f64>,
+    /// Which layers were restored to dense by the break-even rule.
+    pub restored: Vec<bool>,
+    pub dense_accuracy: f64,
+    pub accuracy: f64,
+    /// Synthesized speedups over the *proxy* network's op counts.
+    pub speedup: NetworkSpeedup,
+    /// Every probed configuration: (aggressiveness s, accuracy, accepted).
+    pub probes: Vec<(f64, f64, bool)>,
+    /// The compressed state (hard-pruned + retrained at the final keep).
+    pub state: TrainState,
+}
+
+/// Keep-ratio schedule: aggressiveness s ∈ [0,1] maps layer i from its
+/// initial keep to `min_keep`, at a rate proportional to its share of
+/// compute (geometric interpolation — equal *ratio* steps, which is how
+/// pruning ratios compound).
+fn keep_at(
+    s: f64,
+    init: &[f64],
+    compute_share: &[f64],
+    is_conv: &[bool],
+    min_keep: f64,
+    fc_coupling: f64,
+) -> Vec<f64> {
+    init.iter()
+        .zip(compute_share)
+        .zip(is_conv)
+        .map(|((&k0, &c), &conv)| {
+            let rate = if conv { c } else { fc_coupling };
+            let k = k0 * (min_keep / k0).powf(s * rate);
+            k.clamp(min_keep, 1.0)
+        })
+        .collect()
+}
+
+/// Run Fig. 5 end-to-end. `st` must hold a (pre)trained dense model.
+pub fn hw_aware_compress(
+    sess: &ModelSession,
+    data: &dyn Dataset,
+    st: &TrainState,
+    cfg: &HwAwareConfig,
+) -> crate::Result<HwAwareResult> {
+    let entry = &sess.entry;
+    let wps: Vec<_> = entry.weight_params().cloned().collect();
+    let n = wps.len();
+    let init = cfg.init_keep.clone().unwrap_or_else(|| vec![1.0; n]);
+    assert_eq!(init.len(), n);
+
+    let dense_acc = sess.evaluate(st, data, cfg.eval_batches)?.accuracy();
+    let target = dense_acc - cfg.acc_drop_tol;
+    if cfg.verbose {
+        eprintln!("[hw-aware] dense acc {dense_acc:.4}, target ≥ {target:.4}");
+    }
+
+    // Compute shares: conv layer MACs normalized to the max conv layer.
+    let is_conv: Vec<bool> = wps.iter().map(|p| p.layer_type == "conv").collect();
+    let max_macs = wps
+        .iter()
+        .zip(&is_conv)
+        .filter(|(_, &c)| c)
+        .map(|(p, _)| p.macs)
+        .max()
+        .unwrap_or(1) as f64;
+    let compute_share: Vec<f64> = wps
+        .iter()
+        .map(|p| (p.macs as f64 / max_macs).clamp(0.05, 1.0))
+        .collect();
+
+    let mut probes: Vec<(f64, f64, bool)> = Vec::new();
+
+    // One probe: short ADMM prune + masked retrain on a clone; returns acc.
+    let probe = |keep: &[f64]| -> crate::Result<(f64, TrainState)> {
+        let mut cand = st.clone();
+        cand.reset_adam();
+        let counts: Vec<usize> = wps
+            .iter()
+            .zip(keep)
+            .map(|(p, &a)| ((p.numel() as f64 * a).round() as usize).min(p.numel()))
+            .collect();
+        let constraint = Constraint::Cardinality { keep: counts };
+        let runner = AdmmRunner::new(sess, data, cfg.admm.clone());
+        runner.warm_start(&mut cand, &constraint);
+        runner.run(&mut cand, &constraint)?;
+        runner.finalize(&mut cand, &constraint);
+        let mut trainer = Trainer::new(sess, data);
+        trainer.run(&mut cand, &TrainConfig {
+            steps: cfg.retrain_steps,
+            lr: cfg.admm.lr,
+            ..Default::default()
+        })?;
+        let acc = sess.evaluate(&cand, data, cfg.eval_batches)?.accuracy();
+        Ok((acc, cand))
+    };
+
+    // -- round 1: binary search the global aggressiveness ------------------
+    let mut best: Option<(f64, Vec<f64>, f64, TrainState)> = None; // (s, keep, acc, state)
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    let mut s = 1.0; // try the most aggressive config first
+    for _ in 0..cfg.search_probes {
+        let keep = keep_at(s, &init, &compute_share, &is_conv,
+                           cfg.min_keep, cfg.fc_coupling);
+        let (acc, cand) = probe(&keep)?;
+        let ok = acc >= target;
+        probes.push((s, acc, ok));
+        if cfg.verbose {
+            eprintln!("[hw-aware] probe s={s:.3} → acc {acc:.4} ({})",
+                      if ok { "accept" } else { "reject" });
+        }
+        if ok {
+            if best.as_ref().map_or(true, |(bs, ..)| s > *bs) {
+                best = Some((s, keep, acc, cand));
+            }
+            lo = s;
+        } else {
+            hi = s;
+        }
+        s = 0.5 * (lo + hi);
+    }
+    let (_, mut keep, mut acc, mut state) = match best {
+        Some(b) => b,
+        None => {
+            // even s≈0 failed; fall back to the dense model
+            let keep = vec![1.0; n];
+            let (a, c) = probe(&keep)?;
+            (0.0, keep, a, c)
+        }
+    };
+
+    // -- break-even restoration --------------------------------------------
+    let break_even = cfg.hw.break_even_ratio();
+    let mut restored = vec![false; n];
+    for i in 0..n {
+        if is_conv[i] && keep[i] < 1.0 && 1.0 / keep[i] < break_even {
+            restored[i] = true;
+            keep[i] = 1.0;
+        }
+    }
+    if restored.iter().any(|&r| r) {
+        if cfg.verbose {
+            let names: Vec<&str> = wps
+                .iter()
+                .zip(&restored)
+                .filter(|(_, &r)| r)
+                .map(|(p, _)| p.layer.as_str())
+                .collect();
+            eprintln!(
+                "[hw-aware] restoring {names:?} (below break-even {break_even:.2}x)"
+            );
+        }
+        // Spend the freed margin: push the surviving conv layers harder,
+        // secondary binary search on an extra aggressiveness t.
+        let base = keep.clone();
+        let (mut lo, mut hi) = (0.0f64, 1.0f64);
+        let mut t = 0.5;
+        for _ in 0..cfg.search_probes.max(1) {
+            let mut cand_keep = base.clone();
+            for i in 0..n {
+                if !restored[i] {
+                    let k = base[i] * (cfg.min_keep / base[i]).powf(t * 0.5);
+                    cand_keep[i] = k.clamp(cfg.min_keep, 1.0);
+                }
+            }
+            let (a, cand) = probe(&cand_keep)?;
+            let ok = a >= target;
+            probes.push((1.0 + t, a, ok));
+            if cfg.verbose {
+                eprintln!("[hw-aware] probe t={t:.3} → acc {a:.4} ({})",
+                          if ok { "accept" } else { "reject" });
+            }
+            if ok {
+                keep = cand_keep;
+                acc = a;
+                state = cand;
+                lo = t;
+            } else {
+                hi = t;
+            }
+            t = 0.5 * (lo + hi);
+        }
+        // If no secondary probe passed, re-probe the restored baseline so
+        // the returned state matches `keep`.
+        if keep == base {
+            let (a, cand) = probe(&keep)?;
+            acc = a;
+            state = cand;
+        }
+    }
+
+    // -- synthesized speedups on the proxy's layer table --------------------
+    let layers: Vec<(String, u64, f64)> = wps
+        .iter()
+        .zip(&keep)
+        .filter(|(p, _)| p.layer_type == "conv")
+        .map(|(p, &a)| (p.layer.clone(), 2 * p.macs, a))
+        .collect();
+    let speedup = network_speedup(&cfg.hw, &layers);
+
+    Ok(HwAwareResult {
+        keep,
+        restored,
+        dense_accuracy: dense_acc,
+        accuracy: acc,
+        speedup,
+        probes,
+        state,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keep_schedule_monotone_and_bounded() {
+        let init = vec![1.0, 1.0, 1.0];
+        let share = vec![1.0, 0.7, 0.1];
+        let conv = vec![true, true, false];
+        let k0 = keep_at(0.0, &init, &share, &conv, 0.02, 0.5);
+        assert!(k0.iter().all(|&k| (k - 1.0).abs() < 1e-9));
+        let k1 = keep_at(1.0, &init, &share, &conv, 0.02, 0.5);
+        assert!((k1[0] - 0.02).abs() < 1e-9); // full-rate layer hits min
+        assert!(k1[1] > k1[0]); // lower compute share → gentler pruning
+        assert!(k1[2] > k1[1]); // fc coupled at 0.5 rate < conv 0.7
+        for s in [0.2, 0.5, 0.8] {
+            let k = keep_at(s, &init, &share, &conv, 0.02, 0.5);
+            for (a, b) in k.iter().zip(&k1) {
+                assert!(a >= b);
+            }
+        }
+    }
+
+    #[test]
+    fn keep_schedule_respects_init() {
+        let init = vec![0.5];
+        let k = keep_at(0.0, &init, &[1.0], &[true], 0.02, 0.5);
+        assert!((k[0] - 0.5).abs() < 1e-9);
+    }
+}

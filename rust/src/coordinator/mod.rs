@@ -1,0 +1,28 @@
+//! L3 coordinator: the paper's algorithmic contribution as an orchestrator
+//! over the AOT compute artifacts.
+//!
+//! * [`trainer`] — generic (dense / masked / regularized) training driver:
+//!   feeds synthetic batches through the train artifact, tracks loss/acc.
+//! * [`admm`] — the ADMM engine of §3: W/Z/U state transitions,
+//!   subproblem-1 scheduling, analytic subproblem-2 projections, dual
+//!   updates, convergence tracking. Both the pruning and quantization
+//!   constraint sets are supported.
+//! * [`pipeline`] — the joint prune→quantize pipeline of Fig. 2, ending in
+//!   a [`checkpoint::CompressedModel`].
+//! * [`hw_aware`] — the hardware-aware compression algorithm of Fig. 5:
+//!   compute-proportional α reduction under an accuracy constraint
+//!   (binary search) + break-even restoration.
+//! * [`checkpoint`] — binary save/load of train state and compressed
+//!   models (level codes + relative indices + per-layer scales).
+
+pub mod admm;
+pub mod checkpoint;
+pub mod hw_aware;
+pub mod pipeline;
+pub mod trainer;
+
+pub use admm::{AdmmConfig, AdmmPhase, AdmmRunner, Constraint};
+pub use checkpoint::CompressedModel;
+pub use hw_aware::{HwAwareConfig, HwAwareResult};
+pub use pipeline::{CompressReport, PipelineConfig};
+pub use trainer::{RunLog, TrainConfig, Trainer};

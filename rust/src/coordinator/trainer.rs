@@ -1,0 +1,174 @@
+//! Generic training driver over the train artifact.
+//!
+//! One loop serves four roles, selected purely by `TrainState` contents
+//! and hyper-parameters (ρ = 0 / λ = 0 degrade the artifact to plain
+//! training):
+//! * dense pretraining (ones masks, ρ = 0),
+//! * ADMM subproblem 1 (ρ > 0, Z/U live),
+//! * masked retraining after hard pruning (masks frozen, ρ = 0),
+//! * L1-regularized training for the Wen-style baseline (λ > 0).
+
+use crate::data::{Dataset, Split};
+use crate::metrics::EvalStats;
+use crate::runtime::{Hyper, ModelSession, TrainState};
+
+/// Training-phase configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub steps: u64,
+    pub lr: f32,
+    pub l1_lambda: f32,
+    /// Evaluate every this many steps (0 = only at the end).
+    pub eval_every: u64,
+    pub eval_batches: u64,
+    /// Print progress lines.
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 400,
+            lr: 1e-3,
+            l1_lambda: 0.0,
+            eval_every: 0,
+            eval_batches: 4,
+            verbose: false,
+        }
+    }
+}
+
+/// Row of the run log: step, loss, batch accuracy, optional eval accuracy.
+#[derive(Clone, Copy, Debug)]
+pub struct LogRow {
+    pub step: u64,
+    pub loss: f64,
+    pub acc: f64,
+    pub eval_acc: Option<f64>,
+}
+
+/// Append-only metrics log for a run (examples dump it to CSV).
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub rows: Vec<LogRow>,
+}
+
+impl RunLog {
+    pub fn push(&mut self, row: LogRow) {
+        self.rows.push(row);
+    }
+
+    pub fn last_loss(&self) -> Option<f64> {
+        self.rows.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the final `n` logged steps (noise-robust readout).
+    pub fn tail_loss(&self, n: usize) -> Option<f64> {
+        if self.rows.is_empty() {
+            return None;
+        }
+        let tail = &self.rows[self.rows.len().saturating_sub(n)..];
+        Some(tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,loss,acc,eval_acc\n");
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{},{},{},{}\n",
+                r.step,
+                r.loss,
+                r.acc,
+                r.eval_acc.map(|a| a.to_string()).unwrap_or_default()
+            ));
+        }
+        s
+    }
+}
+
+/// The driver. Stateless besides a batch counter so successive phases
+/// see fresh data.
+pub struct Trainer<'s, 'r> {
+    pub sess: &'s ModelSession<'r>,
+    pub data: &'s dyn Dataset,
+    batch_counter: u64,
+}
+
+impl<'s, 'r> Trainer<'s, 'r> {
+    pub fn new(sess: &'s ModelSession<'r>, data: &'s dyn Dataset) -> Self {
+        Trainer { sess, data, batch_counter: 0 }
+    }
+
+    /// Run `cfg.steps` training steps, mutating `st`; returns the log.
+    pub fn run(
+        &mut self,
+        st: &mut TrainState,
+        cfg: &TrainConfig,
+    ) -> crate::Result<RunLog> {
+        let hyper = Hyper { lr: cfg.lr, l1_lambda: cfg.l1_lambda };
+        let b = self.sess.entry.train_batch;
+        let mut log = RunLog::default();
+        for s in 0..cfg.steps {
+            let batch = self.data.batch(Split::Train, self.batch_counter, b);
+            self.batch_counter += 1;
+            let stats = self.sess.train_step(st, &hyper, &batch)?;
+            let eval_acc = if cfg.eval_every > 0 && (s + 1) % cfg.eval_every == 0 {
+                let e = self.sess.evaluate(st, self.data, cfg.eval_batches)?;
+                Some(e.accuracy())
+            } else {
+                None
+            };
+            if cfg.verbose && (s % 50 == 0 || eval_acc.is_some()) {
+                eprintln!(
+                    "    step {:>5}  loss {:.4}  acc {:.3}{}",
+                    s,
+                    stats.loss,
+                    stats.acc,
+                    eval_acc
+                        .map(|a| format!("  eval {a:.3}"))
+                        .unwrap_or_default()
+                );
+            }
+            log.push(LogRow {
+                step: s,
+                loss: stats.loss as f64,
+                acc: stats.acc as f64,
+                eval_acc,
+            });
+        }
+        Ok(log)
+    }
+
+    /// Full evaluation pass.
+    pub fn evaluate(
+        &self,
+        st: &TrainState,
+        batches: u64,
+    ) -> crate::Result<EvalStats> {
+        self.sess.evaluate(st, self.data, batches)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runlog_tail_and_csv() {
+        let mut log = RunLog::default();
+        for i in 0..10 {
+            log.push(LogRow {
+                step: i,
+                loss: 10.0 - i as f64,
+                acc: 0.1 * i as f64,
+                eval_acc: if i == 9 { Some(0.9) } else { None },
+            });
+        }
+        assert_eq!(log.last_loss(), Some(1.0));
+        assert!((log.tail_loss(2).unwrap() - 1.5).abs() < 1e-12);
+        let csv = log.to_csv();
+        assert!(csv.starts_with("step,loss"));
+        assert_eq!(csv.lines().count(), 11);
+        assert!(csv.lines().last().unwrap().ends_with("0.9"));
+    }
+}

@@ -1,0 +1,366 @@
+//! Deterministic synthetic datasets standing in for MNIST / ImageNet.
+//!
+//! The paper's compression results depend on *over-parameterization
+//! relative to task complexity*, not on pixel provenance (DESIGN.md §5),
+//! so each dataset is a fixed set of class templates plus controlled
+//! nuisance factors (noise, shift, scale). Difficulty is tunable: more
+//! noise / more classes → less redundancy → lower achievable pruning,
+//! which is exactly the axis the accuracy-vs-compression experiments
+//! sweep.
+//!
+//! * [`SyntheticDigits`] — 28×28×1, 10 classes of procedurally drawn
+//!   digit-like glyphs (strokes on a grid), the MNIST stand-in.
+//! * [`SyntheticImages`] — H×W×3 Gabor-texture class mixtures, the
+//!   ImageNet-proxy for the 32×32 proxy networks.
+
+use crate::util::Rng;
+
+/// A labelled batch in the NHWC f32 layout the artifacts expect.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    /// int32 class ids (as the artifact's i32 input).
+    pub y: Vec<i32>,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+}
+
+impl Batch {
+    pub fn x_shape(&self) -> Vec<usize> {
+        let mut s = vec![self.batch];
+        s.extend_from_slice(&self.input_shape);
+        s
+    }
+}
+
+/// Common interface for the synthetic datasets.
+pub trait Dataset {
+    fn input_shape(&self) -> Vec<usize>;
+    fn n_classes(&self) -> usize;
+    /// Deterministic batch for a given (split, index) pair.
+    fn batch(&self, split: Split, index: u64, batch: usize) -> Batch;
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+impl Split {
+    fn seed_tag(self) -> u64 {
+        match self {
+            Split::Train => 0x7261696e,
+            Split::Test => 0x74657374,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// digits
+// ---------------------------------------------------------------------
+
+/// Procedural digit-like glyphs on a 28×28 canvas.
+///
+/// Each class is a fixed stroke pattern (template) rendered with
+/// per-sample jitter: sub-pixel translation, amplitude scaling, and
+/// additive Gaussian noise of configurable strength.
+#[derive(Clone, Debug)]
+pub struct SyntheticDigits {
+    pub noise: f32,
+    pub max_shift: i32,
+    templates: Vec<[f32; 28 * 28]>,
+}
+
+/// Stroke lists (x0, y0, x1, y1 on a 0..=6 grid) per class — crude
+/// seven-segment-style digits, distinct enough to be separable and
+/// redundant enough to prune hard.
+const STROKES: [&[(i32, i32, i32, i32)]; 10] = [
+    &[(1, 1, 5, 1), (5, 1, 5, 5), (5, 5, 1, 5), (1, 5, 1, 1)],            // 0
+    &[(3, 0, 3, 6)],                                                       // 1
+    &[(1, 1, 5, 1), (5, 1, 5, 3), (5, 3, 1, 3), (1, 3, 1, 5), (1, 5, 5, 5)], // 2
+    &[(1, 1, 5, 1), (5, 1, 5, 5), (1, 3, 5, 3), (1, 5, 5, 5)],            // 3
+    &[(1, 1, 1, 3), (1, 3, 5, 3), (5, 1, 5, 6)],                          // 4
+    &[(5, 1, 1, 1), (1, 1, 1, 3), (1, 3, 5, 3), (5, 3, 5, 5), (5, 5, 1, 5)], // 5
+    &[(5, 1, 1, 1), (1, 1, 1, 5), (1, 5, 5, 5), (5, 5, 5, 3), (5, 3, 1, 3)], // 6
+    &[(1, 1, 5, 1), (5, 1, 2, 6)],                                        // 7
+    &[(1, 1, 5, 1), (5, 1, 5, 5), (5, 5, 1, 5), (1, 5, 1, 1), (1, 3, 5, 3)], // 8
+    &[(5, 3, 1, 3), (1, 3, 1, 1), (1, 1, 5, 1), (5, 1, 5, 5)],            // 9
+];
+
+fn draw_stroke(img: &mut [f32; 28 * 28], x0: i32, y0: i32, x1: i32, y1: i32) {
+    // strokes on the 0..=6 grid map to pixel coords 2 + 4*g; thick lines.
+    let (px0, py0) = (2 + 4 * x0, 2 + 4 * y0);
+    let (px1, py1) = (2 + 4 * x1, 2 + 4 * y1);
+    let steps = (px1 - px0).abs().max((py1 - py0).abs()).max(1);
+    for s in 0..=steps {
+        let t = s as f32 / steps as f32;
+        let x = px0 as f32 + t * (px1 - px0) as f32;
+        let y = py0 as f32 + t * (py1 - py0) as f32;
+        for dy in -1..=1 {
+            for dx in -1..=1 {
+                let (xi, yi) = (x as i32 + dx, y as i32 + dy);
+                if (0..28).contains(&xi) && (0..28).contains(&yi) {
+                    let w = if dx == 0 && dy == 0 { 1.0 } else { 0.6 };
+                    let p = &mut img[(yi * 28 + xi) as usize];
+                    *p = p.max(w);
+                }
+            }
+        }
+    }
+}
+
+impl SyntheticDigits {
+    pub fn new(noise: f32, max_shift: i32) -> Self {
+        let mut templates = Vec::with_capacity(10);
+        for strokes in STROKES {
+            let mut img = [0.0f32; 28 * 28];
+            for &(x0, y0, x1, y1) in strokes {
+                draw_stroke(&mut img, x0, y0, x1, y1);
+            }
+            templates.push(img);
+        }
+        SyntheticDigits { noise, max_shift, templates }
+    }
+
+    /// The standard difficulty used by the experiments.
+    pub fn standard() -> Self {
+        SyntheticDigits::new(0.35, 2)
+    }
+
+    fn render(&self, class: usize, rng: &mut Rng) -> [f32; 28 * 28] {
+        let tpl = &self.templates[class];
+        let dx = rng.below(2 * self.max_shift as usize + 1) as i32 - self.max_shift;
+        let dy = rng.below(2 * self.max_shift as usize + 1) as i32 - self.max_shift;
+        let amp = 0.8 + 0.4 * rng.uniform() as f32;
+        let mut img = [0.0f32; 28 * 28];
+        for y in 0..28i32 {
+            for x in 0..28i32 {
+                let (sx, sy) = (x - dx, y - dy);
+                let v = if (0..28).contains(&sx) && (0..28).contains(&sy) {
+                    tpl[(sy * 28 + sx) as usize]
+                } else {
+                    0.0
+                };
+                img[(y * 28 + x) as usize] =
+                    v * amp + self.noise * rng.normal() as f32;
+            }
+        }
+        img
+    }
+}
+
+impl Dataset for SyntheticDigits {
+    fn input_shape(&self) -> Vec<usize> {
+        vec![28, 28, 1]
+    }
+
+    fn n_classes(&self) -> usize {
+        10
+    }
+
+    fn batch(&self, split: Split, index: u64, batch: usize) -> Batch {
+        let mut rng = Rng::new(split.seed_tag() ^ index.wrapping_mul(0x9E37));
+        let mut x = Vec::with_capacity(batch * 28 * 28);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let class = rng.below(10);
+            x.extend_from_slice(&self.render(class, &mut rng));
+            y.push(class as i32);
+        }
+        Batch { x, y, batch, input_shape: self.input_shape() }
+    }
+}
+
+// ---------------------------------------------------------------------
+// images
+// ---------------------------------------------------------------------
+
+/// Gabor-texture class mixtures on an H×W×3 canvas — the ImageNet proxy.
+///
+/// Each class is a fixed set of oriented sinusoid components with
+/// class-specific frequencies/colors; samples draw random phases and
+/// additive noise. Texture classification needs genuine conv features
+/// (orientation/frequency selectivity), unlike blob centroids.
+#[derive(Clone, Debug)]
+pub struct SyntheticImages {
+    pub hw: usize,
+    pub n_classes: usize,
+    pub noise: f32,
+    /// (freq_x, freq_y, color weights) per component per class.
+    components: Vec<Vec<(f32, f32, [f32; 3])>>,
+}
+
+impl SyntheticImages {
+    pub fn new(hw: usize, n_classes: usize, noise: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let components = (0..n_classes)
+            .map(|_| {
+                (0..3)
+                    .map(|_| {
+                        let theta = rng.uniform() * std::f64::consts::PI;
+                        let freq = 2.0 + 6.0 * rng.uniform();
+                        let (s, c) = theta.sin_cos();
+                        let color = [
+                            rng.uniform() as f32,
+                            rng.uniform() as f32,
+                            rng.uniform() as f32,
+                        ];
+                        ((freq * c) as f32, (freq * s) as f32, color)
+                    })
+                    .collect()
+            })
+            .collect();
+        SyntheticImages { hw, n_classes, noise, components }
+    }
+
+    /// The standard 32×32×3, 10-class difficulty used by the proxies.
+    pub fn standard() -> Self {
+        SyntheticImages::new(32, 10, 0.25, 0xC1A55)
+    }
+}
+
+impl Dataset for SyntheticImages {
+    fn input_shape(&self) -> Vec<usize> {
+        vec![self.hw, self.hw, 3]
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn batch(&self, split: Split, index: u64, batch: usize) -> Batch {
+        let mut rng = Rng::new(
+            split.seed_tag() ^ index.wrapping_mul(0x51_7CC1) ^ 0xA11CE,
+        );
+        let hw = self.hw;
+        let mut x = Vec::with_capacity(batch * hw * hw * 3);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let class = rng.below(self.n_classes);
+            let phases: Vec<f32> = (0..self.components[class].len())
+                .map(|_| (rng.uniform() * std::f64::consts::TAU) as f32)
+                .collect();
+            for yi in 0..hw {
+                for xi in 0..hw {
+                    let (u, v) = (
+                        xi as f32 / hw as f32 * std::f32::consts::TAU,
+                        yi as f32 / hw as f32 * std::f32::consts::TAU,
+                    );
+                    let mut px = [0.0f32; 3];
+                    for ((fx, fy, color), &phase) in
+                        self.components[class].iter().zip(&phases)
+                    {
+                        let s = (fx * u + fy * v + phase).sin();
+                        for (p, c) in px.iter_mut().zip(color) {
+                            *p += s * c;
+                        }
+                    }
+                    for p in px {
+                        x.push(p + self.noise * rng.normal() as f32);
+                    }
+                }
+            }
+            y.push(class as i32);
+        }
+        Batch { x, y, batch, input_shape: self.input_shape() }
+    }
+}
+
+/// Pick the dataset matching a proxy model's input shape.
+pub fn for_input_shape(shape: &[usize]) -> Box<dyn Dataset> {
+    match shape {
+        [28, 28, 1] | [784] => Box::new(SyntheticDigits::standard()),
+        [h, w, 3] if h == w => {
+            Box::new(SyntheticImages::new(*h, 10, 0.25, 0xC1A55))
+        }
+        other => panic!("no synthetic dataset for input shape {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_deterministic() {
+        let ds = SyntheticDigits::standard();
+        let a = ds.batch(Split::Train, 3, 8);
+        let b = ds.batch(Split::Train, 3, 8);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn digits_batches_differ_by_index_and_split() {
+        let ds = SyntheticDigits::standard();
+        let a = ds.batch(Split::Train, 0, 8);
+        let b = ds.batch(Split::Train, 1, 8);
+        let c = ds.batch(Split::Test, 0, 8);
+        assert_ne!(a.x, b.x);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn digits_shapes_and_labels() {
+        let ds = SyntheticDigits::standard();
+        let b = ds.batch(Split::Train, 0, 16);
+        assert_eq!(b.x.len(), 16 * 28 * 28);
+        assert_eq!(b.x_shape(), vec![16, 28, 28, 1]);
+        assert!(b.y.iter().all(|&y| (0..10).contains(&y)));
+        // all classes eventually appear
+        let big = ds.batch(Split::Train, 0, 512);
+        for c in 0..10 {
+            assert!(big.y.contains(&c), "class {c} missing");
+        }
+    }
+
+    #[test]
+    fn digit_classes_are_distinct() {
+        // noiseless renders of different classes differ substantially
+        let ds = SyntheticDigits::new(0.0, 0);
+        let mut renders = Vec::new();
+        for c in 0..10 {
+            let mut rng = Rng::new(c as u64);
+            renders.push(ds.render(c, &mut rng));
+        }
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                let d: f32 = renders[i]
+                    .iter()
+                    .zip(&renders[j])
+                    .map(|(a, b)| (a - b).abs())
+                    .sum();
+                assert!(d > 10.0, "classes {i},{j} too similar (d={d})");
+            }
+        }
+    }
+
+    #[test]
+    fn images_shapes() {
+        let ds = SyntheticImages::standard();
+        let b = ds.batch(Split::Test, 7, 4);
+        assert_eq!(b.x.len(), 4 * 32 * 32 * 3);
+        assert_eq!(b.x_shape(), vec![4, 32, 32, 3]);
+    }
+
+    #[test]
+    fn images_deterministic_and_split_dependent() {
+        let ds = SyntheticImages::standard();
+        assert_eq!(ds.batch(Split::Train, 5, 2).x, ds.batch(Split::Train, 5, 2).x);
+        assert_ne!(ds.batch(Split::Train, 5, 2).x, ds.batch(Split::Test, 5, 2).x);
+    }
+
+    #[test]
+    fn for_input_shape_dispatch() {
+        assert_eq!(for_input_shape(&[28, 28, 1]).n_classes(), 10);
+        assert_eq!(for_input_shape(&[784]).input_shape(), vec![28, 28, 1]);
+        assert_eq!(for_input_shape(&[32, 32, 3]).input_shape(), vec![32, 32, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_shape_panics() {
+        for_input_shape(&[11, 7, 2]);
+    }
+}

@@ -1,0 +1,50 @@
+//! # ADMM-NN — algorithm-hardware co-design of DNNs via ADMM
+//!
+//! Rust coordinator (L3) for the three-layer reproduction of
+//! *ADMM-NN: An Algorithm-Hardware Co-Design Framework of DNNs Using
+//! Alternating Direction Method of Multipliers* (Ren et al., 2018).
+//!
+//! The compute graphs (L2: JAX models; L1: Pallas kernels) are AOT-lowered
+//! once by `python/compile/aot.py` into `artifacts/*.hlo.txt`; this crate
+//! loads them through the PJRT C API ([`runtime`]) and owns everything else:
+//!
+//! * [`coordinator`] — the ADMM engine (W/Z/U state, subproblem scheduling,
+//!   dual updates), the joint prune→quantize pipeline (paper Fig. 2), and
+//!   the hardware-aware compression algorithm (paper Fig. 5).
+//! * [`projection`] — host-side Euclidean projections onto the paper's
+//!   constraint sets (cardinality / equal-interval levels).
+//! * [`quantize`] — per-layer interval search (binary search on q_i) and
+//!   bit-width selection (paper §3.4.2).
+//! * [`sparsity`] — compressed weight storage (CSR, Han-style relative
+//!   index) and the model-size accounting behind Tables 5–6.
+//! * [`hwmodel`] — the PE-array + SRAM accelerator model that yields the
+//!   break-even pruning ratio (paper Fig. 4) and synthesized speedups
+//!   (paper Table 9).
+//! * [`models`] — exact layer descriptors for LeNet-5 / AlexNet / VGG-16 /
+//!   ResNet-50 (Table 7/8 arithmetic) plus the trainable proxy topologies.
+//! * [`baselines`] — iterative magnitude pruning (Han et al.), L1
+//!   regularization pruning (Wen et al. style), projection-only, and
+//!   quantization-only comparators.
+//! * [`data`] — deterministic synthetic datasets (MNIST-like digits,
+//!   ImageNet-proxy textures) standing in for the paper's corpora.
+//! * [`report`] — regenerates every table and figure of the evaluation.
+//!
+//! Python never runs at coordination time: after `make artifacts` the
+//! binary is self-contained.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod hwmodel;
+pub mod metrics;
+pub mod models;
+pub mod projection;
+pub mod quantize;
+pub mod report;
+pub mod runtime;
+pub mod sparsity;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,207 @@
+//! `admm-nn` — CLI launcher for the ADMM-NN reproduction.
+//!
+//! Subcommands map to the paper's workflow:
+//! * `train`      — dense (pre)training of a proxy model.
+//! * `compress`   — the joint prune→quantize pipeline (Fig. 2).
+//! * `hw-analyze` — break-even sweep of the hardware model (Fig. 4) +
+//!                  synthesized Table-9 speedups.
+//! * `report`     — regenerate any table/figure of the evaluation.
+//!
+//! All compute runs through AOT artifacts (`make artifacts` first);
+//! python is never invoked. Argument parsing is in-tree ([`util::cli`])
+//! — this repo builds offline with no clap dependency.
+
+use admm_nn::coordinator::{
+    pipeline, AdmmConfig, PipelineConfig, TrainConfig, Trainer,
+};
+use admm_nn::data;
+use admm_nn::hwmodel::HwConfig;
+use admm_nn::report::{self, MeasuredRun};
+use admm_nn::runtime::{Runtime, TrainState};
+use admm_nn::util::cli::Args;
+
+const USAGE: &str = "\
+admm-nn — ADMM-NN algorithm-hardware co-design framework
+
+USAGE: admm-nn [--artifacts DIR] [--results DIR] <command> [options]
+
+COMMANDS:
+  train       --model M --steps N [--lr F] [--seed N]
+  compress    --model M [--prune-ratio F] [--bits N] [--pretrain-steps N]
+              [--admm-iters N] [--steps-per-iter N] [--retrain-steps N]
+              [--seed N] [--save PATH]
+  hw-analyze
+  report      [--table N] [--fig 4] [--onchip] [--all]
+
+Models: mlp, lenet5, alexnet_proxy, vgg_proxy, resnet_proxy
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> admm_nn::Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1));
+    let artifacts = args.opt_str("artifacts").unwrap_or_else(|| "artifacts".into());
+    let results = args.opt_str("results").unwrap_or_else(|| "results".into());
+    let cmd = match args.next_positional() {
+        Some(c) => c,
+        None => {
+            eprint!("{USAGE}");
+            return Ok(());
+        }
+    };
+
+    match cmd.as_str() {
+        "train" => {
+            let model = args.opt_str("model").unwrap_or_else(|| "mlp".into());
+            let steps: u64 = args.opt_parse("steps")?.unwrap_or(600);
+            let lr: f32 = args.opt_parse("lr")?.unwrap_or(1e-3);
+            let seed: u64 = args.opt_parse("seed")?.unwrap_or(0);
+            args.finish()?;
+
+            let rt = Runtime::load(&artifacts)?;
+            eprintln!("platform: {}", rt.platform());
+            let sess = rt.model(&model)?;
+            let ds = data::for_input_shape(&sess.entry.input_shape);
+            let mut st = TrainState::init(&sess.entry, seed);
+            let mut trainer = Trainer::new(&sess, ds.as_ref());
+            let log = trainer.run(&mut st, &TrainConfig {
+                steps,
+                lr,
+                eval_every: (steps / 4).max(1),
+                eval_batches: 8,
+                verbose: true,
+                ..Default::default()
+            })?;
+            let eval = sess.evaluate(&st, ds.as_ref(), 16)?;
+            println!(
+                "model={model} steps={steps} final_loss={:.4} eval_acc={:.4}",
+                log.tail_loss(20).unwrap_or(f64::NAN),
+                eval.accuracy()
+            );
+        }
+        "compress" => {
+            let model = args.opt_str("model").unwrap_or_else(|| "mlp".into());
+            let prune_ratio: f64 = args.opt_parse("prune-ratio")?.unwrap_or(20.0);
+            let bits: u32 = args.opt_parse("bits")?.unwrap_or(0);
+            let pretrain_steps: u64 = args.opt_parse("pretrain-steps")?.unwrap_or(600);
+            let admm_iters: usize = args.opt_parse("admm-iters")?.unwrap_or(4);
+            let steps_per_iter: u64 = args.opt_parse("steps-per-iter")?.unwrap_or(120);
+            let retrain_steps: u64 = args.opt_parse("retrain-steps")?.unwrap_or(300);
+            let seed: u64 = args.opt_parse("seed")?.unwrap_or(0);
+            let save = args.opt_str("save");
+            args.finish()?;
+
+            let rt = Runtime::load(&artifacts)?;
+            let sess = rt.model(&model)?;
+            let ds = data::for_input_shape(&sess.entry.input_shape);
+            let mut st = TrainState::init(&sess.entry, seed);
+            eprintln!("[1/2] dense pretraining ({pretrain_steps} steps)");
+            let mut trainer = Trainer::new(&sess, ds.as_ref());
+            trainer.run(&mut st, &TrainConfig {
+                steps: pretrain_steps,
+                verbose: true,
+                ..Default::default()
+            })?;
+            eprintln!("[2/2] joint ADMM compression (target {prune_ratio}x)");
+            let n_w = sess.entry.n_weights();
+            let keep = vec![1.0 / prune_ratio; n_w];
+            let t0 = std::time::Instant::now();
+            let cfg = PipelineConfig {
+                prune_keep: keep,
+                quant_bits: if bits > 0 { Some(vec![bits; n_w]) } else { None },
+                admm: AdmmConfig {
+                    iters: admm_iters,
+                    steps_per_iter,
+                    verbose: true,
+                    ..Default::default()
+                },
+                retrain_steps,
+                verbose: true,
+                ..Default::default()
+            };
+            let rep = pipeline::run_pipeline(&sess, ds.as_ref(), &mut st, &cfg)?;
+            let size = rep.model.size_report(sess.entry.total_weight_count() as u64);
+            println!(
+                "dense_acc={:.4} pruned_acc={:.4} final_acc={:.4} prune={:.1}x \
+                 data={} ({:.0}x) model={} ({:.0}x)",
+                rep.dense_acc, rep.pruned_acc, rep.final_acc,
+                rep.overall_prune_ratio,
+                admm_nn::util::fmt_bytes(size.data_bytes()),
+                size.data_compress_ratio(),
+                admm_nn::util::fmt_bytes(size.model_bytes()),
+                size.model_compress_ratio(),
+            );
+            let run = MeasuredRun {
+                model: model.clone(),
+                method: format!("admm joint {prune_ratio}x"),
+                dense_accuracy: rep.dense_acc,
+                accuracy: rep.final_acc,
+                prune_ratio: rep.overall_prune_ratio,
+                layer_keep: rep.layer_keep.clone(),
+                bits: rep.quant.iter().map(|q| q.bits).collect(),
+                data_bytes: size.data_bytes(),
+                model_bytes: size.model_bytes(),
+                wall_s: t0.elapsed().as_secs_f64(),
+            };
+            run.save(std::path::Path::new(&results))?;
+            if let Some(path) = save {
+                rep.model.save(&path)?;
+                eprintln!("compressed model written to {path}");
+            }
+        }
+        "hw-analyze" => {
+            args.finish()?;
+            let hw = HwConfig::default();
+            println!("{}", report::fig4(&hw));
+            println!("{}", report::table9(&hw));
+        }
+        "report" => {
+            let table: Option<u32> = args.opt_parse("table")?;
+            let fig: Option<u32> = args.opt_parse("fig")?;
+            let onchip = args.flag("onchip");
+            let all = args.flag("all");
+            args.finish()?;
+
+            let runs = MeasuredRun::load_all(std::path::Path::new(&results));
+            let hw = HwConfig::default();
+            let mut printed = false;
+            let tables: Vec<u32> = if all { (1..=9).collect() } else { table.into_iter().collect() };
+            for t in tables {
+                printed = true;
+                match t {
+                    1 => println!("{}", report::table_pruning("lenet5", &runs)),
+                    2 => println!("{}", report::table_pruning("alexnet", &runs)),
+                    3 => println!("{}", report::table_pruning("vgg16", &runs)),
+                    4 => println!("{}", report::table_pruning("resnet50", &runs)),
+                    5 => println!("{}", report::table_model_size("lenet5", &runs)),
+                    6 => println!("{}", report::table_model_size("alexnet", &runs)),
+                    7 => println!("{}", report::table7(&runs)),
+                    8 => println!("{}", report::table8()),
+                    9 => println!("{}", report::table9(&hw)),
+                    other => eprintln!("no table {other}"),
+                }
+            }
+            if fig == Some(4) || all {
+                printed = true;
+                println!("{}", report::fig4(&hw));
+            }
+            if onchip || all {
+                printed = true;
+                println!("{}", report::onchip());
+            }
+            if !printed {
+                eprintln!("nothing selected; use --table N, --fig 4, --onchip or --all");
+            }
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,285 @@
+//! Per-layer compression profiles from the paper's evaluation.
+//!
+//! A profile is the vector of per-layer keep-ratios α_i (fraction of
+//! weights retained) plus quantization bit widths. These are the *inputs*
+//! the paper's tables are computed from: our own ADMM runs on the proxy
+//! networks produce achieved α values (recorded in EXPERIMENTS.md), while
+//! the report harness evaluates the paper's exact α targets through our
+//! descriptors + hardware model to regenerate Tables 7–9.
+//!
+//! Sources: Table 7 (layer-wise ADMM pruning), Table 8 (computation-focused
+//! run, MAC counts → α), Table 9 (hardware-aware run with CONV1 restored).
+
+use super::NetDesc;
+
+/// One named compression configuration over a network's layers.
+#[derive(Clone, Debug)]
+pub struct PruneProfile {
+    pub name: String,
+    /// Per-layer keep ratio α_i, aligned with `NetDesc::layers`.
+    pub keep: Vec<f64>,
+    /// Per-layer quantization bits (32 = uncompressed float).
+    pub bits: Vec<u32>,
+    /// Reported accuracy degradation (percentage points) of this config.
+    pub accuracy_drop: f64,
+}
+
+impl PruneProfile {
+    pub fn new(name: &str, keep: Vec<f64>, bits: Vec<u32>,
+               accuracy_drop: f64) -> Self {
+        assert_eq!(keep.len(), bits.len());
+        PruneProfile { name: name.into(), keep, bits, accuracy_drop }
+    }
+
+    /// Uniform-bits convenience constructor.
+    pub fn with_uniform_bits(name: &str, keep: Vec<f64>, bits: u32,
+                             accuracy_drop: f64) -> Self {
+        let n = keep.len();
+        Self::new(name, keep, vec![bits; n], accuracy_drop)
+    }
+
+    /// Overall pruning ratio (total weights / kept weights) over `net`.
+    pub fn overall_prune_ratio(&self, net: &NetDesc) -> f64 {
+        let total: f64 = net.layers.iter().map(|l| l.weights as f64).sum();
+        let kept: f64 = net
+            .layers
+            .iter()
+            .zip(&self.keep)
+            .map(|(l, a)| l.weights as f64 * a)
+            .sum();
+        total / kept
+    }
+
+    /// Pruning ratio restricted to CONV layers (Table 9's "Conv1-5" column).
+    pub fn conv_prune_ratio(&self, net: &NetDesc) -> f64 {
+        let mut total = 0.0;
+        let mut kept = 0.0;
+        for (l, a) in net.layers.iter().zip(&self.keep) {
+            if l.kind == super::LayerKind::Conv {
+                total += l.weights as f64;
+                kept += l.weights as f64 * a;
+            }
+        }
+        total / kept
+    }
+
+    /// Remaining MAC operations (paper convention, 2×MAC) per layer.
+    pub fn remaining_ops(&self, net: &NetDesc) -> Vec<f64> {
+        net.layers
+            .iter()
+            .zip(&self.keep)
+            .map(|(l, a)| l.ops() as f64 * a)
+            .collect()
+    }
+}
+
+/// AlexNet, Table 7: the model-size-focused ADMM run (no accuracy loss).
+/// conv1 81%, conv2-5 ≈20%, fc1 2.8%, fc2 5.9%, fc3 9.3% → 4.76% overall.
+pub fn alexnet_ours_table7() -> PruneProfile {
+    PruneProfile::with_uniform_bits(
+        "ADMM-NN (Table 7)",
+        vec![0.81, 0.20, 0.19, 0.20, 0.20, 0.028, 0.059, 0.093],
+        32,
+        0.0,
+    )
+}
+
+/// AlexNet, Table 8 "Ours": the computation-focused run. α derived from
+/// the published MAC counts (e.g. conv2: 31M of 448M ops → α=0.069).
+pub fn alexnet_ours_table8() -> PruneProfile {
+    PruneProfile::new(
+        "ADMM-NN (Table 8)",
+        vec![
+            133.0 / 211.0,
+            31.0 / 448.0,
+            18.0 / 299.0,
+            16.0 / 224.0,
+            11.0 / 150.0,
+            7.0 / 75.0,
+            3.0 / 34.0,
+            2.0 / 8.0,
+        ],
+        // Table 8 MAC×bits row: 931/133 = 7 bits conv1; 155/31 = 5 bits ...
+        vec![7, 5, 5, 5, 5, 3, 3, 3],
+        0.0,
+    )
+}
+
+/// Han et al. [24] iterative pruning, Table 8 row.
+pub fn alexnet_han() -> PruneProfile {
+    PruneProfile::new(
+        "Han [24]",
+        vec![
+            177.0 / 211.0,
+            170.0 / 448.0,
+            105.0 / 299.0,
+            83.0 / 224.0,
+            56.0 / 150.0,
+            7.0 / 75.0,
+            3.0 / 34.0,
+            2.0 / 8.0,
+        ],
+        // Deep compression: 8-bit conv, 5-bit fc.
+        vec![8, 8, 8, 8, 8, 5, 5, 5],
+        0.0,
+    )
+}
+
+/// Mao et al. [36] (structured-sparsity exploration), Table 8 row.
+pub fn alexnet_mao() -> PruneProfile {
+    PruneProfile::with_uniform_bits(
+        "Mao [36]",
+        vec![
+            175.0 / 211.0,
+            116.0 / 448.0,
+            67.0 / 299.0,
+            52.0 / 224.0,
+            35.0 / 150.0,
+            5.0 / 75.0,
+            2.0 / 34.0,
+            1.5 / 8.0,
+        ],
+        32,
+        0.0,
+    )
+}
+
+/// Wen et al. [53] (SSL, L1 regularization — conv only), Table 8 row.
+pub fn alexnet_wen() -> PruneProfile {
+    PruneProfile::with_uniform_bits(
+        "Wen [53]",
+        vec![
+            180.0 / 211.0,
+            107.0 / 448.0,
+            44.0 / 299.0,
+            42.0 / 224.0,
+            36.0 / 150.0,
+            1.0,
+            1.0,
+            1.0,
+        ],
+        32,
+        0.0,
+    )
+}
+
+/// Table 9 "Ours1": hardware-aware run — CONV1 restored to dense (its
+/// achievable pruning ratio is below break-even), CONV2-5 at the Table-8
+/// ratios, FC pruned for accuracy maintenance.
+pub fn alexnet_ours1_table9() -> PruneProfile {
+    PruneProfile::with_uniform_bits(
+        "ADMM-NN hw-aware (Ours1)",
+        vec![
+            1.0,
+            31.0 / 448.0,
+            18.0 / 299.0,
+            16.0 / 224.0,
+            11.0 / 150.0,
+            7.0 / 75.0,
+            3.0 / 34.0,
+            2.0 / 8.0,
+        ],
+        32,
+        0.0,
+    )
+}
+
+/// Table 9 "Ours2": further pruning (40.5× on CONV2-5) at 1.5% accuracy
+/// loss; speedups saturate.
+pub fn alexnet_ours2_table9() -> PruneProfile {
+    PruneProfile::with_uniform_bits(
+        "ADMM-NN hw-aware (Ours2)",
+        vec![1.0, 0.0247, 0.0247, 0.0247, 0.0247, 0.05, 0.05, 0.08],
+        32,
+        1.5,
+    )
+}
+
+/// LeNet-5, Table 1/5: 99.2%-accuracy 85× run and 99.0% 167× run.
+pub fn lenet5_ours_85x() -> PruneProfile {
+    // conv1 kept denser (input-adjacent), fc1 pruned hardest — consistent
+    // with the paper's CONV/FC asymmetry discussion.
+    PruneProfile::new(
+        "ADMM-NN 85x",
+        vec![0.55, 0.06, 0.0075, 0.10],
+        vec![3, 3, 2, 2],
+        0.0,
+    )
+}
+
+pub fn lenet5_ours_167x() -> PruneProfile {
+    PruneProfile::new(
+        "ADMM-NN 167x",
+        vec![0.35, 0.03, 0.0033, 0.05],
+        vec![3, 3, 2, 2],
+        0.2,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{alexnet, lenet5};
+
+    #[test]
+    fn table7_overall_matches_paper() {
+        // Table 7 total: 2.9M of 60.9M = 4.76% kept.
+        let p = alexnet_ours_table7();
+        let net = alexnet();
+        let ratio = p.overall_prune_ratio(&net);
+        let kept_frac = 1.0 / ratio;
+        assert!((kept_frac - 0.0476).abs() < 0.003, "kept={kept_frac}");
+    }
+
+    #[test]
+    fn table8_remaining_ops_match_paper() {
+        let p = alexnet_ours_table8();
+        let net = alexnet();
+        let ops = p.remaining_ops(&net);
+        // conv1-5 ≈ 133/31/18/16/11 M
+        let want = [133.0, 31.0, 18.0, 16.0, 11.0];
+        for (o, w) in ops.iter().take(5).zip(want) {
+            assert!((o / 1e6 - w).abs() < 1.0, "{o} vs {w}M");
+        }
+        let conv_total: f64 = ops.iter().take(5).sum();
+        assert!((conv_total / 1e6 - 209.0).abs() < 3.0);
+    }
+
+    #[test]
+    fn han_conv_ratio_matches_2_7x() {
+        let p = alexnet_han();
+        let net = alexnet();
+        let r = p.conv_prune_ratio(&net);
+        assert!((r - 2.7).abs() < 0.4, "conv ratio {r}");
+    }
+
+    #[test]
+    fn ours1_conv_ratio_near_13x() {
+        let p = alexnet_ours1_table9();
+        let net = alexnet();
+        let r = p.conv_prune_ratio(&net);
+        assert!(r > 10.0 && r < 16.0, "conv ratio {r}");
+    }
+
+    #[test]
+    fn lenet_85x_ratio() {
+        let p = lenet5_ours_85x();
+        let net = lenet5();
+        let r = p.overall_prune_ratio(&net);
+        assert!((r - 85.0).abs() < 10.0, "ratio {r}");
+    }
+
+    #[test]
+    fn lenet_167x_ratio() {
+        let p = lenet5_ours_167x();
+        let net = lenet5();
+        let r = p.overall_prune_ratio(&net);
+        assert!((r - 167.0).abs() < 20.0, "ratio {r}");
+    }
+
+    #[test]
+    fn wen_leaves_fc_unpruned() {
+        let p = alexnet_wen();
+        assert!(p.keep[5..].iter().all(|&a| a == 1.0));
+    }
+}

@@ -1,0 +1,217 @@
+//! Host-side Euclidean projections onto the paper's constraint sets.
+//!
+//! These mirror the Pallas kernels (`python/compile/kernels/`) exactly and
+//! are what the coordinator uses for subproblem-2 bookkeeping (Z-updates)
+//! between PJRT calls; integration tests cross-validate them against the
+//! AOT projection artifacts.
+//!
+//! * [`prune_topk`] — Π onto S = {‖x‖₀ ≤ k}: keep the k largest-magnitude
+//!   entries (proved optimal in the paper's §3.3 for subproblem 2).
+//! * [`quant_nearest`] — Π onto the equal-interval level set
+//!   {±q, ±2q, …, ±(M/2)q}; zeros (pruned weights) are preserved.
+//! * [`joint_project`] — prune-then-quantize composition used by the joint
+//!   pipeline's final hard projection.
+
+/// Keep the `k` largest-|v| entries of `v`, zeroing the rest.
+///
+/// Exact-k semantics (ties broken by index order), unlike the threshold
+/// formulation in the kernel which may keep extra tied entries — the
+/// difference only matters on exact float ties; tests pin both behaviours.
+pub fn prune_topk(v: &[f32], k: usize) -> Vec<f32> {
+    let n = v.len();
+    if k >= n {
+        return v.to_vec();
+    }
+    let mut out = vec![0.0f32; n];
+    if k == 0 {
+        return out;
+    }
+    // select_nth_unstable on |v| descending: O(n) average.
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        let (va, vb) = (v[a as usize].abs(), v[b as usize].abs());
+        vb.partial_cmp(&va)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    for &i in &idx[..k] {
+        out[i as usize] = v[i as usize];
+    }
+    out
+}
+
+/// Magnitude threshold that [`prune_topk`] implies (the k-th largest |v|),
+/// or `f32::INFINITY` for k = 0. Matches `ref.prune_threshold` python-side.
+pub fn prune_threshold(v: &[f32], k: usize) -> f32 {
+    if k == 0 {
+        return f32::INFINITY;
+    }
+    if k >= v.len() {
+        return 0.0;
+    }
+    let mut mags: Vec<f32> = v.iter().map(|x| x.abs()).collect();
+    let pos = k - 1;
+    mags.select_nth_unstable_by(pos, |a, b| {
+        b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    mags[pos]
+}
+
+/// Snap every nonzero entry to the nearest level in {±q, …, ±(M/2)q}.
+/// `half_m` = M/2 (number of positive levels); zero entries stay zero.
+pub fn quant_nearest(v: &[f32], q: f32, half_m: u32) -> Vec<f32> {
+    assert!(q > 0.0, "interval must be positive");
+    let hm = half_m as f32;
+    v.iter()
+        .map(|&x| {
+            if x == 0.0 {
+                0.0
+            } else {
+                let level = (x.abs() / q).round().clamp(1.0, hm);
+                x.signum() * level * q
+            }
+        })
+        .collect()
+}
+
+/// Total squared quantization error over nonzero entries (the q-search
+/// objective, §3.4.2).
+pub fn quant_error(v: &[f32], q: f32, half_m: u32) -> f64 {
+    let hm = half_m as f32;
+    v.iter()
+        .map(|&x| {
+            if x == 0.0 {
+                0.0
+            } else {
+                let level = (x.abs() / q).round().clamp(1.0, hm);
+                let err = x.abs() - level * q;
+                (err as f64) * (err as f64)
+            }
+        })
+        .sum()
+}
+
+/// Prune to k entries, then snap survivors to quantization levels — the
+/// composed projection of the joint problem (paper §3.3 performs the two
+/// steps in this order: "weight pruning first, then ... quantization on
+/// the remaining, non-zero weights").
+pub fn joint_project(v: &[f32], k: usize, q: f32, half_m: u32) -> Vec<f32> {
+    quant_nearest(&prune_topk(v, k), q, half_m)
+}
+
+/// Binary mask of the nonzero pattern (1.0 where kept).
+pub fn mask_of(v: &[f32]) -> Vec<f32> {
+    v.iter().map(|&x| if x != 0.0 { 1.0 } else { 0.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn topk_keeps_largest() {
+        let v = [0.1, -5.0, 2.0, -0.3, 4.0];
+        assert_eq!(prune_topk(&v, 2), vec![0.0, -5.0, 0.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn topk_edges() {
+        let v = [1.0, -2.0, 3.0];
+        assert_eq!(prune_topk(&v, 0), vec![0.0; 3]);
+        assert_eq!(prune_topk(&v, 3), v.to_vec());
+        assert_eq!(prune_topk(&v, 10), v.to_vec());
+    }
+
+    #[test]
+    fn topk_exact_cardinality() {
+        let mut rng = Rng::new(1);
+        let v = rng.normal_vec(10_000, 1.0);
+        for k in [0, 1, 17, 5000, 9999, 10_000] {
+            let out = prune_topk(&v, k);
+            assert_eq!(out.iter().filter(|&&x| x != 0.0).count(), k);
+        }
+    }
+
+    #[test]
+    fn topk_is_euclidean_projection() {
+        // The kept entries are exactly the k largest magnitudes.
+        let mut rng = Rng::new(2);
+        let v = rng.normal_vec(500, 1.0);
+        let k = 100;
+        let out = prune_topk(&v, k);
+        let thresh = prune_threshold(&v, k);
+        for (o, x) in out.iter().zip(&v) {
+            if *o != 0.0 {
+                assert!(x.abs() >= thresh - f32::EPSILON);
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_matches_sorted() {
+        let mut rng = Rng::new(3);
+        let v = rng.normal_vec(1000, 1.0);
+        let mut mags: Vec<f32> = v.iter().map(|x| x.abs()).collect();
+        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        for k in [1, 10, 500, 999] {
+            assert_eq!(prune_threshold(&v, k), mags[k - 1]);
+        }
+        assert_eq!(prune_threshold(&v, 0), f32::INFINITY);
+    }
+
+    #[test]
+    fn quant_snaps_to_levels() {
+        // Fig. 3: q=0.5, 3 bits -> levels {±0.5 .. ±2.0}.
+        let v = [0.23, -0.6, 1.3, 2.9, 0.0, -2.6];
+        let out = quant_nearest(&v, 0.5, 4);
+        assert_eq!(out, vec![0.5, -0.5, 1.5, 2.0, 0.0, -2.0]);
+    }
+
+    #[test]
+    fn quant_never_produces_zero_from_nonzero() {
+        let mut rng = Rng::new(4);
+        let v = rng.normal_vec(1000, 0.01); // tiny weights
+        let out = quant_nearest(&v, 0.05, 8);
+        for (o, x) in out.iter().zip(&v) {
+            if *x != 0.0 {
+                assert!(o.abs() >= 0.05 - 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn quant_error_zero_on_levels() {
+        let v = [0.5, -1.0, 1.5, 0.0];
+        assert!(quant_error(&v, 0.5, 4) < 1e-12);
+    }
+
+    #[test]
+    fn quant_idempotent() {
+        let mut rng = Rng::new(5);
+        let v = rng.normal_vec(512, 1.0);
+        let once = quant_nearest(&v, 0.1, 8);
+        let twice = quant_nearest(&once, 0.1, 8);
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn joint_projection_composition() {
+        let mut rng = Rng::new(6);
+        let v = rng.normal_vec(256, 1.0);
+        let out = joint_project(&v, 64, 0.2, 4);
+        assert_eq!(out.iter().filter(|&&x| x != 0.0).count(), 64);
+        for &x in &out {
+            if x != 0.0 {
+                let lvl = x / 0.2;
+                assert!((lvl - lvl.round()).abs() < 1e-5);
+                assert!(lvl.abs() <= 4.0 + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn mask_of_pattern() {
+        assert_eq!(mask_of(&[0.0, 2.0, -0.5]), vec![0.0, 1.0, 1.0]);
+    }
+}

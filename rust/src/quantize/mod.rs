@@ -1,0 +1,188 @@
+//! Equal-interval quantizer: interval search, bit-width selection, and
+//! level encoding (paper §3.4.2, Fig. 3).
+//!
+//! For each layer i the quantizer picks
+//! * the number of bits n (M = 2ⁿ levels, half positive / half negative,
+//!   zero excluded — a zero weight means *pruned*), and
+//! * the interval q_i minimizing Σⱼ |wⱼ − f(wⱼ)|², found by interval
+//!   halving ("binary search method" in the paper; the error is unimodal
+//!   in q for fixed M).
+//!
+//! The level codes (Fig. 3(c)) are what the hardware stores: signed
+//! integers in ±M/2 without zero, encoded in n bits.
+
+use crate::projection::{quant_error, quant_nearest};
+use crate::util::golden_min;
+
+/// Result of quantizing one layer.
+#[derive(Clone, Debug)]
+pub struct QuantConfig {
+    pub bits: u32,
+    /// Interval between adjacent levels (stored per layer, used as the
+    /// output scaling factor in hardware).
+    pub q: f32,
+    /// Σ (w − f(w))² at the chosen (bits, q).
+    pub error: f64,
+}
+
+impl QuantConfig {
+    pub fn half_m(&self) -> u32 {
+        1u32 << (self.bits - 1)
+    }
+
+    /// Apply to a weight vector (zeros preserved).
+    pub fn apply(&self, v: &[f32]) -> Vec<f32> {
+        quant_nearest(v, self.q, self.half_m())
+    }
+}
+
+/// Find the interval q minimizing the total squared error for `bits`.
+///
+/// Search bracket: the optimum lies in (0, max|w|] — q above max|w| only
+/// inflates the lowest level; q → 0 clamps everything to the top level.
+pub fn search_interval(v: &[f32], bits: u32) -> QuantConfig {
+    assert!((1..=16).contains(&bits), "bits out of range: {bits}");
+    let half_m = 1u32 << (bits - 1);
+    let max_abs = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if max_abs == 0.0 {
+        return QuantConfig { bits, q: 1.0, error: 0.0 };
+    }
+    // Natural scale: top level reaches max|w| at q0 = max|w| / (M/2).
+    let hi = max_abs as f64 * 1.25;
+    let lo = max_abs as f64 / half_m as f64 / 64.0;
+    let q = golden_min(lo, hi, 80, |q| quant_error(v, q as f32, half_m));
+    let q = q as f32;
+    QuantConfig { bits, q, error: quant_error(v, q, half_m) }
+}
+
+/// Pick the smallest bit width whose *relative* quantization error
+/// (‖w − f(w)‖² / ‖w‖²) is below `tol`, searching n = 1..=max_bits.
+///
+/// This is the automated version of the paper's "start from prior work's
+/// bit widths and reduce n": each extra bit roughly quarters the error, so
+/// the first n under tolerance is the knee of the curve.
+pub fn select_bits(v: &[f32], tol: f64, max_bits: u32) -> QuantConfig {
+    let sq: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let mut best = None;
+    for bits in 1..=max_bits {
+        let cfg = search_interval(v, bits);
+        let rel = if sq > 0.0 { cfg.error / sq } else { 0.0 };
+        let done = rel <= tol;
+        best = Some(cfg);
+        if done {
+            break;
+        }
+    }
+    best.expect("max_bits >= 1")
+}
+
+/// Encode quantized weights as signed level codes (Fig. 3(c)).
+///
+/// Levels are in {−M/2, …, −1, 1, …, M/2}; 0 encodes a pruned weight and
+/// is never produced for a nonzero input. Returns `(codes, q)`.
+pub fn encode_levels(v: &[f32], cfg: &QuantConfig) -> Vec<i32> {
+    let hm = cfg.half_m() as f32;
+    v.iter()
+        .map(|&x| {
+            if x == 0.0 {
+                0
+            } else {
+                let level = (x.abs() / cfg.q).round().clamp(1.0, hm);
+                (x.signum() * level) as i32
+            }
+        })
+        .collect()
+}
+
+/// Decode level codes back to weights: w = level × q.
+pub fn decode_levels(codes: &[i32], q: f32) -> Vec<f32> {
+    codes.iter().map(|&c| c as f32 * q).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn interval_search_beats_naive_grid() {
+        let mut rng = Rng::new(1);
+        let v = rng.normal_vec(5000, 0.1);
+        let cfg = search_interval(&v, 4);
+        // compare against a fine grid
+        let max_abs = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let mut grid_best = f64::INFINITY;
+        for i in 1..400 {
+            let q = max_abs * i as f32 / 400.0;
+            grid_best = grid_best.min(quant_error(&v, q, 8));
+        }
+        assert!(cfg.error <= grid_best * 1.01,
+                "search {} vs grid {}", cfg.error, grid_best);
+    }
+
+    #[test]
+    fn fig3_example_interval() {
+        // Fig. 3: weights spread over ±2, q=0.5 with 3 bits (half_m=4).
+        let v = [
+            1.3, -0.4, 0.9, 1.9, -1.6, 0.6, -1.1, 0.3, 2.1, -0.7, 1.4, -1.9,
+            0.5, -0.2, 1.0, -1.2,
+        ];
+        let cfg = search_interval(&v, 3);
+        assert!((cfg.q - 0.5).abs() < 0.15, "q={}", cfg.q);
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let mut rng = Rng::new(2);
+        let v = rng.normal_vec(2000, 0.05);
+        let mut prev = f64::INFINITY;
+        for bits in 1..=8 {
+            let cfg = search_interval(&v, bits);
+            assert!(cfg.error <= prev * 1.001,
+                    "bits={bits} err={} prev={prev}", cfg.error);
+            prev = cfg.error;
+        }
+    }
+
+    #[test]
+    fn select_bits_hits_tolerance() {
+        let mut rng = Rng::new(3);
+        let v = rng.normal_vec(3000, 0.02);
+        let cfg = select_bits(&v, 1e-2, 8);
+        let sq: f64 = v.iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!(cfg.error / sq <= 1e-2 || cfg.bits == 8);
+        // 3-4 bits typically suffice on gaussian weights (paper §3.4.2)
+        assert!(cfg.bits <= 5, "bits={}", cfg.bits);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut rng = Rng::new(4);
+        let mut v = rng.normal_vec(1000, 0.1);
+        for i in (0..1000).step_by(3) {
+            v[i] = 0.0; // pruned positions
+        }
+        let cfg = search_interval(&v, 4);
+        let quantized = cfg.apply(&v);
+        let codes = encode_levels(&quantized, &cfg);
+        let decoded = decode_levels(&codes, cfg.q);
+        for (d, qv) in decoded.iter().zip(&quantized) {
+            assert!((d - qv).abs() < 1e-6);
+        }
+        // zeros stay zero; nonzero codes within ±M/2 excluding 0
+        for (c, x) in codes.iter().zip(&v) {
+            if *x == 0.0 {
+                assert_eq!(*c, 0);
+            } else {
+                assert!(*c != 0 && c.unsigned_abs() <= cfg.half_m());
+            }
+        }
+    }
+
+    #[test]
+    fn zero_vector_is_safe() {
+        let cfg = search_interval(&[0.0; 16], 3);
+        assert_eq!(cfg.error, 0.0);
+        assert_eq!(cfg.apply(&[0.0; 4]), vec![0.0; 4]);
+    }
+}

@@ -1,0 +1,305 @@
+//! `artifacts/manifest.json` — the contract between the python AOT
+//! pipeline and this crate. Single source of truth for model topology,
+//! parameter order, argument layout, and artifact file names.
+//!
+//! Parsed with the in-tree JSON module (`util::json`) — this repo builds
+//! offline with no serde dependency.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json::{parse, Json};
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Hash of the python compile-path sources (staleness detection).
+    pub fingerprint: String,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub infer_batches: Vec<usize>,
+    pub adam: AdamConfig,
+    pub models: HashMap<String, ModelEntry>,
+    /// Keyed by flat tensor size (stringified).
+    pub projections: HashMap<String, ProjEntry>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct AdamConfig {
+    pub b1: f64,
+    pub b2: f64,
+    pub eps: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub input_shape: Vec<usize>,
+    pub n_classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub params: Vec<ParamEntry>,
+    /// Argument layout of the train artifact (sanity-checked at load).
+    pub train_args: Vec<String>,
+    pub artifacts: HashMap<String, String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "weight" | "bias"
+    pub kind: String,
+    pub layer: String,
+    /// "conv" | "dense"
+    pub layer_type: String,
+    pub fan_in: usize,
+    pub fan_out: usize,
+    /// MACs contributed by this tensor's layer per sample (0 for bias).
+    pub macs: u64,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_weight(&self) -> bool {
+        self.kind == "weight"
+    }
+
+    fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(ParamEntry {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j.get("shape")?.usize_vec()?,
+            kind: j.get("kind")?.as_str()?.to_string(),
+            layer: j.get("layer")?.as_str()?.to_string(),
+            layer_type: j.get("layer_type")?.as_str()?.to_string(),
+            fan_in: j.get("fan_in")?.as_usize()?,
+            fan_out: j.get("fan_out")?.as_usize()?,
+            macs: j.get("macs")?.as_u64()?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ProjEntry {
+    pub prune: String,
+    pub quant: String,
+    pub qerr: String,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let m = Self::from_json_text(&text).context("parsing manifest")?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn from_json_text(text: &str) -> crate::Result<Self> {
+        let j = parse(text)?;
+        let adam = j.get("adam")?;
+        let mut models = HashMap::new();
+        for (name, mj) in j.get("models")?.as_obj()? {
+            let mut params = Vec::new();
+            for pj in mj.get("params")?.as_arr()? {
+                params.push(ParamEntry::from_json(pj)?);
+            }
+            let train_args = mj
+                .get("train_args")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_str()?.to_string()))
+                .collect::<crate::Result<Vec<_>>>()?;
+            let artifacts = mj
+                .get("artifacts")?
+                .as_obj()?
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
+                .collect::<crate::Result<HashMap<_, _>>>()?;
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    input_shape: mj.get("input_shape")?.usize_vec()?,
+                    n_classes: mj.get("n_classes")?.as_usize()?,
+                    train_batch: mj.get("train_batch")?.as_usize()?,
+                    eval_batch: mj.get("eval_batch")?.as_usize()?,
+                    params,
+                    train_args,
+                    artifacts,
+                },
+            );
+        }
+        let mut projections = HashMap::new();
+        for (size, pj) in j.get("projections")?.as_obj()? {
+            projections.insert(
+                size.clone(),
+                ProjEntry {
+                    prune: pj.get("prune")?.as_str()?.to_string(),
+                    quant: pj.get("quant")?.as_str()?.to_string(),
+                    qerr: pj.get("qerr")?.as_str()?.to_string(),
+                },
+            );
+        }
+        Ok(Manifest {
+            fingerprint: j.get("fingerprint")?.as_str()?.to_string(),
+            train_batch: j.get("train_batch")?.as_usize()?,
+            eval_batch: j.get("eval_batch")?.as_usize()?,
+            infer_batches: j.get("infer_batches")?.usize_vec()?,
+            adam: AdamConfig {
+                b1: adam.get("b1")?.as_f64()?,
+                b2: adam.get("b2")?.as_f64()?,
+                eps: adam.get("eps")?.as_f64()?,
+            },
+            models,
+            projections,
+        })
+    }
+
+    /// Structural sanity checks on every model entry.
+    pub fn validate(&self) -> crate::Result<()> {
+        for (name, m) in &self.models {
+            let p = m.params.len();
+            let w = m.weight_params().count();
+            let want = 3 * p + 1 + 4 * w + 4;
+            if m.train_args.len() != want {
+                return Err(anyhow!(
+                    "{name}: train_args has {} entries, expected {want}",
+                    m.train_args.len()
+                ));
+            }
+            for key in ["train", "eval"] {
+                if !m.artifacts.contains_key(key) {
+                    return Err(anyhow!("{name}: missing artifact {key}"));
+                }
+            }
+            for wp in m.weight_params() {
+                if !self.projections.contains_key(&wp.numel().to_string()) {
+                    return Err(anyhow!(
+                        "{name}: no projection artifact for {} (size {})",
+                        wp.name,
+                        wp.numel()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn model(&self, name: &str) -> crate::Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name} not in manifest (have: {:?})",
+                                 self.models.keys().collect::<Vec<_>>()))
+    }
+}
+
+impl ModelEntry {
+    /// Weight params in manifest order (the W-indexed vectors of the
+    /// train artifact: masks, zs, us, rhos).
+    pub fn weight_params(&self) -> impl Iterator<Item = &ParamEntry> {
+        self.params.iter().filter(|p| p.is_weight())
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn n_weights(&self) -> usize {
+        self.weight_params().count()
+    }
+
+    pub fn total_weight_count(&self) -> usize {
+        self.weight_params().map(|p| p.numel()).sum()
+    }
+
+    /// Conv/dense layer list as (layer name, type, weight count, macs) in
+    /// order — the descriptor of a *proxy* network, used by the
+    /// hardware-aware algorithm.
+    pub fn layer_table(&self) -> Vec<(String, String, usize, u64)> {
+        self.weight_params()
+            .map(|p| (p.layer.clone(), p.layer_type.clone(), p.numel(), p.macs))
+            .collect()
+    }
+
+    pub fn artifact(&self, key: &str) -> crate::Result<&str> {
+        self.artifacts
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing artifact {key}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "fingerprint": "abc",
+      "train_batch": 64, "eval_batch": 256, "infer_batches": [1, 64],
+      "adam": {"b1": 0.9, "b2": 0.999, "eps": 1e-8},
+      "models": {
+        "tiny": {
+          "input_shape": [4], "n_classes": 2,
+          "train_batch": 64, "eval_batch": 256,
+          "params": [
+            {"name": "fc.w", "shape": [4, 2], "kind": "weight",
+             "layer": "fc", "layer_type": "dense",
+             "fan_in": 4, "fan_out": 2, "macs": 8},
+            {"name": "fc.b", "shape": [2], "kind": "bias",
+             "layer": "fc", "layer_type": "dense",
+             "fan_in": 4, "fan_out": 2, "macs": 0}
+          ],
+          "train_args": ["param","param","adam_m","adam_m","adam_v","adam_v",
+                         "step","mask","z","u","rho","lr","l1_lambda","x","y"],
+          "artifacts": {"train": "t.hlo.txt", "eval": "e.hlo.txt"}
+        }
+      },
+      "projections": {"8": {"prune": "p", "quant": "q", "qerr": "e"}}
+    }"#;
+
+    #[test]
+    fn parse_and_validate_sample() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        m.validate().unwrap();
+        let e = m.model("tiny").unwrap();
+        assert_eq!(e.n_params(), 2);
+        assert_eq!(e.n_weights(), 1);
+        assert_eq!(e.total_weight_count(), 8);
+        assert_eq!(e.layer_table()[0].0, "fc");
+        assert!((m.adam.eps - 1e-8).abs() < 1e-20);
+    }
+
+    #[test]
+    fn validate_rejects_bad_arg_count() {
+        let mut m = Manifest::from_json_text(SAMPLE).unwrap();
+        m.models.get_mut("tiny").unwrap().train_args.pop();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_missing_projection() {
+        let mut m = Manifest::from_json_text(SAMPLE).unwrap();
+        m.projections.clear();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if std::path::Path::new(path).exists() {
+            let m = Manifest::load(path).unwrap();
+            assert!(m.models.contains_key("lenet5"));
+            let lenet = &m.models["lenet5"];
+            assert_eq!(lenet.total_weight_count(), 430_500);
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! This is the only module that touches the `xla` crate. Everything the
+//! python side produced is described by `artifacts/manifest.json`
+//! ([`manifest`]); executables are compiled once per process and cached.
+//!
+//! Layers of the API:
+//! * [`Runtime`] — PJRT CPU client + artifact directory + executable cache.
+//! * [`session::ModelSession`] — a loaded model (train/eval/infer
+//!   executables) plus the literal marshalling that matches the manifest's
+//!   argument layout.
+//! * [`Runtime::prune`] / [`Runtime::quant`] / [`Runtime::quant_err`] —
+//!   the per-size projection artifacts (the Pallas kernels), used by
+//!   integration tests to cross-validate the host-side `projection`
+//!   module and available to the coordinator.
+
+pub mod manifest;
+pub mod session;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context};
+
+pub use manifest::{Manifest, ModelEntry, ParamEntry};
+pub use session::{Hyper, ModelSession, StepStats, TrainState};
+
+use crate::tensor::Tensor;
+
+/// PJRT client + compiled-executable cache over the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    art_dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load the manifest and start a CPU PJRT client.
+    pub fn load(art_dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let art_dir = art_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(art_dir.join("manifest.json"))
+            .context("loading artifacts/manifest.json (run `make artifacts`)")?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, art_dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact by file name.
+    pub fn exe(&self, file: &str) -> crate::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.art_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Open a model session by manifest name.
+    pub fn model(&self, name: &str) -> crate::Result<ModelSession<'_>> {
+        ModelSession::open(self, name)
+    }
+
+    /// Execute an artifact on literals; the (return_tuple=True) output is
+    /// decomposed into per-output literals. Accepts owned literals or
+    /// references (the session mixes cached and per-step literals).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[L],
+    ) -> crate::Result<Vec<xla::Literal>> {
+        let out = exe
+            .execute::<L>(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    // -- projection artifacts (the Pallas kernels) -------------------------
+
+    fn proj_file(&self, n: usize, which: &str) -> crate::Result<String> {
+        let entry = self
+            .manifest
+            .projections
+            .get(&n.to_string())
+            .ok_or_else(|| anyhow!("no projection artifact for size {n}"))?;
+        Ok(match which {
+            "prune" => entry.prune.clone(),
+            "quant" => entry.quant.clone(),
+            "qerr" => entry.qerr.clone(),
+            _ => unreachable!(),
+        })
+    }
+
+    /// Π onto {‖x‖₀ ≤ k} via the AOT Pallas kernel.
+    pub fn prune(&self, v: &[f32], k: usize) -> crate::Result<Vec<f32>> {
+        let exe = self.exe(&self.proj_file(v.len(), "prune")?)?;
+        let out = self.run(
+            &exe,
+            &[lit_f32_1d(v), xla::Literal::scalar(k as f32)],
+        )?;
+        lit_to_vec(&out[0])
+    }
+
+    /// Π onto the quantization level set via the AOT Pallas kernel.
+    pub fn quant(&self, v: &[f32], q: f32, half_m: u32) -> crate::Result<Vec<f32>> {
+        let exe = self.exe(&self.proj_file(v.len(), "quant")?)?;
+        let out = self.run(
+            &exe,
+            &[
+                lit_f32_1d(v),
+                xla::Literal::scalar(q),
+                xla::Literal::scalar(half_m as f32),
+            ],
+        )?;
+        lit_to_vec(&out[0])
+    }
+
+    /// Σ err² for a candidate interval via the AOT Pallas kernel.
+    pub fn quant_err(&self, v: &[f32], q: f32, half_m: u32) -> crate::Result<f64> {
+        let exe = self.exe(&self.proj_file(v.len(), "qerr")?)?;
+        let out = self.run(
+            &exe,
+            &[
+                lit_f32_1d(v),
+                xla::Literal::scalar(q),
+                xla::Literal::scalar(half_m as f32),
+            ],
+        )?;
+        Ok(lit_to_vec(&out[0])?[0] as f64)
+    }
+}
+
+// -- literal marshalling helpers -------------------------------------------
+
+/// 1-D f32 literal.
+pub fn lit_f32_1d(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// f32 literal with an explicit shape.
+pub fn lit_f32(v: &[f32], shape: &[usize]) -> crate::Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(v)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape to {shape:?}: {e:?}"))
+}
+
+/// i32 literal with an explicit shape.
+pub fn lit_i32(v: &[i32], shape: &[usize]) -> crate::Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(v)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape to {shape:?}: {e:?}"))
+}
+
+/// Tensor → literal (f32, tensor's shape).
+pub fn tensor_to_lit(t: &Tensor) -> crate::Result<xla::Literal> {
+    lit_f32(t.data(), t.shape())
+}
+
+/// Literal → flat f32 vec.
+pub fn lit_to_vec(l: &xla::Literal) -> crate::Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))
+}
+
+/// Literal → Tensor with the given shape.
+pub fn lit_to_tensor(l: &xla::Literal, shape: &[usize]) -> crate::Result<Tensor> {
+    Ok(Tensor::new(shape.to_vec(), lit_to_vec(l)?))
+}
+
+/// Scalar literal → f32.
+pub fn lit_to_scalar(l: &xla::Literal) -> crate::Result<f32> {
+    l.get_first_element::<f32>()
+        .map_err(|e| anyhow!("literal scalar: {e:?}"))
+}

@@ -1,0 +1,294 @@
+//! Model session: one loaded model's executables + the flat argument
+//! marshalling of the train artifact.
+//!
+//! Argument layout (fixed by `python/compile/model.py::make_train_step`
+//! and recorded in the manifest):
+//!
+//! ```text
+//! params[P], adam_m[P], adam_v[P], step,
+//! masks[W], zs[W], us[W], rhos[W], lr, l1_lambda, x, y
+//! → params'[P], adam_m'[P], adam_v'[P], loss, acc
+//! ```
+//!
+//! The session owns no training state; [`TrainState`] is plain host data
+//! the coordinator can snapshot, project, checkpoint, and mutate between
+//! steps. Rarely-changing inputs (masks/Z/U/ρ) are marshalled into
+//! literals once and cached until the coordinator invalidates them — the
+//! difference between ~2P and ~3P+4W literal conversions per step.
+
+use std::rc::Rc;
+
+use anyhow::anyhow;
+
+use super::manifest::ModelEntry;
+use super::{lit_f32, lit_i32, lit_to_scalar, lit_to_tensor, tensor_to_lit, Runtime};
+use crate::data::Batch;
+use crate::metrics::EvalStats;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Hyper-parameters of a training phase.
+#[derive(Clone, Copy, Debug)]
+pub struct Hyper {
+    pub lr: f32,
+    /// L1 subgradient coefficient (Wen-style baseline; 0 otherwise).
+    pub l1_lambda: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper { lr: 1e-3, l1_lambda: 0.0 }
+    }
+}
+
+/// Host-side training state: everything the train artifact reads/writes.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    /// All parameters (weights + biases), manifest order.
+    pub params: Vec<Tensor>,
+    pub adam_m: Vec<Tensor>,
+    pub adam_v: Vec<Tensor>,
+    /// 1-based ADAM step counter (f32 input of the artifact).
+    pub step: f32,
+    /// Per weight-tensor (manifest weight order):
+    pub masks: Vec<Tensor>,
+    pub zs: Vec<Tensor>,
+    pub us: Vec<Tensor>,
+    pub rhos: Vec<f32>,
+}
+
+impl TrainState {
+    /// Fresh state: He-normal weights / zero biases (same init family as
+    /// the python tests), ones masks, zero Z/U, zero ρ.
+    pub fn init(entry: &ModelEntry, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::with_capacity(entry.params.len());
+        for p in &entry.params {
+            let mut stream = rng.fork(p.numel() as u64);
+            let data = if p.is_weight() {
+                stream.he_normal(p.numel(), p.fan_in)
+            } else {
+                vec![0.0; p.numel()]
+            };
+            params.push(Tensor::new(p.shape.clone(), data));
+        }
+        let weights: Vec<&crate::runtime::ParamEntry> =
+            entry.weight_params().collect();
+        TrainState {
+            params,
+            adam_m: entry.params.iter()
+                .map(|p| Tensor::zeros(p.shape.clone())).collect(),
+            adam_v: entry.params.iter()
+                .map(|p| Tensor::zeros(p.shape.clone())).collect(),
+            step: 1.0,
+            masks: weights.iter().map(|p| Tensor::ones(p.shape.clone())).collect(),
+            zs: weights.iter().map(|p| Tensor::zeros(p.shape.clone())).collect(),
+            us: weights.iter().map(|p| Tensor::zeros(p.shape.clone())).collect(),
+            rhos: vec![0.0; weights.len()],
+        }
+    }
+
+    /// Reset the ADAM moments (paper restarts retraining phases fresh).
+    pub fn reset_adam(&mut self) {
+        for t in self.adam_m.iter_mut().chain(self.adam_v.iter_mut()) {
+            for x in t.data_mut() {
+                *x = 0.0;
+            }
+        }
+        self.step = 1.0;
+    }
+
+    /// Indices into `params` of the weight tensors (manifest order).
+    pub fn weight_indices(entry: &ModelEntry) -> Vec<usize> {
+        entry
+            .params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.is_weight())
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Per-step scalars returned by the train artifact.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    /// Data loss + ADMM penalty.
+    pub loss: f32,
+    /// Batch accuracy.
+    pub acc: f32,
+}
+
+/// One loaded model: compiled executables + marshalling.
+pub struct ModelSession<'r> {
+    rt: &'r Runtime,
+    pub name: String,
+    pub entry: ModelEntry,
+    train_exe: Rc<xla::PjRtLoadedExecutable>,
+    eval_exe: Rc<xla::PjRtLoadedExecutable>,
+    /// Cached literals for the slow-changing inputs (masks, zs, us, rhos).
+    slow_cache: std::cell::RefCell<Option<Vec<xla::Literal>>>,
+}
+
+impl<'r> ModelSession<'r> {
+    pub fn open(rt: &'r Runtime, name: &str) -> crate::Result<Self> {
+        let entry = rt.manifest().model(name)?.clone();
+        let train_exe = rt.exe(entry.artifact("train")?)?;
+        let eval_exe = rt.exe(entry.artifact("eval")?)?;
+        Ok(ModelSession {
+            rt,
+            name: name.to_string(),
+            entry,
+            train_exe,
+            eval_exe,
+            slow_cache: std::cell::RefCell::new(None),
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        self.rt
+    }
+
+    /// Invalidate the cached mask/Z/U/ρ literals after the coordinator
+    /// mutates them (projection step, mask freeze, ρ change).
+    pub fn invalidate_slow(&self) {
+        *self.slow_cache.borrow_mut() = None;
+    }
+
+    fn slow_literals(&self, st: &TrainState) -> crate::Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(3 * st.masks.len() + st.rhos.len());
+        for t in st.masks.iter().chain(&st.zs).chain(&st.us) {
+            out.push(tensor_to_lit(t)?);
+        }
+        for &r in &st.rhos {
+            out.push(xla::Literal::scalar(r));
+        }
+        Ok(out)
+    }
+
+    /// Reshape a batch to this model's input literal.
+    fn x_literal(&self, batch: &Batch) -> crate::Result<xla::Literal> {
+        let mut shape = vec![batch.batch];
+        shape.extend_from_slice(&self.entry.input_shape);
+        let want: usize = shape.iter().product();
+        if want != batch.x.len() {
+            return Err(anyhow!(
+                "batch has {} values, model {} wants {:?}",
+                batch.x.len(), self.name, shape
+            ));
+        }
+        lit_f32(&batch.x, &shape)
+    }
+
+    /// Execute one ADAM+ADMM step; updates `st` in place.
+    pub fn train_step(
+        &self,
+        st: &mut TrainState,
+        hyper: &Hyper,
+        batch: &Batch,
+    ) -> crate::Result<StepStats> {
+        let p = self.entry.n_params();
+        let w = self.entry.n_weights();
+        debug_assert_eq!(batch.batch, self.entry.train_batch);
+
+        if self.slow_cache.borrow().is_none() {
+            *self.slow_cache.borrow_mut() = Some(self.slow_literals(st)?);
+        }
+
+        // Fast-changing literals are built each step; the slow cache is
+        // borrowed by reference (execute is generic over Borrow<Literal>),
+        // so masks/Z/U/ρ marshalling is paid only on invalidation.
+        let mut fast: Vec<xla::Literal> = Vec::with_capacity(3 * p + 5);
+        for t in st.params.iter().chain(&st.adam_m).chain(&st.adam_v) {
+            fast.push(tensor_to_lit(t)?);
+        }
+        let step_lit = xla::Literal::scalar(st.step);
+        let lr_lit = xla::Literal::scalar(hyper.lr);
+        let l1_lit = xla::Literal::scalar(hyper.l1_lambda);
+        let x_lit = self.x_literal(batch)?;
+        let y_lit = lit_i32(&batch.y, &[batch.batch])?;
+
+        let cache = self.slow_cache.borrow();
+        let slow = cache.as_ref().unwrap();
+        debug_assert_eq!(slow.len(), 4 * w);
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * p + 4 * w + 5);
+        args.extend(fast.iter());
+        args.push(&step_lit);
+        args.extend(slow.iter());
+        args.push(&lr_lit);
+        args.push(&l1_lit);
+        args.push(&x_lit);
+        args.push(&y_lit);
+
+        let outs = self.rt.run(&self.train_exe, &args)?;
+        drop(cache);
+        if outs.len() != 3 * p + 2 {
+            return Err(anyhow!("train artifact returned {} outputs, want {}",
+                             outs.len(), 3 * p + 2));
+        }
+        for (i, pe) in self.entry.params.iter().enumerate() {
+            st.params[i] = lit_to_tensor(&outs[i], &pe.shape)?;
+            st.adam_m[i] = lit_to_tensor(&outs[p + i], &pe.shape)?;
+            st.adam_v[i] = lit_to_tensor(&outs[2 * p + i], &pe.shape)?;
+        }
+        st.step += 1.0;
+        Ok(StepStats {
+            loss: lit_to_scalar(&outs[3 * p])?,
+            acc: lit_to_scalar(&outs[3 * p + 1])?,
+        })
+    }
+
+    /// Evaluate on `n_batches` deterministic test batches.
+    pub fn evaluate(
+        &self,
+        st: &TrainState,
+        data: &dyn crate::data::Dataset,
+        n_batches: u64,
+    ) -> crate::Result<EvalStats> {
+        let b = self.entry.eval_batch;
+        let mut stats = EvalStats::default();
+        for i in 0..n_batches {
+            let batch = data.batch(crate::data::Split::Test, i, b);
+            let mut args: Vec<xla::Literal> =
+                Vec::with_capacity(self.entry.n_params() + st.masks.len() + 2);
+            for t in &st.params {
+                args.push(tensor_to_lit(t)?);
+            }
+            for t in &st.masks {
+                args.push(tensor_to_lit(t)?);
+            }
+            args.push(self.x_literal(&batch)?);
+            args.push(lit_i32(&batch.y, &[batch.batch])?);
+            let outs = self.rt.run(&self.eval_exe, &args)?;
+            stats.push(
+                lit_to_scalar(&outs[0])? as f64,
+                lit_to_scalar(&outs[1])? as f64,
+                b,
+            );
+        }
+        Ok(stats)
+    }
+
+    /// Run the batch-`b` inference artifact on raw input data.
+    pub fn infer(
+        &self,
+        st: &TrainState,
+        x: &[f32],
+        b: usize,
+    ) -> crate::Result<Vec<f32>> {
+        let exe = self.rt.exe(self.entry.artifact(&format!("infer_b{b}"))?)?;
+        let mut shape = vec![b];
+        shape.extend_from_slice(&self.entry.input_shape);
+        let mut args: Vec<xla::Literal> =
+            Vec::with_capacity(self.entry.n_params() + st.masks.len() + 1);
+        for t in &st.params {
+            args.push(tensor_to_lit(t)?);
+        }
+        for t in &st.masks {
+            args.push(tensor_to_lit(t)?);
+        }
+        args.push(lit_f32(x, &shape)?);
+        let outs = self.rt.run(&exe, &args)?;
+        super::lit_to_vec(&outs[0])
+    }
+}

@@ -1,0 +1,89 @@
+//! Tiny benchmarking harness for the `cargo bench` targets (offline
+//! build: no criterion). Median-of-runs wall-clock with warmup, plus a
+//! throughput formatter.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    pub min_s: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn per_iter(&self) -> String {
+        fmt_time(self.median_s)
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Run `f` repeatedly: `warmup` discarded iterations, then `iters` timed;
+/// report the median (robust to scheduler noise).
+pub fn bench(name: &str, warmup: usize, iters: usize,
+             mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_s = times[times.len() / 2];
+    let min_s = times[0];
+    let r = BenchResult { name: name.to_string(), median_s, min_s, iters };
+    println!(
+        "{:<44} {:>12}/iter  (min {:>10}, n={})",
+        r.name,
+        r.per_iter(),
+        fmt_time(r.min_s),
+        r.iters
+    );
+    r
+}
+
+/// Black-box: defeat constant folding of benchmark inputs/outputs.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0usize;
+        let r = bench("noop", 2, 5, || {
+            count += 1;
+        });
+        assert_eq!(count, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.median_s >= 0.0);
+    }
+
+    #[test]
+    fn time_formats() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-5).ends_with("us"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+}

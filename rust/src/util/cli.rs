@@ -1,0 +1,146 @@
+//! Tiny flag parser for the launcher (offline build: no clap).
+//!
+//! Supports `--key value`, `--key=value`, bare boolean `--flag`, and
+//! positional arguments. Unknown leftover flags are reported by
+//! [`Args::finish`] so typos fail loudly instead of being ignored.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    /// key → value ("" for bare flags), insertion-ordered by BTreeMap key.
+    opts: BTreeMap<String, String>,
+    positionals: Vec<String>,
+    cursor: usize,
+}
+
+impl Args {
+    pub fn parse(args: impl Iterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut args = args.peekable();
+        while let Some(a) = args.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if args
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = args.next().unwrap();
+                    out.opts.insert(stripped.to_string(), v);
+                } else {
+                    out.opts.insert(stripped.to_string(), String::new());
+                }
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        out
+    }
+
+    /// Next positional argument (subcommand-style consumption).
+    pub fn next_positional(&mut self) -> Option<String> {
+        let p = self.positionals.get(self.cursor).cloned();
+        if p.is_some() {
+            self.cursor += 1;
+        }
+        p
+    }
+
+    /// String option, removing it from the pending set.
+    pub fn opt_str(&mut self, key: &str) -> Option<String> {
+        self.opts.remove(key)
+    }
+
+    /// Parsed option (int/float/...), removing it from the pending set.
+    pub fn opt_parse<T: std::str::FromStr>(&mut self, key: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opts.remove(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    /// Bare boolean flag.
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.opts.remove(key).is_some()
+    }
+
+    /// Error if unconsumed flags or positionals remain.
+    pub fn finish(&mut self) -> anyhow::Result<()> {
+        if let Some(k) = self.opts.keys().next() {
+            bail!("unknown option --{k}");
+        }
+        if self.cursor < self.positionals.len() {
+            bail!("unexpected argument {:?}", self.positionals[self.cursor]);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let mut a = parse("compress --model lenet5 --bits=3 --verbose --steps 10");
+        assert_eq!(a.next_positional().unwrap(), "compress");
+        assert_eq!(a.opt_str("model").unwrap(), "lenet5");
+        assert_eq!(a.opt_parse::<u32>("bits").unwrap(), Some(3));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_parse::<u64>("steps").unwrap(), Some(10));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn missing_options_are_none() {
+        let mut a = parse("train");
+        assert_eq!(a.next_positional().unwrap(), "train");
+        assert_eq!(a.opt_str("model"), None);
+        assert_eq!(a.opt_parse::<u32>("steps").unwrap(), None);
+        assert!(!a.flag("all"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let mut a = parse("train --nope 3");
+        a.next_positional();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn extra_positional_rejected() {
+        let mut a = parse("train oops");
+        a.next_positional();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_parse_reports_key() {
+        let mut a = parse("x --steps abc");
+        a.next_positional();
+        let err = a.opt_parse::<u64>("steps").unwrap_err().to_string();
+        assert!(err.contains("steps"));
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let mut a = parse("x --lr -0.5");
+        a.next_positional();
+        assert_eq!(a.opt_parse::<f32>("lr").unwrap(), Some(-0.5));
+    }
+}

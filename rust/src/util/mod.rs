@@ -1,0 +1,92 @@
+//! Small utilities shared across the crate: deterministic RNG, binary
+//! search, and human-readable formatting.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod search;
+
+pub use rng::Rng;
+pub use search::{binary_search_max, golden_min};
+
+/// Format a byte count the way the paper's tables do (KB / MB with the
+/// 1 KB = 1024 B convention used for SRAM sizing).
+pub fn fmt_bytes(bytes: f64) -> String {
+    if bytes < 1024.0 {
+        format!("{bytes:.0}B")
+    } else if bytes < 1024.0 * 1024.0 {
+        format!("{:.2}KB", bytes / 1024.0)
+    } else if bytes < 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2}MB", bytes / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2}GB", bytes / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
+/// Format a large count with M/K suffixes (e.g. MAC counts in Table 8).
+pub fn fmt_count(n: f64) -> String {
+    if n >= 1e9 {
+        format!("{:.2}G", n / 1e9)
+    } else if n >= 1e6 {
+        format!("{:.0}M", n / 1e6)
+    } else if n >= 1e3 {
+        format!("{:.1}K", n / 1e3)
+    } else {
+        format!("{n:.0}")
+    }
+}
+
+/// Format a compression / speedup ratio like the paper ("24x", "1,910x").
+pub fn fmt_ratio(r: f64) -> String {
+    let s = if r >= 100.0 {
+        format!("{r:.0}")
+    } else if r >= 10.0 {
+        format!("{r:.1}")
+    } else {
+        format!("{r:.2}")
+    };
+    // thousands separator for the 1,910x style
+    let (int_part, frac_part) = match s.split_once('.') {
+        Some((i, f)) => (i.to_string(), Some(f.to_string())),
+        None => (s, None),
+    };
+    let mut grouped = String::new();
+    let digits: Vec<char> = int_part.chars().collect();
+    for (i, c) in digits.iter().enumerate() {
+        if i > 0 && (digits.len() - i) % 3 == 0 {
+            grouped.push(',');
+        }
+        grouped.push(*c);
+    }
+    match frac_part {
+        Some(f) => format!("{grouped}.{f}x"),
+        None => format!("{grouped}x"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512.0), "512B");
+        assert_eq!(fmt_bytes(0.89 * 1024.0), "911B");
+        assert_eq!(fmt_bytes(2.5 * 1024.0), "2.50KB");
+        assert_eq!(fmt_bytes(2.45 * 1024.0 * 1024.0), "2.45MB");
+    }
+
+    #[test]
+    fn ratio_formatting() {
+        assert_eq!(fmt_ratio(1910.0), "1,910x");
+        assert_eq!(fmt_ratio(24.0), "24.0x");
+        assert_eq!(fmt_ratio(2.22), "2.22x");
+    }
+
+    #[test]
+    fn count_formatting() {
+        assert_eq!(fmt_count(211e6), "211M");
+        assert_eq!(fmt_count(430_500.0), "430.5K");
+    }
+}

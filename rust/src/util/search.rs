@@ -1,0 +1,104 @@
+//! Search primitives the paper's algorithms lean on.
+//!
+//! * Fig. 5's hardware-aware compression uses *binary search* to find the
+//!   most aggressive per-layer keep-ratios that still satisfy an accuracy
+//!   constraint ("Binary search algorithm is exploited to find the updated
+//!   α_i values that will not result in any accuracy degradation").
+//! * §3.4.2 determines the quantization interval q_i "using binary search
+//!   method, such that the total square error is minimized" — a unimodal
+//!   minimization we implement as a golden-section search with the same
+//!   halving-interval behaviour.
+
+/// Binary search for the largest `x` in `[lo, hi]` with `ok(x)` true.
+///
+/// `ok` must be monotone (true below some boundary, false above). Runs
+/// `iters` halvings; returns `lo` if even `lo` fails.
+pub fn binary_search_max<F: FnMut(f64) -> bool>(
+    lo: f64,
+    hi: f64,
+    iters: usize,
+    mut ok: F,
+) -> f64 {
+    let (mut lo, mut hi) = (lo, hi);
+    if ok(hi) {
+        return hi;
+    }
+    let mut best = lo;
+    for _ in 0..iters {
+        let mid = 0.5 * (lo + hi);
+        if ok(mid) {
+            best = mid;
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    best
+}
+
+/// Golden-section minimization of a unimodal `f` on `[lo, hi]`.
+///
+/// Returns the argmin. Used for the q_i interval search (the squared
+/// quantization error is unimodal in q for a fixed level count).
+pub fn golden_min<F: FnMut(f64) -> f64>(
+    lo: f64,
+    hi: f64,
+    iters: usize,
+    mut f: F,
+) -> f64 {
+    const INV_PHI: f64 = 0.618_033_988_749_894_8;
+    let (mut a, mut b) = (lo, hi);
+    let mut c = b - (b - a) * INV_PHI;
+    let mut d = a + (b - a) * INV_PHI;
+    let (mut fc, mut fd) = (f(c), f(d));
+    for _ in 0..iters {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - (b - a) * INV_PHI;
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + (b - a) * INV_PHI;
+            fd = f(d);
+        }
+    }
+    0.5 * (a + b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_search_finds_boundary() {
+        // ok(x) = x <= 0.37
+        let x = binary_search_max(0.0, 1.0, 40, |x| x <= 0.37);
+        assert!((x - 0.37).abs() < 1e-9);
+    }
+
+    #[test]
+    fn binary_search_all_ok() {
+        assert_eq!(binary_search_max(0.0, 1.0, 10, |_| true), 1.0);
+    }
+
+    #[test]
+    fn binary_search_none_ok() {
+        assert_eq!(binary_search_max(0.25, 1.0, 10, |_| false), 0.25);
+    }
+
+    #[test]
+    fn golden_finds_parabola_min() {
+        let x = golden_min(0.0, 10.0, 60, |x| (x - 3.21).powi(2));
+        assert!((x - 3.21).abs() < 1e-6);
+    }
+
+    #[test]
+    fn golden_handles_edge_min() {
+        let x = golden_min(1.0, 5.0, 60, |x| x);
+        assert!((x - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,192 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! These compile and execute the actual HLO artifacts (the Pallas kernels
+//! and the MLP training graph) and cross-validate them against the
+//! host-side rust implementations — the end-to-end correctness signal of
+//! the three-layer architecture. Requires `make artifacts`; every test
+//! skips cleanly when artifacts are absent so `cargo test` works on a
+//! fresh checkout.
+
+use admm_nn::data::{self, Dataset, Split};
+use admm_nn::projection;
+use admm_nn::runtime::{Hyper, Runtime, TrainState};
+use admm_nn::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::load("artifacts").expect("runtime loads"))
+}
+
+#[test]
+fn manifest_covers_all_models() {
+    let Some(rt) = runtime() else { return };
+    for m in ["mlp", "lenet5", "alexnet_proxy", "vgg_proxy", "resnet_proxy"] {
+        assert!(rt.manifest().models.contains_key(m), "missing {m}");
+    }
+}
+
+#[test]
+fn prune_artifact_matches_host_projection() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(1);
+    // mlp fc3.w is the smallest proj artifact (1000 elements)
+    let v = rng.normal_vec(1000, 1.0);
+    for k in [0usize, 1, 100, 999, 1000] {
+        let kernel = rt.prune(&v, k).expect("prune artifact runs");
+        let host = projection::prune_topk(&v, k);
+        // identical nonzero pattern and values (ties are measure-zero
+        // for gaussian data)
+        for (a, b) in kernel.iter().zip(&host) {
+            assert!((a - b).abs() < 1e-6, "k={k}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn quant_artifact_matches_host_projection() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(2);
+    let mut v = rng.normal_vec(1000, 0.5);
+    for i in (0..1000).step_by(3) {
+        v[i] = 0.0; // pruned positions must stay zero
+    }
+    for (q, hm) in [(0.1f32, 4u32), (0.05, 8), (0.25, 2)] {
+        let kernel = rt.quant(&v, q, hm).expect("quant artifact runs");
+        let host = projection::quant_nearest(&v, q, hm);
+        for (a, b) in kernel.iter().zip(&host) {
+            assert!((a - b).abs() < 1e-6, "q={q} hm={hm}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn quant_err_artifact_matches_host() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(3);
+    let v = rng.normal_vec(1000, 0.5);
+    for q in [0.05f32, 0.2, 0.7] {
+        let kernel = rt.quant_err(&v, q, 4).expect("qerr artifact runs");
+        let host = projection::quant_error(&v, q, 4);
+        assert!(
+            (kernel - host).abs() < 1e-3 * (1.0 + host),
+            "q={q}: {kernel} vs {host}"
+        );
+    }
+}
+
+#[test]
+fn train_step_decreases_loss_and_respects_masks() {
+    let Some(rt) = runtime() else { return };
+    let sess = rt.model("mlp").expect("mlp session");
+    let ds = data::for_input_shape(&sess.entry.input_shape);
+    let mut st = TrainState::init(&sess.entry, 0);
+
+    // prune half of fc1 and freeze the mask
+    let wi = TrainState::weight_indices(&sess.entry);
+    let w0 = &st.params[wi[0]];
+    let pruned = projection::prune_topk(w0.data(), w0.len() / 2);
+    st.masks[0] = admm_nn::tensor::Tensor::new(
+        w0.shape().to_vec(),
+        projection::mask_of(&pruned),
+    );
+    st.params[wi[0]] =
+        admm_nn::tensor::Tensor::new(w0.shape().to_vec(), pruned);
+    sess.invalidate_slow();
+
+    let hyper = Hyper::default();
+    let batch = ds.batch(Split::Train, 0, sess.entry.train_batch);
+    let first = sess.train_step(&mut st, &hyper, &batch).unwrap();
+    let mut last = first;
+    for i in 1..15 {
+        let b = ds.batch(Split::Train, i, sess.entry.train_batch);
+        last = sess.train_step(&mut st, &hyper, &b).unwrap();
+    }
+    assert!(
+        last.loss < first.loss,
+        "loss did not decrease: {} -> {}",
+        first.loss,
+        last.loss
+    );
+    // masked positions stayed exactly zero through 15 ADAM steps
+    let w = &st.params[wi[0]];
+    let m = &st.masks[0];
+    for (x, mask) in w.data().iter().zip(m.data()) {
+        if *mask == 0.0 {
+            assert_eq!(*x, 0.0);
+        }
+    }
+}
+
+#[test]
+fn admm_penalty_pulls_toward_z() {
+    let Some(rt) = runtime() else { return };
+    let sess = rt.model("mlp").expect("mlp session");
+    let ds = data::for_input_shape(&sess.entry.input_shape);
+    let hyper = Hyper::default();
+
+    // with huge rho and Z=0, weight norm must shrink faster than with rho=0
+    let norm_after = |rho: f32| -> f64 {
+        let mut st = TrainState::init(&sess.entry, 0);
+        for r in st.rhos.iter_mut() {
+            *r = rho;
+        }
+        sess.invalidate_slow();
+        for i in 0..10 {
+            let b = ds.batch(Split::Train, i, sess.entry.train_batch);
+            sess.train_step(&mut st, &hyper, &b).unwrap();
+        }
+        let wi = TrainState::weight_indices(&sess.entry);
+        wi.iter().map(|&pi| st.params[pi].sq_norm()).sum()
+    };
+    let with = norm_after(5.0);
+    let without = norm_after(0.0);
+    assert!(with < without * 0.95, "rho pull missing: {with} vs {without}");
+}
+
+#[test]
+fn eval_and_infer_agree() {
+    let Some(rt) = runtime() else { return };
+    let sess = rt.model("mlp").expect("mlp session");
+    let ds = data::for_input_shape(&sess.entry.input_shape);
+    let st = TrainState::init(&sess.entry, 7);
+
+    // infer_b64 logits must produce the same #correct as the eval artifact
+    let batch = ds.batch(Split::Test, 0, sess.entry.eval_batch);
+    let eval = sess.evaluate(&st, ds.as_ref(), 1).unwrap();
+
+    let mut correct = 0u64;
+    let b64 = 64;
+    for chunk in 0..(sess.entry.eval_batch / b64) {
+        let xs = &batch.x[chunk * b64 * 784..(chunk + 1) * b64 * 784];
+        let logits = sess.infer(&st, xs, b64).unwrap();
+        for i in 0..b64 {
+            let row = &logits[i * 10..(i + 1) * 10];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as i32;
+            if pred == batch.y[chunk * b64 + i] {
+                correct += 1;
+            }
+        }
+    }
+    assert_eq!(correct as f64, eval.correct, "eval/infer disagree");
+}
+
+#[test]
+fn train_state_init_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let entry = rt.manifest().model("mlp").unwrap();
+    let a = TrainState::init(entry, 42);
+    let b = TrainState::init(entry, 42);
+    let c = TrainState::init(entry, 43);
+    for (x, y) in a.params.iter().zip(&b.params) {
+        assert_eq!(x.data(), y.data());
+    }
+    assert_ne!(a.params[0].data(), c.params[0].data());
+}
