@@ -1,0 +1,13 @@
+# One entry point for builder and reviewer alike.
+#
+#   make verify  — the tier-1 gate: release build + full test suite
+#   make bench   — hot-path microbenchmarks with machine-readable output
+#                  (writes BENCH_hot_paths.json into the repo root)
+
+.PHONY: verify bench
+
+verify:
+	cargo build --release && cargo test -q
+
+bench:
+	cargo bench --bench hot_paths -- --json

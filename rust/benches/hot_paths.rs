@@ -5,70 +5,117 @@
 //! sized at real layer shapes (LeNet-5 fc1 = 400K, AlexNet fc1 = 37.7M
 //! scaled to 1M for iteration count sanity).
 //!
-//! Run: `cargo bench --bench hot_paths`
+//! Every path converted by the projection-engine PR is measured
+//! before/after in the same process: the seed's allocating / exact
+//! implementation vs the zero-alloc / histogram one, with the speedup
+//! printed per pair. Pass `--json` (or set `BENCH_JSON`) to also write
+//! `BENCH_hot_paths.json` with all medians and speedup ratios.
+//!
+//! Run: `cargo bench --bench hot_paths [-- --json]`
 
 use admm_nn::hwmodel::HwConfig;
-use admm_nn::projection;
+use admm_nn::projection::{self, ProjectionWorkspace};
 use admm_nn::quantize;
 use admm_nn::sparsity::{Csr, RelIndex};
-use admm_nn::util::bench::{bench, black_box};
-use admm_nn::util::Rng;
+use admm_nn::util::bench::{black_box, BenchSuite};
+use admm_nn::util::{Rng, ThreadPool};
 
 fn main() {
+    let mut suite = BenchSuite::new("hot_paths");
     println!("== L3 hot paths ==");
     let mut rng = Rng::new(42);
+    let pool = ThreadPool::global();
+    println!("(thread pool: {} workers)", pool.threads());
 
+    // -- prune_topk: allocating vs zero-alloc ------------------------------
+    let mut ws = ProjectionWorkspace::new();
     for n in [25_000usize, 400_000, 1_000_000] {
         let v = rng.normal_vec(n, 0.1);
         let k = n / 20;
-        bench(&format!("prune_topk n={n} k=5%"), 3, 15, || {
+        let alloc = suite.bench(&format!("prune_topk n={n} k=5% (alloc)"), 3, 15, || {
             black_box(projection::prune_topk(black_box(&v), k));
         });
+        let into = suite.bench(&format!("prune_topk n={n} k=5% (into)"), 3, 15, || {
+            projection::prune_topk_into(black_box(&v), k, &mut ws.idx, &mut ws.out);
+            black_box(ws.out.len());
+        });
+        suite.speedup(&format!("prune_topk n={n}"), &alloc, &into);
     }
 
     let v400k = rng.normal_vec(400_000, 0.1);
-    bench("prune_threshold n=400K", 3, 15, || {
+    suite.bench("prune_threshold n=400K", 3, 15, || {
         black_box(projection::prune_threshold(black_box(&v400k), 20_000));
     });
 
+    // -- quant_nearest: allocating vs zero-alloc vs zero-alloc+parallel ----
     let pruned = projection::prune_topk(&v400k, 20_000);
-    bench("quant_nearest n=400K (3 bits)", 3, 15, || {
+    let q_alloc = suite.bench("quant_nearest n=400K 3b (alloc)", 3, 15, || {
         black_box(projection::quant_nearest(black_box(&pruned), 0.02, 4));
     });
-    bench("quant_error n=400K", 3, 15, || {
+    let q_into = suite.bench("quant_nearest n=400K 3b (into)", 3, 15, || {
+        projection::quant_nearest_into(black_box(&pruned), 0.02, 4, &mut ws.out);
+        black_box(ws.out.len());
+    });
+    suite.speedup("quant_nearest n=400K (zero-alloc)", &q_alloc, &q_into);
+    // the path Constraint::project_with actually runs for Levels
+    let mut qout = vec![0.0f32; pruned.len()];
+    let q_par = suite.bench("quant_nearest n=400K 3b (into+par)", 3, 15, || {
+        projection::quant_nearest_into_par(pool, black_box(&pruned), 0.02, 4, &mut qout);
+        black_box(qout.len());
+    });
+    suite.speedup("quant_nearest n=400K", &q_alloc, &q_par);
+
+    suite.bench("quant_error n=400K", 3, 15, || {
         black_box(projection::quant_error(black_box(&pruned), 0.02, 4));
     });
-    bench("search_interval n=400K (golden, 80 iters)", 1, 5, || {
+
+    // -- quantizer search: exact (seed) vs histogram -----------------------
+    let s_exact = suite.bench("search_interval n=400K (exact, 80xO(n))", 1, 5, || {
+        black_box(quantize::search_interval_exact(black_box(&pruned), 3));
+    });
+    let s_hist = suite.bench("search_interval n=400K (histogram)", 1, 9, || {
         black_box(quantize::search_interval(black_box(&pruned), 3));
     });
-    bench("select_bits n=400K (tol 2e-2)", 1, 5, || {
+    suite.speedup("search_interval n=400K", &s_exact, &s_hist);
+
+    let b_exact = suite.bench("select_bits n=400K tol 2e-2 (exact)", 0, 3, || {
+        black_box(quantize::select_bits_exact(black_box(&pruned), 2e-2, 8));
+    });
+    let b_hist = suite.bench("select_bits n=400K tol 2e-2 (histogram)", 1, 9, || {
         black_box(quantize::select_bits(black_box(&pruned), 2e-2, 8));
     });
+    suite.speedup("select_bits n=400K", &b_exact, &b_hist);
 
     println!("\n== sparse encoding ==");
     let cfg = quantize::search_interval(&pruned, 3);
     let codes = quantize::encode_levels(&cfg.apply(&pruned), &cfg);
-    bench("RelIndex::encode n=400K (5% dense)", 3, 15, || {
+    let e_alloc = suite.bench("RelIndex::encode n=400K 5% (alloc)", 3, 15, || {
         black_box(RelIndex::encode(black_box(&codes), 8));
     });
+    let mut enc_reuse = RelIndex::new(8);
+    let e_into = suite.bench("RelIndex::encode n=400K 5% (into)", 3, 15, || {
+        enc_reuse.encode_into(black_box(&codes));
+        black_box(enc_reuse.stored_entries());
+    });
+    suite.speedup("RelIndex::encode n=400K", &e_alloc, &e_into);
     let enc = RelIndex::encode(&codes, 8);
-    bench("RelIndex::decode n=400K", 3, 15, || {
+    suite.bench("RelIndex::decode n=400K", 3, 15, || {
         black_box(enc.decode());
     });
-    bench("Csr::encode 800x500 (5% dense)", 3, 15, || {
+    suite.bench("Csr::encode 800x500 (5% dense)", 3, 15, || {
         black_box(Csr::encode(black_box(&codes), 800, 500));
     });
 
     println!("\n== hardware model ==");
     let hw = HwConfig::default();
-    bench("speedup() single point", 10, 50, || {
+    suite.bench("speedup() single point", 10, 50, || {
         black_box(hw.speedup(black_box(0.2)));
     });
-    bench("break_even_portion (60 bisections)", 5, 30, || {
+    suite.bench("break_even_portion (60 bisections)", 5, 30, || {
         black_box(hw.break_even_portion());
     });
     let portions: Vec<f64> = (1..=90).map(|i| i as f64 / 100.0).collect();
-    bench("fig4 sweep (90 points)", 5, 30, || {
+    suite.bench("fig4 sweep (90 points)", 5, 30, || {
         black_box(hw.sweep(black_box(&portions)));
     });
 
@@ -76,8 +123,18 @@ fn main() {
     use admm_nn::tensor::Tensor;
     let w = Tensor::new(vec![400_000], rng.normal_vec(400_000, 0.1));
     let z = Tensor::new(vec![400_000], rng.normal_vec(400_000, 0.1));
-    let mut u = Tensor::zeros(vec![400_000]);
-    bench("dual update U += W - Z (400K)", 3, 20, || {
-        u.add_assign(&w.sub(&z));
+    // seed path as the ADMM loop actually ran it: two temporaries plus a
+    // separate residual pass
+    let mut u_seed = Tensor::zeros(vec![400_000]);
+    let d_seed = suite.bench("dual update U+=W-Z +resid (seed, alloc)", 3, 20, || {
+        u_seed.add_assign(&w.sub(&z));
+        black_box(w.sub(&z).sq_norm());
     });
+    let mut u_fused = Tensor::zeros(vec![400_000]);
+    let d_fused = suite.bench("dual update U+=W-Z +resid (fused)", 3, 20, || {
+        black_box(u_fused.dual_update(&w, &z));
+    });
+    suite.speedup("dual_update n=400K", &d_seed, &d_fused);
+
+    suite.finish();
 }

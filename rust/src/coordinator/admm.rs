@@ -13,12 +13,28 @@
 //! configs. After the ADMM iterations, [`AdmmRunner::finalize`] hard-
 //! projects W onto the constraint set (the paper's final step before
 //! masked retraining), freezing masks for pruning.
+//!
+//! ## Projection engine
+//!
+//! Subproblem 2 and the dual update are the host-side (L3) hot path:
+//! layers are independent, so the Z-updates fan out across the scoped
+//! [`ThreadPool`], each worker reusing a [`ProjectionWorkspace`] so the
+//! O(n)-sized buffers are allocation-free in steady state (the fan-out
+//! bookkeeping itself is O(layers) per iteration — job/result vectors
+//! and scoped thread stacks — which is noise next to the per-weight
+//! work). Z is written in place, and U += W − Z is fused with the
+//! primal-residual accumulation ([`Tensor::dual_update`]). Per-layer
+//! arithmetic is untouched by the parallelism (no cross-layer reduction
+//! runs on the workers; the residual sum is reduced serially in layer
+//! order), so results are bit-identical to the seed's serial path.
 
 use crate::coordinator::trainer::{RunLog, TrainConfig, Trainer};
 use crate::data::Dataset;
-use crate::projection;
+use crate::projection::{self, ProjectionWorkspace};
 use crate::quantize::QuantConfig;
 use crate::runtime::{ModelSession, TrainState};
+use crate::tensor::Tensor;
+use crate::util::ThreadPool;
 
 /// Per-layer constraint set S_i.
 #[derive(Clone, Debug)]
@@ -30,12 +46,41 @@ pub enum Constraint {
 }
 
 impl Constraint {
-    /// Project one flat weight vector for layer `i`.
+    /// Project one flat weight vector for layer `i` (allocating
+    /// convenience used by cold paths and tests).
     pub fn project(&self, i: usize, v: &[f32]) -> Vec<f32> {
+        let mut ws = ProjectionWorkspace::new();
+        self.project_with(i, v, &mut ws);
+        std::mem::take(&mut ws.out)
+    }
+
+    /// Project `v` for layer `i` into `ws.out`, reusing the workspace's
+    /// scratch — the zero-alloc path the ADMM hot loop uses. Level
+    /// projections additionally split large layers across the pool
+    /// (bit-identical: pure elementwise) when not already inside a pool
+    /// fan-out — nested calls run inline, so concurrency never exceeds
+    /// the pool width.
+    pub fn project_with(&self, i: usize, v: &[f32], ws: &mut ProjectionWorkspace) {
+        let ProjectionWorkspace { input: _, out, idx } = ws;
         match self {
-            Constraint::Cardinality { keep } => projection::prune_topk(v, keep[i]),
-            Constraint::Levels { configs } => configs[i].apply(v),
+            Constraint::Cardinality { keep } => {
+                projection::prune_topk_into(v, keep[i], idx, out)
+            }
+            Constraint::Levels { configs } => projection::quant_nearest_into_par(
+                ThreadPool::global(),
+                v,
+                configs[i].q,
+                configs[i].half_m(),
+                out,
+            ),
         }
+    }
+
+    /// Project the staged `ws.input` for layer `i` into `ws.out`.
+    pub fn project_staged(&self, i: usize, ws: &mut ProjectionWorkspace) {
+        let input = std::mem::take(&mut ws.input);
+        self.project_with(i, &input, ws);
+        ws.input = input;
     }
 
     pub fn n_layers(&self) -> usize {
@@ -104,16 +149,37 @@ impl<'s, 'r> AdmmRunner<'s, 'r> {
     }
 
     /// Initialize Z by projecting the current weights (U starts at zero —
-    /// the standard warm start from a pretrained model).
+    /// the standard warm start from a pretrained model). Layers project
+    /// in parallel.
     pub fn warm_start(&self, st: &mut TrainState, constraint: &Constraint) {
         let wi = TrainState::weight_indices(&self.sess.entry);
         assert_eq!(wi.len(), constraint.n_layers());
-        for (li, &pi) in wi.iter().enumerate() {
-            let w = &st.params[pi];
-            let z = constraint.project(li, w.data());
-            st.zs[li] = crate::tensor::Tensor::new(w.shape().to_vec(), z);
-            st.us[li] = crate::tensor::Tensor::zeros(w.shape().to_vec());
-            st.rhos[li] = self.cfg.rho;
+        let rho = self.cfg.rho;
+        {
+            let TrainState { params, zs, us, rhos, .. } = st;
+            assert_eq!(zs.len(), wi.len(), "Z count != weight count");
+            assert_eq!(us.len(), wi.len(), "U count != weight count");
+            let params: &Vec<Tensor> = params;
+            let jobs: Vec<(usize, &mut Tensor, &mut Tensor)> = wi
+                .iter()
+                .zip(zs.iter_mut().zip(us.iter_mut()))
+                .map(|(&pi, (z, u))| (pi, z, u))
+                .collect();
+            let mut wss: Vec<ProjectionWorkspace> = Vec::new();
+            ThreadPool::global().map_with_scratch(
+                jobs,
+                &mut wss,
+                ProjectionWorkspace::new,
+                |li, (pi, z, u), ws| {
+                    let w = &params[pi];
+                    constraint.project_with(li, w.data(), ws);
+                    replace_tensor(z, w.shape(), &ws.out);
+                    zero_tensor(u, w.shape());
+                },
+            );
+            for r in rhos.iter_mut() {
+                *r = rho;
+            }
         }
         self.sess.invalidate_slow();
     }
@@ -127,6 +193,9 @@ impl<'s, 'r> AdmmRunner<'s, 'r> {
         let wi = TrainState::weight_indices(&self.sess.entry);
         let mut trace = AdmmTrace::default();
         let mut trainer = Trainer::new(self.sess, self.data);
+        let pool = ThreadPool::global();
+        // per-worker scratch reused across every iteration of the phase
+        let mut wss: Vec<ProjectionWorkspace> = Vec::new();
         for iter in 0..self.cfg.iters {
             // Subproblem 1: ADAM on loss + penalty (fresh moments per
             // iteration — the regularization target moved).
@@ -140,25 +209,38 @@ impl<'s, 'r> AdmmRunner<'s, 'r> {
                 },
             )?;
 
-            // Subproblem 2 + dual update, per weight tensor.
-            let mut resid = 0.0f64;
-            let mut count = 0usize;
-            for (li, &pi) in wi.iter().enumerate() {
-                let w = &st.params[pi];
-                let wu = w.add(&st.us[li]);
-                let z = constraint.project(li, wu.data());
-                let z = crate::tensor::Tensor::new(w.shape().to_vec(), z);
-                // U += W − Z
-                let mut u = std::mem::replace(
-                    &mut st.us[li],
-                    crate::tensor::Tensor::zeros(vec![0]),
+            // Subproblem 2 + dual update: layers are independent, so the
+            // projections fan out across the pool; each returns its
+            // ‖W − Z‖² which is reduced serially in layer order.
+            let (resid, count) = {
+                let TrainState { params, zs, us, .. } = st;
+                assert_eq!(zs.len(), wi.len(), "Z count != weight count");
+                assert_eq!(us.len(), wi.len(), "U count != weight count");
+                let params: &Vec<Tensor> = params;
+                let jobs: Vec<(usize, &mut Tensor, &mut Tensor)> = wi
+                    .iter()
+                    .zip(zs.iter_mut().zip(us.iter_mut()))
+                    .map(|(&pi, (z, u))| (pi, z, u))
+                    .collect();
+                let layer_sq = pool.map_with_scratch(
+                    jobs,
+                    &mut wss,
+                    ProjectionWorkspace::new,
+                    |li, (pi, z, u), ws| {
+                        let w = &params[pi];
+                        // Z ← Π(W + U), staged and projected in reusable
+                        // scratch, then written into Z in place.
+                        ws.load_sum(w.data(), u.data());
+                        constraint.project_staged(li, ws);
+                        replace_tensor(z, w.shape(), &ws.out);
+                        // U += W − Z, fused with the residual.
+                        u.dual_update(w, z)
+                    },
                 );
-                u.add_assign(&w.sub(&z));
-                resid += w.sub(&z).sq_norm();
-                count += w.len();
-                st.us[li] = u;
-                st.zs[li] = z;
-            }
+                let resid: f64 = layer_sq.iter().sum();
+                let count: usize = wi.iter().map(|&pi| params[pi].len()).sum();
+                (resid, count)
+            };
             self.sess.invalidate_slow();
             let rms = (resid / count.max(1) as f64).sqrt();
             trace.primal_residual.push(rms);
@@ -175,25 +257,73 @@ impl<'s, 'r> AdmmRunner<'s, 'r> {
 
     /// Hard-project W onto the constraint set and (for pruning) freeze
     /// masks; clears ρ/Z/U so subsequent training is pure masked retrain.
+    /// Layers project in parallel.
     pub fn finalize(&self, st: &mut TrainState, constraint: &Constraint) {
         let wi = TrainState::weight_indices(&self.sess.entry);
-        for (li, &pi) in wi.iter().enumerate() {
-            let shape = st.params[pi].shape().to_vec();
-            let projected = constraint.project(li, st.params[pi].data());
-            if matches!(constraint, Constraint::Cardinality { .. }) {
-                st.masks[li] = crate::tensor::Tensor::new(
-                    shape.clone(),
-                    projection::mask_of(&projected),
-                );
+        {
+            let TrainState { params, masks, zs, us, rhos, .. } = st;
+            assert_eq!(masks.len(), wi.len(), "mask count != weight count");
+            assert_eq!(zs.len(), wi.len(), "Z count != weight count");
+            assert_eq!(us.len(), wi.len(), "U count != weight count");
+            let wparams = TrainState::weight_tensors_mut(params, &wi);
+            let jobs: Vec<(&mut Tensor, &mut Tensor, &mut Tensor, &mut Tensor)> =
+                wparams
+                    .into_iter()
+                    .zip(masks.iter_mut())
+                    .zip(zs.iter_mut().zip(us.iter_mut()))
+                    .map(|((w, m), (z, u))| (w, m, z, u))
+                    .collect();
+            let freeze_masks = matches!(constraint, Constraint::Cardinality { .. });
+            let mut wss: Vec<ProjectionWorkspace> = Vec::new();
+            ThreadPool::global().map_with_scratch(
+                jobs,
+                &mut wss,
+                ProjectionWorkspace::new,
+                |li, (w, m, z, u), ws| {
+                    constraint.project_with(li, w.data(), ws);
+                    if freeze_masks {
+                        replace_with(m, w.shape(), |dst| {
+                            projection::mask_of_slice(&ws.out, dst)
+                        });
+                    }
+                    w.copy_from(&ws.out);
+                    zero_tensor(z, w.shape());
+                    zero_tensor(u, w.shape());
+                },
+            );
+            for r in rhos.iter_mut() {
+                *r = 0.0;
             }
-            st.params[pi] = crate::tensor::Tensor::new(shape.clone(), projected);
-            st.zs[li] = crate::tensor::Tensor::zeros(shape.clone());
-            st.us[li] = crate::tensor::Tensor::zeros(shape);
-            st.rhos[li] = 0.0;
         }
         st.reset_adam();
         self.sess.invalidate_slow();
     }
+}
+
+/// Overwrite `t` with `data`, rebuilding only if the shape differs.
+fn replace_tensor(t: &mut Tensor, shape: &[usize], data: &[f32]) {
+    if t.shape() == shape && t.len() == data.len() {
+        t.copy_from(data);
+    } else {
+        *t = Tensor::new(shape.to_vec(), data.to_vec());
+    }
+}
+
+/// Zero `t` in place, rebuilding only if the shape differs.
+fn zero_tensor(t: &mut Tensor, shape: &[usize]) {
+    if t.shape() == shape {
+        t.fill(0.0);
+    } else {
+        *t = Tensor::zeros(shape.to_vec());
+    }
+}
+
+/// Overwrite `t` via `f(dst)`, rebuilding first if the shape differs.
+fn replace_with(t: &mut Tensor, shape: &[usize], f: impl FnOnce(&mut [f32])) {
+    if t.shape() != shape {
+        *t = Tensor::zeros(shape.to_vec());
+    }
+    f(t.data_mut());
 }
 
 #[cfg(test)]
@@ -217,6 +347,83 @@ mod tests {
         let c = Constraint::Levels { configs: vec![cfg] };
         let out = c.project(0, &[0.3, 0.0, -2.6]);
         assert_eq!(out, vec![0.5, 0.0, -2.0]);
+    }
+
+    #[test]
+    fn workspace_projection_matches_allocating_path() {
+        let mut rng = Rng::new(7);
+        let c = Constraint::Cardinality { keep: vec![50, 10] };
+        let mut ws = ProjectionWorkspace::new();
+        for li in [0usize, 1] {
+            let v = rng.normal_vec(300, 1.0);
+            c.project_with(li, &v, &mut ws);
+            assert_eq!(ws.out, c.project(li, &v));
+            // staged path: input = v + 0
+            ws.load_sum(&v, &vec![0.0; 300]);
+            c.project_staged(li, &mut ws);
+            assert_eq!(ws.out, c.project(li, &v));
+        }
+    }
+
+    #[test]
+    fn parallel_z_update_matches_serial() {
+        // The exact job the runner fans out, run through the pool at
+        // several widths — results must be bit-identical to serial.
+        let mut rng = Rng::new(8);
+        let n_layers = 7;
+        let sizes = [64usize, 1000, 333, 2048, 10, 512, 777];
+        let keep: Vec<usize> = sizes.iter().map(|n| n / 4).collect();
+        let c = Constraint::Cardinality { keep };
+        let ws_list: Vec<Vec<f32>> =
+            sizes.iter().map(|&n| rng.normal_vec(n, 1.0)).collect();
+        let us0: Vec<Vec<f32>> =
+            sizes.iter().map(|&n| rng.normal_vec(n, 0.1)).collect();
+
+        let run = |threads: usize| -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<f64>) {
+            let pool = ThreadPool::new(threads);
+            let mut zs: Vec<Tensor> =
+                sizes.iter().map(|&n| Tensor::zeros(vec![n])).collect();
+            let mut us: Vec<Tensor> = us0
+                .iter()
+                .zip(&sizes)
+                .map(|(u, &n)| Tensor::new(vec![n], u.clone()))
+                .collect();
+            let ws_t: Vec<Tensor> = ws_list
+                .iter()
+                .zip(&sizes)
+                .map(|(w, &n)| Tensor::new(vec![n], w.clone()))
+                .collect();
+            let jobs: Vec<(usize, &mut Tensor, &mut Tensor)> = (0..n_layers)
+                .zip(zs.iter_mut().zip(us.iter_mut()))
+                .map(|(li, (z, u))| (li, z, u))
+                .collect();
+            let mut wss: Vec<ProjectionWorkspace> = Vec::new();
+            let resid = pool.map_with_scratch(
+                jobs,
+                &mut wss,
+                ProjectionWorkspace::new,
+                |li, (pi, z, u), ws| {
+                    let w = &ws_t[pi];
+                    ws.load_sum(w.data(), u.data());
+                    c.project_staged(li, ws);
+                    replace_tensor(z, w.shape(), &ws.out);
+                    u.dual_update(w, z)
+                },
+            );
+            (
+                zs.into_iter().map(|t| t.into_data()).collect(),
+                us.into_iter().map(|t| t.into_data()).collect(),
+                resid,
+            )
+        };
+
+        let serial = run(1);
+        for threads in [2, 4, 8] {
+            let par = run(threads);
+            assert_eq!(serial.0, par.0, "Z mismatch at {threads} threads");
+            assert_eq!(serial.1, par.1, "U mismatch at {threads} threads");
+            assert_eq!(serial.2, par.2, "resid mismatch at {threads} threads");
+        }
     }
 
     #[test]

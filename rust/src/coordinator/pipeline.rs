@@ -20,9 +20,11 @@ use crate::coordinator::admm::{AdmmConfig, AdmmRunner, Constraint};
 use crate::coordinator::checkpoint::{CompressedLayer, CompressedModel};
 use crate::coordinator::trainer::{TrainConfig, Trainer};
 use crate::data::Dataset;
+use crate::projection::quant_nearest_inplace;
 use crate::quantize::{search_interval, select_bits, QuantConfig};
 use crate::runtime::{ModelSession, TrainState};
 use crate::tensor::Tensor;
+use crate::util::ThreadPool;
 
 /// Configuration of the full joint pipeline.
 #[derive(Clone, Debug)]
@@ -121,15 +123,23 @@ pub fn run_pipeline(
     }
 
     // -- stage 4: quantizer selection on the survivors ---------------------
-    let mut quant: Vec<QuantConfig> = Vec::with_capacity(wps.len());
-    for (li, &pi) in wi.iter().enumerate() {
-        let w = st.params[pi].data();
-        let cfg_q = match &cfg.quant_bits {
-            Some(bits) => search_interval(w, bits[li]),
-            None => select_bits(w, cfg.quant_tol, cfg.max_bits),
-        };
-        quant.push(cfg_q);
-    }
+    // Histogram-accelerated searches, one layer per pool worker (layers
+    // are read-only and independent here).
+    let mut quant: Vec<QuantConfig> = {
+        let params = &st.params;
+        ThreadPool::global().map_with_scratch(
+            wi.clone(),
+            &mut Vec::new(),
+            || (),
+            |li, pi, _| {
+                let w = params[pi].data();
+                match &cfg.quant_bits {
+                    Some(bits) => search_interval(w, bits[li]),
+                    None => select_bits(w, cfg.quant_tol, cfg.max_bits),
+                }
+            },
+        )
+    };
 
     // -- stage 5: ADMM quantization (or direct snap) -----------------------
     let levels = Constraint::Levels { configs: quant.clone() };
@@ -144,12 +154,22 @@ pub fn run_pipeline(
     } else {
         runner.finalize(st, &levels);
     }
-    // Re-derive the interval on the final weights (ADMM moved them).
-    for (li, &pi) in wi.iter().enumerate() {
-        let bits = quant[li].bits;
-        quant[li] = search_interval(st.params[pi].data(), bits);
-        let snapped = quant[li].apply(st.params[pi].data());
-        st.params[pi] = Tensor::new(st.params[pi].shape().to_vec(), snapped);
+    // Re-derive the interval on the final weights (ADMM moved them) and
+    // snap in place — again one layer per worker, no allocation.
+    {
+        let wparams = TrainState::weight_tensors_mut(&mut st.params, &wi);
+        let jobs: Vec<(&mut QuantConfig, &mut Tensor)> =
+            quant.iter_mut().zip(wparams).collect();
+        ThreadPool::global().map_with_scratch(
+            jobs,
+            &mut Vec::new(),
+            || (),
+            |_, (qc, t), _| {
+                let bits = qc.bits;
+                *qc = search_interval(t.data(), bits);
+                quant_nearest_inplace(t.data_mut(), qc.q, qc.half_m());
+            },
+        );
     }
     sess.invalidate_slow();
 

@@ -12,9 +12,16 @@
 //!   dual updates), the joint prune→quantize pipeline (paper Fig. 2), and
 //!   the hardware-aware compression algorithm (paper Fig. 5).
 //! * [`projection`] — host-side Euclidean projections onto the paper's
-//!   constraint sets (cardinality / equal-interval levels).
-//! * [`quantize`] — per-layer interval search (binary search on q_i) and
-//!   bit-width selection (paper §3.4.2).
+//!   constraint sets (cardinality / equal-interval levels), each with a
+//!   zero-allocation `_into` variant plus the reusable
+//!   [`projection::ProjectionWorkspace`] scratch the ADMM hot loop keeps
+//!   per worker thread.
+//! * [`quantize`] — per-layer interval search and bit-width selection
+//!   (paper §3.4.2), histogram-accelerated: one O(n) pass builds a
+//!   [`quantize::MagnitudeHistogram`] of per-bin moments shared across
+//!   all bit-widths, so every golden-section probe costs O(bins) instead
+//!   of O(n); the seed's exact path survives as
+//!   [`quantize::search_interval_exact`] for cross-validation.
 //! * [`sparsity`] — compressed weight storage (CSR, Han-style relative
 //!   index) and the model-size accounting behind Tables 5–6.
 //! * [`hwmodel`] — the PE-array + SRAM accelerator model that yields the
@@ -28,6 +35,11 @@
 //! * [`data`] — deterministic synthetic datasets (MNIST-like digits,
 //!   ImageNet-proxy textures) standing in for the paper's corpora.
 //! * [`report`] — regenerates every table and figure of the evaluation.
+//! * [`util`] — deterministic RNG, search primitives, the scoped
+//!   [`util::ThreadPool`] (std-only) that fans per-layer Z-updates and
+//!   quantizer searches across cores with bit-identical results, and the
+//!   bench harness with optional machine-readable JSON output
+//!   ([`util::bench::BenchSuite`]).
 //!
 //! Python never runs at coordination time: after `make artifacts` the
 //! binary is self-contained.

@@ -11,6 +11,12 @@
 //!   {±q, ±2q, …, ±(M/2)q}; zeros (pruned weights) are preserved.
 //! * [`joint_project`] — prune-then-quantize composition used by the joint
 //!   pipeline's final hard projection.
+//!
+//! Every projection also has a zero-allocation `_into` variant writing
+//! into caller-owned buffers; [`ProjectionWorkspace`] bundles the scratch
+//! the ADMM hot loop reuses per worker thread. The `_into` variants are
+//! bit-identical to the allocating ones (property-tested) — same
+//! comparator, same elementwise formula, only the storage differs.
 
 /// Keep the `k` largest-|v| entries of `v`, zeroing the rest.
 ///
@@ -18,16 +24,29 @@
 /// formulation in the kernel which may keep extra tied entries — the
 /// difference only matters on exact float ties; tests pin both behaviours.
 pub fn prune_topk(v: &[f32], k: usize) -> Vec<f32> {
+    let mut idx = Vec::new();
+    let mut out = Vec::new();
+    prune_topk_into(v, k, &mut idx, &mut out);
+    out
+}
+
+/// [`prune_topk`] into caller-owned buffers: `idx` is index-selection
+/// scratch, `out` receives the projection. No allocation after the first
+/// call at a given size.
+pub fn prune_topk_into(v: &[f32], k: usize, idx: &mut Vec<u32>, out: &mut Vec<f32>) {
     let n = v.len();
+    out.clear();
     if k >= n {
-        return v.to_vec();
+        out.extend_from_slice(v);
+        return;
     }
-    let mut out = vec![0.0f32; n];
+    out.resize(n, 0.0);
     if k == 0 {
-        return out;
+        return;
     }
     // select_nth_unstable on |v| descending: O(n) average.
-    let mut idx: Vec<u32> = (0..n as u32).collect();
+    idx.clear();
+    idx.extend(0..n as u32);
     idx.select_nth_unstable_by(k - 1, |&a, &b| {
         let (va, vb) = (v[a as usize].abs(), v[b as usize].abs());
         vb.partial_cmp(&va)
@@ -37,7 +56,6 @@ pub fn prune_topk(v: &[f32], k: usize) -> Vec<f32> {
     for &i in &idx[..k] {
         out[i as usize] = v[i as usize];
     }
-    out
 }
 
 /// Magnitude threshold that [`prune_topk`] implies (the k-th largest |v|),
@@ -57,21 +75,63 @@ pub fn prune_threshold(v: &[f32], k: usize) -> f32 {
     mags[pos]
 }
 
+/// The scalar snap both quantization paths share: nearest level in
+/// {±q, …, ±hm·q} for nonzero x, zero preserved. `hm` = M/2 as f32.
+#[inline]
+pub fn quant_scalar(x: f32, q: f32, hm: f32) -> f32 {
+    if x == 0.0 {
+        0.0
+    } else {
+        let level = (x.abs() / q).round().clamp(1.0, hm);
+        x.signum() * level * q
+    }
+}
+
 /// Snap every nonzero entry to the nearest level in {±q, …, ±(M/2)q}.
 /// `half_m` = M/2 (number of positive levels); zero entries stay zero.
 pub fn quant_nearest(v: &[f32], q: f32, half_m: u32) -> Vec<f32> {
     assert!(q > 0.0, "interval must be positive");
     let hm = half_m as f32;
-    v.iter()
-        .map(|&x| {
-            if x == 0.0 {
-                0.0
-            } else {
-                let level = (x.abs() / q).round().clamp(1.0, hm);
-                x.signum() * level * q
-            }
-        })
-        .collect()
+    v.iter().map(|&x| quant_scalar(x, q, hm)).collect()
+}
+
+/// [`quant_nearest`] into a caller-owned buffer (zero-alloc once warm).
+pub fn quant_nearest_into(v: &[f32], q: f32, half_m: u32, out: &mut Vec<f32>) {
+    assert!(q > 0.0, "interval must be positive");
+    let hm = half_m as f32;
+    out.clear();
+    out.extend(v.iter().map(|&x| quant_scalar(x, q, hm)));
+}
+
+/// [`quant_nearest_into`] with intra-op parallelism: the slice is split
+/// into contiguous chunks, one per pool worker (the pool runs small
+/// slices — and any call made from inside a pool fan-out — inline, so
+/// concurrency never exceeds the pool width). Pure elementwise, so
+/// results are bit-identical to the serial path. This is what
+/// `Constraint::project_with` runs for level projections.
+pub fn quant_nearest_into_par(
+    pool: &crate::util::ThreadPool,
+    v: &[f32],
+    q: f32,
+    half_m: u32,
+    out: &mut Vec<f32>,
+) {
+    assert!(q > 0.0, "interval must be positive");
+    if out.len() != v.len() {
+        out.clear();
+        out.resize(v.len(), 0.0);
+    }
+    let hm = half_m as f32;
+    pool.par_zip_map(v, out, |x| quant_scalar(x, q, hm));
+}
+
+/// [`quant_nearest`] in place.
+pub fn quant_nearest_inplace(v: &mut [f32], q: f32, half_m: u32) {
+    assert!(q > 0.0, "interval must be positive");
+    let hm = half_m as f32;
+    for x in v.iter_mut() {
+        *x = quant_scalar(*x, q, hm);
+    }
 }
 
 /// Total squared quantization error over nonzero entries (the q-search
@@ -96,12 +156,70 @@ pub fn quant_error(v: &[f32], q: f32, half_m: u32) -> f64 {
 /// steps in this order: "weight pruning first, then ... quantization on
 /// the remaining, non-zero weights").
 pub fn joint_project(v: &[f32], k: usize, q: f32, half_m: u32) -> Vec<f32> {
-    quant_nearest(&prune_topk(v, k), q, half_m)
+    let mut idx = Vec::new();
+    let mut out = Vec::new();
+    joint_project_into(v, k, q, half_m, &mut idx, &mut out);
+    out
+}
+
+/// [`joint_project`] into caller-owned buffers.
+pub fn joint_project_into(
+    v: &[f32],
+    k: usize,
+    q: f32,
+    half_m: u32,
+    idx: &mut Vec<u32>,
+    out: &mut Vec<f32>,
+) {
+    prune_topk_into(v, k, idx, out);
+    quant_nearest_inplace(out, q, half_m);
 }
 
 /// Binary mask of the nonzero pattern (1.0 where kept).
 pub fn mask_of(v: &[f32]) -> Vec<f32> {
     v.iter().map(|&x| if x != 0.0 { 1.0 } else { 0.0 }).collect()
+}
+
+/// [`mask_of`] written into an existing equally-sized buffer.
+pub fn mask_of_slice(src: &[f32], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "mask buffer size mismatch");
+    for (d, &x) in dst.iter_mut().zip(src) {
+        *d = if x != 0.0 { 1.0 } else { 0.0 };
+    }
+}
+
+/// Reusable per-worker scratch for the ADMM projection hot loop: staging
+/// for W+U, the projection output, and top-k index scratch. One of these
+/// lives per pool worker and persists across ADMM iterations, so the
+/// steady-state Z-update's O(n) buffers are allocation-free (the pool's
+/// per-call job bookkeeping is O(layers), not O(weights)).
+#[derive(Default)]
+pub struct ProjectionWorkspace {
+    /// Input staging (e.g. W + U for the Z-update).
+    pub input: Vec<f32>,
+    /// Last projection result.
+    pub out: Vec<f32>,
+    /// Index scratch for top-k selection.
+    pub idx: Vec<u32>,
+}
+
+impl ProjectionWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stage `a + b` elementwise into `input` (the W+U of the Z-update).
+    pub fn load_sum(&mut self, a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len(), "load_sum length mismatch");
+        self.input.clear();
+        self.input.extend(a.iter().zip(b).map(|(&x, &y)| x + y));
+    }
+
+    /// Stage a copy of `v` into `input`.
+    pub fn load(&mut self, v: &[f32]) {
+        self.input.clear();
+        self.input.extend_from_slice(v);
+    }
 }
 
 #[cfg(test)]
@@ -145,6 +263,19 @@ mod tests {
             if *o != 0.0 {
                 assert!(x.abs() >= thresh - f32::EPSILON);
             }
+        }
+    }
+
+    #[test]
+    fn topk_into_reuses_buffers_bit_identical() {
+        let mut rng = Rng::new(21);
+        let mut idx = Vec::new();
+        let mut out = Vec::new();
+        // deliberately different sizes back-to-back to exercise reuse
+        for (n, k) in [(1000usize, 100usize), (500, 499), (1000, 0), (64, 64)] {
+            let v = rng.normal_vec(n, 1.0);
+            prune_topk_into(&v, k, &mut idx, &mut out);
+            assert_eq!(out, prune_topk(&v, k), "n={n} k={k}");
         }
     }
 
@@ -196,6 +327,36 @@ mod tests {
     }
 
     #[test]
+    fn quant_into_and_inplace_bit_identical() {
+        let mut rng = Rng::new(22);
+        let mut v = rng.normal_vec(2000, 0.3);
+        for i in (0..2000).step_by(7) {
+            v[i] = 0.0;
+        }
+        let want = quant_nearest(&v, 0.04, 8);
+        let mut out = vec![99.0f32; 5]; // dirty, wrong-sized buffer
+        quant_nearest_into(&v, 0.04, 8, &mut out);
+        assert_eq!(out, want);
+        let mut inplace = v.clone();
+        quant_nearest_inplace(&mut inplace, 0.04, 8);
+        assert_eq!(inplace, want);
+    }
+
+    #[test]
+    fn quant_par_bit_identical_at_any_width() {
+        let mut rng = Rng::new(24);
+        // big enough that par_zip_map actually splits (> MIN_CHUNK)
+        let v = rng.normal_vec(100_000, 0.3);
+        let want = quant_nearest(&v, 0.04, 8);
+        for threads in [1usize, 2, 5] {
+            let pool = crate::util::ThreadPool::new(threads);
+            let mut out = vec![99.0f32; 7]; // dirty, wrong-sized
+            quant_nearest_into_par(&pool, &v, 0.04, 8, &mut out);
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
     fn joint_projection_composition() {
         let mut rng = Rng::new(6);
         let v = rng.normal_vec(256, 1.0);
@@ -211,7 +372,31 @@ mod tests {
     }
 
     #[test]
+    fn joint_into_matches_composed_allocating_path() {
+        let mut rng = Rng::new(23);
+        let v = rng.normal_vec(512, 1.0);
+        let composed = quant_nearest(&prune_topk(&v, 100), 0.2, 4);
+        assert_eq!(joint_project(&v, 100, 0.2, 4), composed);
+        let mut idx = Vec::new();
+        let mut out = Vec::new();
+        joint_project_into(&v, 100, 0.2, 4, &mut idx, &mut out);
+        assert_eq!(out, composed);
+    }
+
+    #[test]
     fn mask_of_pattern() {
         assert_eq!(mask_of(&[0.0, 2.0, -0.5]), vec![0.0, 1.0, 1.0]);
+        let mut dst = vec![7.0f32; 3];
+        mask_of_slice(&[0.0, 2.0, -0.5], &mut dst);
+        assert_eq!(dst, vec![0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn workspace_staging() {
+        let mut ws = ProjectionWorkspace::new();
+        ws.load_sum(&[1.0, 2.0], &[0.5, -2.5]);
+        assert_eq!(ws.input, vec![1.5, -0.5]);
+        ws.load(&[3.0]);
+        assert_eq!(ws.input, vec![3.0]);
     }
 }

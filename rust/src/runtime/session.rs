@@ -108,6 +108,25 @@ impl TrainState {
             .map(|(i, _)| i)
             .collect()
     }
+
+    /// Mutable references to the weight tensors of `params`, in manifest
+    /// weight order (`wi` is [`TrainState::weight_indices`], which is
+    /// ascending) — for zipping against the per-layer masks/Z/U vectors.
+    pub fn weight_tensors_mut<'a>(
+        params: &'a mut [Tensor],
+        wi: &[usize],
+    ) -> Vec<&'a mut Tensor> {
+        let mut is_weight = vec![false; params.len()];
+        for &pi in wi {
+            is_weight[pi] = true;
+        }
+        params
+            .iter_mut()
+            .enumerate()
+            .filter(|(i, _)| is_weight[*i])
+            .map(|(_, t)| t)
+            .collect()
+    }
 }
 
 /// Per-step scalars returned by the train artifact.

@@ -30,31 +30,56 @@ pub struct RelIndex {
 }
 
 impl RelIndex {
+    /// Empty encoder with a fixed index width, ready for
+    /// [`RelIndex::encode_into`] reuse across layers.
+    pub fn new(index_bits: u32) -> Self {
+        assert!((1..=16).contains(&index_bits));
+        RelIndex { index_bits, entries: Vec::new(), dense_len: 0 }
+    }
+
     /// Encode the nonzero pattern of `codes` (level codes; 0 = pruned).
     pub fn encode(codes: &[i32], index_bits: u32) -> Self {
-        assert!((1..=16).contains(&index_bits));
-        let max_gap = (1u32 << index_bits) - 1;
-        let mut entries = Vec::new();
+        let mut enc = Self::new(index_bits);
+        enc.encode_into(codes);
+        enc
+    }
+
+    /// Re-encode into this value's existing `entries` buffer — zero-alloc
+    /// for callers that encode repeatedly without retaining the encoder
+    /// (benches, future streaming packaging; `CompressedLayer` keeps one
+    /// `RelIndex` per layer, so it still uses [`RelIndex::encode`] — see
+    /// the ROADMAP open item on parallel/streaming packaging).
+    pub fn encode_into(&mut self, codes: &[i32]) {
+        let max_gap = (1u32 << self.index_bits) - 1;
+        self.entries.clear();
         let mut gap = 0u32;
         for &c in codes {
             if c == 0 {
                 gap += 1;
                 if gap == max_gap {
                     // padding zero: consumes a slot, stores nothing
-                    entries.push((max_gap, 0));
+                    self.entries.push((max_gap, 0));
                     gap = 0;
                 }
             } else {
-                entries.push((gap, c));
+                self.entries.push((gap, c));
                 gap = 0;
             }
         }
-        RelIndex { index_bits, entries, dense_len: codes.len() }
+        self.dense_len = codes.len();
     }
 
     /// Reconstruct the dense level-code vector.
     pub fn decode(&self) -> Vec<i32> {
-        let mut out = vec![0i32; self.dense_len];
+        let mut out = Vec::new();
+        self.decode_into(&mut out);
+        out
+    }
+
+    /// [`RelIndex::decode`] into a caller-owned buffer.
+    pub fn decode_into(&self, out: &mut Vec<i32>) {
+        out.clear();
+        out.resize(self.dense_len, 0);
         let mut pos = 0usize;
         let max_gap = (1u32 << self.index_bits) - 1;
         for &(gap, code) in &self.entries {
@@ -66,7 +91,6 @@ impl RelIndex {
             out[pos] = code;
             pos += 1;
         }
-        out
     }
 
     /// Stored entries (incl. padding zeros) — what SRAM must hold.
@@ -293,6 +317,22 @@ mod tests {
         assert!(enc8.stored_entries() < enc4.stored_entries());
         // geometric model: ~8.4% pads at 1% density with 8-bit gaps
         assert!(enc8.stored_entries() as f64 <= nnz as f64 * 1.15 + 2.0);
+    }
+
+    #[test]
+    fn rel_index_encode_into_reuse_matches_fresh() {
+        let mut enc = RelIndex::new(4);
+        let mut decoded = Vec::new();
+        // reuse the same encoder across layers of different shapes/densities
+        for (keep, seed) in [(0.5, 1u64), (0.01, 2), (0.9, 3)] {
+            let codes = random_codes(20_000, keep, seed);
+            enc.encode_into(&codes);
+            let fresh = RelIndex::encode(&codes, 4);
+            assert_eq!(enc.entries, fresh.entries, "keep={keep}");
+            assert_eq!(enc.dense_len, fresh.dense_len);
+            enc.decode_into(&mut decoded);
+            assert_eq!(decoded, codes);
+        }
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Tiny benchmarking harness for the `cargo bench` targets (offline
 //! build: no criterion). Median-of-runs wall-clock with warmup, plus a
-//! throughput formatter.
+//! throughput formatter and an optional machine-readable JSON dump
+//! ([`BenchSuite`]) so the perf trajectory can be tracked across PRs.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// Result of one benchmark case.
@@ -64,6 +66,99 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// True when the invocation asked for machine-readable output: `--json`
+/// on the bench binary's command line, or the `BENCH_JSON` env var.
+pub fn json_requested() -> bool {
+    std::env::args().any(|a| a == "--json") || std::env::var_os("BENCH_JSON").is_some()
+}
+
+/// Collects [`BenchResult`]s and before/after speedup ratios for one
+/// bench binary, and writes `BENCH_<name>.json` on [`BenchSuite::finish`]
+/// when JSON output was requested (`--json` / `BENCH_JSON`;
+/// `BENCH_JSON_DIR` overrides the output directory).
+pub struct BenchSuite {
+    pub name: String,
+    pub results: Vec<BenchResult>,
+    pub speedups: Vec<(String, f64)>,
+}
+
+impl BenchSuite {
+    pub fn new(name: &str) -> Self {
+        BenchSuite { name: name.to_string(), results: Vec::new(), speedups: Vec::new() }
+    }
+
+    /// Run and record one case (same reporting as the free [`bench`]).
+    pub fn bench(&mut self, name: &str, warmup: usize, iters: usize,
+                 f: impl FnMut()) -> BenchResult {
+        let r = bench(name, warmup, iters, f);
+        self.results.push(r.clone());
+        r
+    }
+
+    /// Record and print the before/after ratio of a converted hot path.
+    pub fn speedup(&mut self, label: &str, before: &BenchResult,
+                   after: &BenchResult) -> f64 {
+        let ratio = if after.median_s > 0.0 {
+            before.median_s / after.median_s
+        } else {
+            f64::INFINITY
+        };
+        println!("  -> {label}: {ratio:.2}x speedup ({} -> {})",
+                 fmt_time(before.median_s), fmt_time(after.median_s));
+        self.speedups.push((label.to_string(), ratio));
+        ratio
+    }
+
+    fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("median_s", Json::num(r.median_s)),
+                    ("min_s", Json::num(r.min_s)),
+                    ("iters", Json::num(r.iters as f64)),
+                ])
+            })
+            .collect();
+        let speedups: Vec<(&str, Json)> = self
+            .speedups
+            .iter()
+            .map(|(label, ratio)| {
+                let r = if ratio.is_finite() { *ratio } else { 1e9 };
+                (label.as_str(), Json::num(r))
+            })
+            .collect();
+        Json::obj(vec![
+            ("bench", Json::str(self.name.clone())),
+            ("results", Json::Arr(results)),
+            ("speedups", Json::obj(speedups)),
+        ])
+        .to_string()
+    }
+
+    /// Write `BENCH_<name>.json` if requested; returns the path written.
+    pub fn finish(&self) -> Option<PathBuf> {
+        if !json_requested() {
+            return None;
+        }
+        let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+        let path = PathBuf::from(dir).join(format!("BENCH_{}.json", self.name));
+        match std::fs::write(&path, self.to_json() + "\n") {
+            Ok(()) => {
+                println!("\nwrote {}", path.display());
+                Some(path)
+            }
+            Err(e) => {
+                eprintln!("failed to write {}: {e}", path.display());
+                None
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,6 +172,32 @@ mod tests {
         assert_eq!(count, 7);
         assert_eq!(r.iters, 5);
         assert!(r.median_s >= 0.0);
+    }
+
+    #[test]
+    fn suite_records_and_serializes() {
+        let mut suite = BenchSuite::new("unit");
+        let a = suite.bench("slow \"path\"", 0, 3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        let b = suite.bench("fast", 0, 3, || {});
+        let ratio = suite.speedup("conversion", &a, &b);
+        assert!(ratio >= 1.0 || a.median_s <= b.median_s);
+        // round-trips through the shared util::json serializer/parser
+        let json = suite.to_json();
+        let parsed = crate::util::json::parse(&json).expect("valid JSON");
+        assert_eq!(parsed.get("bench").unwrap().as_str().unwrap(), "unit");
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(
+            results[0].get("name").unwrap().as_str().unwrap(),
+            "slow \"path\"" // escaping survived
+        );
+        assert!(parsed
+            .get("speedups")
+            .unwrap()
+            .opt("conversion")
+            .is_some());
     }
 
     #[test]

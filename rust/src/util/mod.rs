@@ -1,12 +1,15 @@
 //! Small utilities shared across the crate: deterministic RNG, binary
-//! search, and human-readable formatting.
+//! search, the scoped thread-pool behind per-layer parallelism, and
+//! human-readable formatting.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod search;
 
+pub use pool::ThreadPool;
 pub use rng::Rng;
 pub use search::{binary_search_max, golden_min};
 

@@ -1,0 +1,290 @@
+//! Scoped thread-pool for the coordinator's per-layer parallelism.
+//!
+//! Std-only (the build is offline): work is fanned out with
+//! [`std::thread::scope`], so borrowed per-layer state (`&mut Tensor`
+//! from the ADMM `TrainState`) can cross into workers without `'static`
+//! bounds or reference counting. Per-item results come back **in item
+//! order**, and per-item computation is byte-identical to the serial
+//! path — items never share mutable state and no cross-item reduction
+//! happens on the workers — so parallel and serial projections agree
+//! bit-for-bit (property-tested in `tests/hot_paths_equivalence.rs`).
+//!
+//! Thread count: `ADMM_NN_THREADS` env override, else
+//! `available_parallelism()`. A pool of 1 runs everything inline.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Minimum elements per worker for elementwise splits — below this the
+/// spawn overhead dominates and [`ThreadPool::par_zip_map`] runs inline.
+const MIN_CHUNK: usize = 16 * 1024;
+
+thread_local! {
+    /// True on threads spawned by a pool fan-out. Nested pool calls on
+    /// such threads run inline, so total concurrency never exceeds the
+    /// pool width (no N×N oversubscription when a parallel per-layer
+    /// job itself uses an intra-op split).
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|f| f.get())
+}
+
+pub struct ThreadPool {
+    n: usize,
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        ThreadPool { n: n.max(1) }
+    }
+
+    /// Process-wide pool: `ADMM_NN_THREADS` override, else one worker
+    /// per available core.
+    pub fn global() -> &'static ThreadPool {
+        GLOBAL.get_or_init(|| {
+            let n = std::env::var("ADMM_NN_THREADS")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism()
+                        .map(|p| p.get())
+                        .unwrap_or(1)
+                });
+            ThreadPool::new(n)
+        })
+    }
+
+    pub fn threads(&self) -> usize {
+        self.n
+    }
+
+    /// Run `f(i, item, scratch)` over every item, fanning out across up
+    /// to `threads()` workers. `scratch` supplies one reusable workspace
+    /// per worker (grown with `mk` on demand and retained by the caller
+    /// across calls — this is what makes the hot loop allocation-free).
+    /// Results return in item order.
+    pub fn map_with_scratch<T, R, S, F, M>(
+        &self,
+        items: Vec<T>,
+        scratch: &mut Vec<S>,
+        mut mk: M,
+        f: F,
+    ) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        S: Send,
+        F: Fn(usize, T, &mut S) -> R + Sync,
+        M: FnMut() -> S,
+    {
+        let n_items = items.len();
+        let workers = if in_pool_worker() {
+            1
+        } else {
+            self.n.min(n_items).max(1)
+        };
+        while scratch.len() < workers {
+            scratch.push(mk());
+        }
+        if workers == 1 {
+            let s0 = &mut scratch[0];
+            return items
+                .into_iter()
+                .enumerate()
+                .map(|(i, t)| f(i, t, &mut *s0))
+                .collect();
+        }
+
+        // Work-stealing by atomic index; each item sits in a one-shot
+        // slot. Jobs here are per-layer (tens, not millions), so the
+        // per-item lock is noise next to the O(n) layer work.
+        let slots: Vec<Mutex<Option<T>>> =
+            items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let next = AtomicUsize::new(0);
+        let mut collected: Vec<Vec<(usize, R)>> = Vec::new();
+        std::thread::scope(|sc| {
+            let mut handles = Vec::with_capacity(workers);
+            for s in scratch.iter_mut().take(workers) {
+                let slots = &slots;
+                let next = &next;
+                let f = &f;
+                handles.push(sc.spawn(move || {
+                    IN_POOL_WORKER.with(|f| f.set(true));
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= slots.len() {
+                            break;
+                        }
+                        let item = slots[i]
+                            .lock()
+                            .expect("job slot poisoned")
+                            .take()
+                            .expect("job taken twice");
+                        local.push((i, f(i, item, &mut *s)));
+                    }
+                    local
+                }));
+            }
+            for h in handles {
+                collected.push(h.join().expect("pool worker panicked"));
+            }
+        });
+        let mut out: Vec<Option<R>> = (0..n_items).map(|_| None).collect();
+        for batch in collected {
+            for (i, r) in batch {
+                out[i] = Some(r);
+            }
+        }
+        out.into_iter().map(|o| o.expect("missing result")).collect()
+    }
+
+    /// Elementwise `dst[i] = f(src[i])` split into contiguous chunks, one
+    /// per worker. Bit-identical to the serial loop: `f` is pure per
+    /// element and no reduction reorders floating-point sums.
+    pub fn par_zip_map<F>(&self, src: &[f32], dst: &mut [f32], f: F)
+    where
+        F: Fn(f32) -> f32 + Sync,
+    {
+        assert_eq!(src.len(), dst.len(), "par_zip_map length mismatch");
+        let workers = if in_pool_worker() {
+            1
+        } else {
+            self.n.min((src.len() / MIN_CHUNK).max(1))
+        };
+        if workers <= 1 {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = f(s);
+            }
+            return;
+        }
+        let chunk = (src.len() + workers - 1) / workers;
+        std::thread::scope(|sc| {
+            for (ds, ss) in dst.chunks_mut(chunk).zip(src.chunks(chunk)) {
+                let f = &f;
+                sc.spawn(move || {
+                    IN_POOL_WORKER.with(|w| w.set(true));
+                    for (d, &s) in ds.iter_mut().zip(ss) {
+                        *d = f(s);
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_results_are_ordered() {
+        let pool = ThreadPool::new(4);
+        let items: Vec<usize> = (0..100).collect();
+        let mut scratch: Vec<u64> = Vec::new();
+        let out = pool.map_with_scratch(items, &mut scratch, || 0u64, |i, x, s| {
+            *s += 1;
+            (i, x * 2)
+        });
+        for (i, (gi, doubled)) in out.iter().enumerate() {
+            assert_eq!(*gi, i);
+            assert_eq!(*doubled, i * 2);
+        }
+        // every worker got a scratch slot, and all items were processed
+        assert!(scratch.len() <= 4);
+        assert_eq!(scratch.iter().sum::<u64>(), 100);
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let items: Vec<i64> = (0..57).map(|i| i * 3 - 20).collect();
+        let serial = ThreadPool::new(1).map_with_scratch(
+            items.clone(),
+            &mut Vec::new(),
+            || (),
+            |_, x, _| x * x - 1,
+        );
+        let parallel = ThreadPool::new(8).map_with_scratch(
+            items,
+            &mut Vec::new(),
+            || (),
+            |_, x, _| x * x - 1,
+        );
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn scratch_is_reused_across_calls() {
+        let pool = ThreadPool::new(2);
+        let mut scratch: Vec<Vec<u8>> = Vec::new();
+        pool.map_with_scratch(vec![1, 2, 3], &mut scratch, Vec::new, |_, _, s| {
+            s.push(1);
+        });
+        let first = scratch.len();
+        pool.map_with_scratch(vec![4, 5], &mut scratch, Vec::new, |_, _, s| {
+            s.push(1);
+        });
+        assert_eq!(scratch.len(), first, "no new scratch allocated");
+    }
+
+    #[test]
+    fn par_zip_map_matches_serial() {
+        let src: Vec<f32> = (0..100_000).map(|i| (i as f32) * 0.37 - 7.0).collect();
+        let f = |x: f32| (x * 0.001).round() * 3.0;
+        let mut serial = vec![0.0f32; src.len()];
+        for (d, &s) in serial.iter_mut().zip(&src) {
+            *d = f(s);
+        }
+        let mut parallel = vec![0.0f32; src.len()];
+        ThreadPool::new(4).par_zip_map(&src, &mut parallel, f);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn nested_pool_calls_run_inline() {
+        // A fan-out inside a pool worker must not fan out again: total
+        // concurrency stays bounded by the outer width, and results are
+        // still correct.
+        let outer = ThreadPool::new(4);
+        let out = outer.map_with_scratch(
+            vec![10usize, 20, 30],
+            &mut Vec::new(),
+            || (),
+            |_, x, _| {
+                let inner = ThreadPool::new(8);
+                // inner map: should take the serial path (1 worker)
+                let mut scratch: Vec<()> = Vec::new();
+                let parts = inner.map_with_scratch(
+                    (0..x).collect::<Vec<usize>>(),
+                    &mut scratch,
+                    || (),
+                    |_, y, _| y,
+                );
+                assert!(scratch.len() <= 1, "nested call fanned out");
+                // inner elementwise split: also inline
+                let src: Vec<f32> = (0..100_000).map(|i| i as f32).collect();
+                let mut dst = vec![0.0f32; src.len()];
+                inner.par_zip_map(&src, &mut dst, |v| v + 1.0);
+                assert_eq!(dst[17], 18.0);
+                parts.into_iter().sum::<usize>()
+            },
+        );
+        assert_eq!(out, vec![45, 190, 435]);
+    }
+
+    #[test]
+    fn empty_and_single_item() {
+        let pool = ThreadPool::new(4);
+        let out: Vec<u32> =
+            pool.map_with_scratch(Vec::<u32>::new(), &mut Vec::new(), || (), |_, x, _| x);
+        assert!(out.is_empty());
+        let out = pool.map_with_scratch(vec![9u32], &mut Vec::new(), || (), |_, x, _| x + 1);
+        assert_eq!(out, vec![10]);
+    }
+}

@@ -1,0 +1,153 @@
+//! Property tests for the projection-engine PR: every converted hot path
+//! must agree with its seed counterpart.
+//!
+//! * `_into` / in-place projection variants are bit-identical to the
+//!   allocating ones on random vectors (including dirty reused buffers);
+//! * the histogram quantizer search agrees with the exact golden-section
+//!   search to ≤ 1% relative error in the final `QuantConfig::error`
+//!   across bit-widths 1–8;
+//! * per-layer parallel projection produces results identical to the
+//!   serial path at any worker count;
+//! * the fused dual update reproduces the composed tensor ops exactly.
+//!
+//! Pure host code — no PJRT artifacts required.
+
+use admm_nn::coordinator::Constraint;
+use admm_nn::projection::{self, ProjectionWorkspace};
+use admm_nn::quantize::{self, QuantConfig};
+use admm_nn::tensor::Tensor;
+use admm_nn::util::{Rng, ThreadPool};
+
+/// Random layer mix: dense, post-prune sparse, tiny, and all-zero.
+fn random_layers(seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let mut layers = vec![
+        rng.normal_vec(10_000, 0.1),
+        projection::prune_topk(&rng.normal_vec(20_000, 0.05), 1_000),
+        rng.normal_vec(33, 1.0),
+        vec![0.0f32; 64],
+    ];
+    // a heavy-tailed layer (cubed gaussians)
+    layers.push(rng.normal_vec(5_000, 1.0).iter().map(|&x| x * x * x).collect());
+    layers
+}
+
+#[test]
+fn into_variants_bit_identical_on_random_vectors() {
+    let mut rng = Rng::new(100);
+    let mut idx = Vec::new();
+    let mut out = Vec::new();
+    for trial in 0..20 {
+        let n = 100 + rng.below(5000);
+        let v = rng.normal_vec(n, 0.5);
+        let k = rng.below(n + 1);
+
+        projection::prune_topk_into(&v, k, &mut idx, &mut out);
+        assert_eq!(out, projection::prune_topk(&v, k), "trial {trial} prune");
+
+        let q = 0.01 + rng.uniform() as f32 * 0.2;
+        let half_m = 1 + rng.below(128) as u32;
+        projection::quant_nearest_into(&v, q, half_m, &mut out);
+        let want = projection::quant_nearest(&v, q, half_m);
+        assert_eq!(out, want, "trial {trial} quant");
+        let mut inplace = v.clone();
+        projection::quant_nearest_inplace(&mut inplace, q, half_m);
+        assert_eq!(inplace, want, "trial {trial} quant inplace");
+
+        projection::joint_project_into(&v, k, q, half_m, &mut idx, &mut out);
+        assert_eq!(
+            out,
+            projection::joint_project(&v, k, q, half_m),
+            "trial {trial} joint"
+        );
+    }
+}
+
+#[test]
+fn histogram_search_within_one_percent_of_exact() {
+    for (li, v) in random_layers(7).iter().enumerate() {
+        for bits in 1..=8u32 {
+            let h = quantize::search_interval(v, bits);
+            let e = quantize::search_interval_exact(v, bits);
+            let tol = e.error * 0.01 + 1e-12;
+            assert!(
+                (h.error - e.error).abs() <= tol,
+                "layer {li} bits={bits}: histogram {} vs exact {}",
+                h.error,
+                e.error
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_constraint_projection_identical_to_serial() {
+    let layers = random_layers(8);
+    let keep: Vec<usize> = layers.iter().map(|l| l.len() / 3).collect();
+    let configs: Vec<QuantConfig> = layers
+        .iter()
+        .map(|l| quantize::search_interval(l, 4))
+        .collect();
+    for constraint in [
+        Constraint::Cardinality { keep },
+        Constraint::Levels { configs },
+    ] {
+        let serial: Vec<Vec<f32>> = layers
+            .iter()
+            .enumerate()
+            .map(|(li, l)| constraint.project(li, l))
+            .collect();
+        for threads in [1usize, 2, 3, 8] {
+            let pool = ThreadPool::new(threads);
+            let mut wss: Vec<ProjectionWorkspace> = Vec::new();
+            let jobs: Vec<(usize, &Vec<f32>)> = layers.iter().enumerate().collect();
+            let parallel = pool.map_with_scratch(
+                jobs,
+                &mut wss,
+                ProjectionWorkspace::new,
+                |_, (li, l), ws| {
+                    constraint.project_with(li, l, ws);
+                    ws.out.clone()
+                },
+            );
+            assert_eq!(serial, parallel, "threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn fused_dual_update_equals_seed_composition() {
+    let mut rng = Rng::new(9);
+    for n in [1usize, 100, 40_000] {
+        let w = Tensor::new(vec![n], rng.normal_vec(n, 0.7));
+        let z = Tensor::new(vec![n], rng.normal_vec(n, 0.7));
+        let mut u_seed = Tensor::new(vec![n], rng.normal_vec(n, 0.1));
+        let mut u_fused = u_seed.clone();
+
+        u_seed.add_assign(&w.sub(&z));
+        let resid_seed = w.sub(&z).sq_norm();
+        let resid_fused = u_fused.dual_update(&w, &z);
+
+        assert_eq!(u_seed.data(), u_fused.data(), "n={n}");
+        assert_eq!(resid_seed, resid_fused, "n={n}");
+    }
+}
+
+#[test]
+fn workspace_reuse_across_mismatched_layers_is_clean() {
+    // A dirty workspace from a big layer must not leak into a small one.
+    let mut ws = ProjectionWorkspace::new();
+    let big = Constraint::Cardinality { keep: vec![500] };
+    let mut rng = Rng::new(10);
+    let vbig = rng.normal_vec(4_000, 1.0);
+    big.project_with(0, &vbig, &mut ws);
+    assert_eq!(ws.out.len(), 4_000);
+
+    let small = Constraint::Levels {
+        configs: vec![QuantConfig { bits: 2, q: 0.5, error: 0.0 }],
+    };
+    let vsmall = [0.3f32, -1.2, 0.0];
+    small.project_with(0, &vsmall, &mut ws);
+    assert_eq!(ws.out, small.project(0, &vsmall));
+    assert_eq!(ws.out.len(), 3);
+}

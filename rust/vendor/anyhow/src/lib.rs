@@ -1,0 +1,180 @@
+//! Vendored std-only shim of the `anyhow` API surface this workspace
+//! uses: [`Error`], [`Result`], the [`anyhow!`]/[`bail!`] macros, and the
+//! [`Context`] extension trait. The build is offline (no registry), so
+//! the real crate cannot be fetched; this implements the same contract —
+//! a type-erased error with a human-readable context chain.
+//!
+//! Display follows upstream: `{e}` prints the outermost message, `{e:#}`
+//! prints the whole chain separated by `: `.
+
+use std::fmt;
+
+/// Type-erased error: a message plus an optional cause chain.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string(), cause: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Self {
+        Error { msg: ctx.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain outermost-first.
+    fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let e = next?;
+            next = e.cause.as_deref();
+            Some(e.msg.as_str())
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let mut first = true;
+            for m in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{m}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut rest = self.cause.as_deref();
+        if rest.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = rest {
+            write!(f, "\n    {}", e.msg)?;
+            rest = e.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// Like upstream anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that is what makes this blanket conversion
+// coherent (no overlap with the reflexive `From<Error> for Error`).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain: Vec<String> = Vec::new();
+        chain.push(e.to_string());
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in chain.into_iter().rev() {
+            err = Some(Error { msg, cause: err.map(Box::new) });
+        }
+        err.expect("chain is non-empty")
+    }
+}
+
+/// `Result` with the shimmed [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (and convert them to [`Error`]) — the same
+/// extension upstream provides on `Result`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn context_chain_display() {
+        let e = io_err().context("reading file").unwrap_err();
+        assert_eq!(format!("{e}"), "reading file");
+        assert_eq!(format!("{e:#}"), "reading file: gone");
+    }
+
+    #[test]
+    fn with_context_and_macros() {
+        let e: Error = anyhow!("bad value {}", 3);
+        assert_eq!(e.to_string(), "bad value 3");
+        fn inner() -> Result<()> {
+            bail!("boom {x}", x = 1);
+        }
+        let e = inner().with_context(|| "outer".to_string()).unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: boom 1");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn run() -> Result<()> {
+            io_err()?;
+            Ok(())
+        }
+        assert_eq!(run().unwrap_err().to_string(), "gone");
+    }
+}

@@ -1,0 +1,209 @@
+//! Vendored typed stub of the PJRT/XLA API used by `admm_nn::runtime`.
+//!
+//! The build is offline and the real PJRT plugin is not present in this
+//! environment, so this crate provides the exact type/method surface the
+//! runtime compiles against. [`Literal`] is fully functional host-side
+//! (it is plain data); everything that would execute on a device —
+//! [`PjRtClient::cpu`], compilation, execution — returns an
+//! "unavailable" error. `Runtime::load` therefore fails fast with a
+//! clear message, and all artifact-dependent tests/benches skip, which
+//! is the behaviour they already implement for missing artifacts.
+
+use std::path::Path;
+
+/// Stub error: carries a message; call-sites format it with `{:?}`.
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT backend unavailable (offline stub build — see \
+         rust/vendor/xla)"
+    ))
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>, dims: Vec<i64>) -> Literal;
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+/// Host-side literal: typed flat data + dimensions (or a tuple).
+#[derive(Clone, Debug)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    I32 { data: Vec<i32>, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<Self>, dims: Vec<i64>) -> Literal {
+        Literal::F32 { data, dims }
+    }
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data.clone()),
+            other => Err(Error(format!("literal is not f32: {other:?}"))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<Self>, dims: Vec<i64>) -> Literal {
+        Literal::I32 { data, dims }
+    }
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>> {
+        match lit {
+            Literal::I32 { data, .. } => Ok(data.clone()),
+            other => Err(Error(format!("literal is not i32: {other:?}"))),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-0 f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal::F32 { data: vec![v], dims: vec![] }
+    }
+
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::wrap(v.to_vec(), vec![v.len() as i64])
+    }
+
+    fn element_count(&self) -> usize {
+        match self {
+            Literal::F32 { data, .. } => data.len(),
+            Literal::I32 { data, .. } => data.len(),
+            Literal::Tuple(parts) => parts.len(),
+        }
+    }
+
+    /// Reinterpret with new dimensions of identical element count.
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape to {dims:?}: have {} elements",
+                self.element_count()
+            )));
+        }
+        Ok(match self {
+            Literal::F32 { data, .. } => Literal::F32 { data, dims: dims.to_vec() },
+            Literal::I32 { data, .. } => Literal::I32 { data, dims: dims.to_vec() },
+            t @ Literal::Tuple(_) => t,
+        })
+    }
+
+    /// Copy out the flat data.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(self)
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::unwrap(self)?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("empty literal".into()))
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts),
+            other => Err(Error(format!("not a tuple literal: {other:?}"))),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: never constructed successfully off-line).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        Err(unavailable(&format!(
+            "parsing HLO {}",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// XLA computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("buffer readback"))
+    }
+}
+
+/// Compiled executable handle (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute"))
+    }
+}
+
+/// PJRT client (stub: construction fails with a clear message).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32_i32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        let l = Literal::vec1(&[1i32, -2]).reshape(&[2, 1]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, -2]);
+        assert_eq!(Literal::scalar(7.5).get_first_element::<f32>().unwrap(), 7.5);
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        assert!(Literal::vec1(&[1.0f32, 2.0]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e:?}").contains("unavailable"));
+    }
+}
