@@ -1,13 +1,22 @@
 # One entry point for builder and reviewer alike.
 #
-#   make verify  — the tier-1 gate: release build + full test suite
-#   make bench   — hot-path microbenchmarks with machine-readable output
-#                  (writes BENCH_hot_paths.json into the repo root)
+#   make verify       — the tier-1 gate: release build + full test suite
+#   make bench        — hot-path microbenchmarks with machine-readable
+#                       output (writes BENCH_hot_paths.json into the
+#                       repo root)
+#   make bench-report — run the benchmarks, then diff the fresh
+#                       BENCH_hot_paths.json against the committed
+#                       BENCH_baseline.json, printing per-path speedup
+#                       ratios (first ever run seeds the baseline;
+#                       commit the seeded file to start the trajectory)
 
-.PHONY: verify bench
+.PHONY: verify bench bench-report
 
 verify:
 	cargo build --release && cargo test -q
 
 bench:
 	cargo bench --bench hot_paths -- --json
+
+bench-report: bench
+	cargo run --release -p admm_nn --bin bench-report -- BENCH_hot_paths.json BENCH_baseline.json

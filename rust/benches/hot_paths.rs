@@ -13,12 +13,79 @@
 //!
 //! Run: `cargo bench --bench hot_paths [-- --json]`
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
 use admm_nn::hwmodel::HwConfig;
 use admm_nn::projection::{self, ProjectionWorkspace};
 use admm_nn::quantize;
 use admm_nn::sparsity::{Csr, RelIndex};
 use admm_nn::util::bench::{black_box, BenchSuite};
 use admm_nn::util::{Rng, ThreadPool};
+
+/// PR-1's per-call scoped-spawn fan-out, reproduced verbatim as the
+/// "before" side of the persistent-pool comparison (spawn + join per
+/// call, ~10µs per worker).
+fn scoped_spawn_map<T, R, S>(
+    workers: usize,
+    items: Vec<T>,
+    scratch: &mut Vec<S>,
+    mut mk: impl FnMut() -> S,
+    f: impl Fn(usize, T, &mut S) -> R + Sync,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    S: Send,
+{
+    let n_items = items.len();
+    let workers = workers.min(n_items).max(1);
+    while scratch.len() < workers {
+        scratch.push(mk());
+    }
+    if workers == 1 {
+        let s0 = &mut scratch[0];
+        return items
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| f(i, t, &mut *s0))
+            .collect();
+    }
+    let slots: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let next = AtomicUsize::new(0);
+    let mut collected: Vec<Vec<(usize, R)>> = Vec::new();
+    std::thread::scope(|sc| {
+        let mut handles = Vec::with_capacity(workers);
+        for s in scratch.iter_mut().take(workers) {
+            let slots = &slots;
+            let next = &next;
+            let f = &f;
+            handles.push(sc.spawn(move || {
+                let mut local = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= slots.len() {
+                        break;
+                    }
+                    let item = slots[i].lock().unwrap().take().unwrap();
+                    local.push((i, f(i, item, &mut *s)));
+                }
+                local
+            }));
+        }
+        for h in handles {
+            collected.push(h.join().unwrap());
+        }
+    });
+    let mut out: Vec<Option<R>> = (0..n_items).map(|_| None).collect();
+    for batch in collected {
+        for (i, r) in batch {
+            out[i] = Some(r);
+        }
+    }
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
 
 fn main() {
     let mut suite = BenchSuite::new("hot_paths");
@@ -27,19 +94,36 @@ fn main() {
     let pool = ThreadPool::global();
     println!("(thread pool: {} workers)", pool.threads());
 
-    // -- prune_topk: allocating vs zero-alloc ------------------------------
+    // -- prune_topk: allocating vs zero-alloc vs blocked select ------------
     let mut ws = ProjectionWorkspace::new();
+    let mut idxsel_scratch: Vec<u32> = Vec::new();
     for n in [25_000usize, 400_000, 1_000_000] {
         let v = rng.normal_vec(n, 0.1);
         let k = n / 20;
         let alloc = suite.bench(&format!("prune_topk n={n} k=5% (alloc)"), 3, 15, || {
             black_box(projection::prune_topk(black_box(&v), k));
         });
-        let into = suite.bench(&format!("prune_topk n={n} k=5% (into)"), 3, 15, || {
-            projection::prune_topk_into(black_box(&v), k, &mut ws.idx, &mut ws.out);
-            black_box(ws.out.len());
-        });
+        let idxsel = suite.bench(
+            &format!("prune_topk n={n} k=5% (index select, PR-1)"),
+            3,
+            15,
+            || {
+                projection::prune_topk_into_indexsel(
+                    black_box(&v), k, &mut idxsel_scratch, &mut ws.out);
+                black_box(ws.out.len());
+            },
+        );
+        let into = suite.bench(
+            &format!("prune_topk n={n} k=5% (blocked select)"),
+            3,
+            15,
+            || {
+                projection::prune_topk_into(black_box(&v), k, &mut ws.mags, &mut ws.out);
+                black_box(ws.out.len());
+            },
+        );
         suite.speedup(&format!("prune_topk n={n}"), &alloc, &into);
+        suite.speedup(&format!("prune_topk n={n} blocked vs index select"), &idxsel, &into);
     }
 
     let v400k = rng.normal_vec(400_000, 0.1);
@@ -105,6 +189,130 @@ fn main() {
     suite.bench("Csr::encode 800x500 (5% dense)", 3, 15, || {
         black_box(Csr::encode(black_box(&codes), 800, 500));
     });
+
+    // parallel RelIndex packaging: encode every layer of a model, the
+    // CompressedModel packaging stage (serial per layer in PR-1)
+    let pkg_layers: Vec<Vec<i32>> = (0..6)
+        .map(|i| {
+            let w = projection::prune_topk(&rng.normal_vec(150_000 + 30_000 * i, 0.1),
+                                           (150_000 + 30_000 * i) / 20);
+            let c = quantize::search_interval(&w, 3);
+            quantize::encode_levels(&c.apply(&w), &c)
+        })
+        .collect();
+    let pkg_sizes: Vec<usize> = pkg_layers.iter().map(|l| l.len()).collect();
+    let p_serial = suite.bench("RelIndex packaging 6 layers (serial)", 3, 15, || {
+        for c in &pkg_layers {
+            black_box(RelIndex::encode(black_box(c), 8).stored_entries());
+        }
+    });
+    let p_par = suite.bench("RelIndex packaging 6 layers (parallel)", 3, 15, || {
+        let encs = pool.map_with_scratch_sized(
+            (0..pkg_layers.len()).collect::<Vec<usize>>(),
+            &pkg_sizes,
+            &mut Vec::new(),
+            || (),
+            |_, i, _| RelIndex::encode(&pkg_layers[i], 8).stored_entries(),
+        );
+        black_box(encs.len());
+    });
+    suite.speedup("RelIndex packaging 6 layers", &p_serial, &p_par);
+
+    println!("\n== thread pool ==");
+    // LeNet-scale per-layer fan-out over small layers: the work per call
+    // is small enough that PR-1's per-call scoped spawn/join overhead
+    // (~10µs per worker) was measurable; the persistent pool replaces it
+    // with a queue push + condvar wake. This case must not regress.
+    let small_layers: Vec<Vec<f32>> =
+        (0..8).map(|i| rng.normal_vec(4_000 + 512 * i, 0.1)).collect();
+    let small_keep: Vec<usize> = small_layers.iter().map(|l| l.len() / 10).collect();
+    let mut spawn_wss: Vec<ProjectionWorkspace> = Vec::new();
+    let fan_spawn = suite.bench("fanout 8 small layers (scoped spawn, PR-1)", 10, 50, || {
+        let nnz = scoped_spawn_map(
+            pool.threads(),
+            (0..small_layers.len()).collect::<Vec<usize>>(),
+            &mut spawn_wss,
+            ProjectionWorkspace::new,
+            |_, i, w| {
+                projection::prune_topk_into(
+                    &small_layers[i], small_keep[i], &mut w.mags, &mut w.out);
+                w.out.iter().filter(|&&x| x != 0.0).count()
+            },
+        );
+        black_box(nnz.len());
+    });
+    let mut pool_wss: Vec<ProjectionWorkspace> = Vec::new();
+    let small_sizes: Vec<usize> = small_layers.iter().map(|l| l.len()).collect();
+    let fan_pool = suite.bench("fanout 8 small layers (persistent pool)", 10, 50, || {
+        let nnz = pool.map_with_scratch_sized(
+            (0..small_layers.len()).collect::<Vec<usize>>(),
+            &small_sizes,
+            &mut pool_wss,
+            ProjectionWorkspace::new,
+            |_, i, w| {
+                projection::prune_topk_into(
+                    &small_layers[i], small_keep[i], &mut w.mags, &mut w.out);
+                w.out.iter().filter(|&&x| x != 0.0).count()
+            },
+        );
+        black_box(nnz.len());
+    });
+    suite.speedup("fanout 8 small layers (spawn overhead)", &fan_spawn, &fan_pool);
+
+    // dominant-layer fan-out: one 1M fc among tiny siblings. PR-1 ran
+    // the big layer's elementwise work inline on its single worker
+    // (nested calls never split), idling every other core; the
+    // size-aware schedule lets the quant projection split across them.
+    let mut dom_layers: Vec<Vec<f32>> = vec![rng.normal_vec(1_000_000, 0.1)];
+    for _ in 0..7 {
+        dom_layers.push(rng.normal_vec(2_000, 0.1));
+    }
+    let dom_sizes: Vec<usize> = dom_layers.iter().map(|l| l.len()).collect();
+    let mut dom_out: Vec<Vec<f32>> =
+        dom_layers.iter().map(|l| vec![0.0f32; l.len()]).collect();
+    let dom_inline = {
+        let dom_layers = &dom_layers;
+        let mut bufs = std::mem::take(&mut dom_out);
+        let r = suite.bench("dominant-layer fanout (inline nested, PR-1)", 3, 15, || {
+            let done = scoped_spawn_map(
+                pool.threads(),
+                bufs.drain(..).enumerate().collect::<Vec<(usize, Vec<f32>)>>(),
+                &mut Vec::new(),
+                || (),
+                |_, (i, mut buf), _| {
+                    projection::quant_nearest_into(&dom_layers[i], 0.02, 4, &mut buf);
+                    buf
+                },
+            );
+            bufs = done;
+            black_box(bufs.len());
+        });
+        dom_out = bufs;
+        r
+    };
+    let dom_split = {
+        let dom_layers = &dom_layers;
+        let mut bufs = std::mem::take(&mut dom_out);
+        let r = suite.bench("dominant-layer fanout (size-aware split)", 3, 15, || {
+            let done = pool.map_with_scratch_sized(
+                bufs.drain(..).enumerate().collect::<Vec<(usize, Vec<f32>)>>(),
+                &dom_sizes,
+                &mut Vec::new(),
+                || (),
+                |_, (i, mut buf), _| {
+                    projection::quant_nearest_into_par(
+                        pool, &dom_layers[i], 0.02, 4, &mut buf);
+                    buf
+                },
+            );
+            bufs = done;
+            black_box(bufs.len());
+        });
+        dom_out = bufs;
+        r
+    };
+    black_box(dom_out.len());
+    suite.speedup("dominant-layer fanout (size-aware)", &dom_inline, &dom_split);
 
     println!("\n== hardware model ==");
     let hw = HwConfig::default();

@@ -1,0 +1,126 @@
+//! `make bench-report`: diff a freshly emitted `BENCH_hot_paths.json`
+//! against the committed `BENCH_baseline.json`, printing per-path
+//! speedup ratios so the perf trajectory is tracked across PRs.
+//!
+//! Usage: `bench-report [fresh.json] [baseline.json]`
+//! (defaults: `BENCH_hot_paths.json` `BENCH_baseline.json`)
+//!
+//! Behaviour:
+//! * baseline missing or empty (the committed placeholder before the
+//!   first machine ran `make bench`) → the fresh results are copied in
+//!   as the new baseline and the run reports that it seeded it;
+//! * otherwise every path present in both files is printed with
+//!   `baseline_median / fresh_median` (>1 = faster now), slower-than-
+//!   0.9x paths are flagged, and paths new to this run are listed.
+//!
+//! Informational only — the exit code is 0 unless the fresh file is
+//! unreadable, so perf noise never fails a build.
+
+use std::collections::BTreeMap;
+
+use admm_nn::util::bench::fmt_time;
+use admm_nn::util::json::{self, Json};
+
+fn results_map(j: &Json) -> BTreeMap<String, f64> {
+    let mut m = BTreeMap::new();
+    if let Some(results) = j.opt("results").and_then(|r| r.as_arr().ok()) {
+        for r in results {
+            if let (Ok(name), Ok(median)) = (
+                r.get("name").and_then(|n| n.as_str()).map(|s| s.to_string()),
+                r.get("median_s").and_then(|n| n.as_f64()),
+            ) {
+                m.insert(name, median);
+            }
+        }
+    }
+    m
+}
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let fresh_path = args.next().unwrap_or_else(|| "BENCH_hot_paths.json".into());
+    let base_path = args.next().unwrap_or_else(|| "BENCH_baseline.json".into());
+
+    let fresh_text = match std::fs::read_to_string(&fresh_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {fresh_path}: {e} (run `make bench` first)");
+            std::process::exit(2);
+        }
+    };
+    let fresh = match json::parse(&fresh_text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("{fresh_path} is not valid bench JSON: {e}");
+            std::process::exit(2);
+        }
+    };
+    let fresh_results = results_map(&fresh);
+
+    // A *missing* baseline (or the committed empty placeholder) gets
+    // seeded below; a baseline that exists but fails to parse is
+    // treated as corruption (bad merge, conflict markers) and refused —
+    // silently overwriting it would destroy the trajectory this tool
+    // exists to protect.
+    let base_results = match std::fs::read_to_string(&base_path) {
+        Err(_) => BTreeMap::new(),
+        Ok(t) => match json::parse(&t) {
+            Ok(j) => results_map(&j),
+            Err(e) => {
+                eprintln!(
+                    "{base_path} exists but is not valid JSON ({e}); \
+                     refusing to overwrite it — repair or delete the file"
+                );
+                std::process::exit(2);
+            }
+        },
+    };
+
+    if base_results.is_empty() {
+        if let Err(e) = std::fs::copy(&fresh_path, &base_path) {
+            eprintln!("could not seed baseline {base_path}: {e}");
+            std::process::exit(2);
+        }
+        println!(
+            "baseline {base_path} was empty — seeded from {fresh_path} \
+             ({} paths); commit it to track the trajectory",
+            fresh_results.len()
+        );
+        return;
+    }
+
+    println!("{:<52} {:>10} {:>10} {:>9}", "path", "baseline", "current", "speedup");
+    let mut regressions = 0usize;
+    let mut compared = 0usize;
+    for (name, &cur) in &fresh_results {
+        match base_results.get(name) {
+            Some(&base) if cur > 0.0 => {
+                let ratio = base / cur;
+                let flag = if ratio < 0.9 { "  << regression" } else { "" };
+                if ratio < 0.9 {
+                    regressions += 1;
+                }
+                compared += 1;
+                println!(
+                    "{:<52} {:>10} {:>10} {:>8.2}x{flag}",
+                    name,
+                    fmt_time(base),
+                    fmt_time(cur),
+                    ratio
+                );
+            }
+            Some(_) => {}
+            None => {
+                println!("{:<52} {:>10} {:>10}      new", name, "-", fmt_time(cur));
+            }
+        }
+    }
+    for name in base_results.keys() {
+        if !fresh_results.contains_key(name) {
+            println!("{name:<52} (dropped from the suite)");
+        }
+    }
+    println!(
+        "\n{compared} paths compared against {base_path}; {regressions} slower than 0.9x"
+    );
+}

@@ -17,16 +17,19 @@
 //! ## Projection engine
 //!
 //! Subproblem 2 and the dual update are the host-side (L3) hot path:
-//! layers are independent, so the Z-updates fan out across the scoped
-//! [`ThreadPool`], each worker reusing a [`ProjectionWorkspace`] so the
-//! O(n)-sized buffers are allocation-free in steady state (the fan-out
-//! bookkeeping itself is O(layers) per iteration — job/result vectors
-//! and scoped thread stacks — which is noise next to the per-weight
-//! work). Z is written in place, and U += W − Z is fused with the
-//! primal-residual accumulation ([`Tensor::dual_update`]). Per-layer
-//! arithmetic is untouched by the parallelism (no cross-layer reduction
-//! runs on the workers; the residual sum is reduced serially in layer
-//! order), so results are bit-identical to the seed's serial path.
+//! layers are independent, so the Z-updates fan out across the
+//! persistent [`ThreadPool`] with per-layer size hints (biggest layer
+//! first; its elementwise work may additionally split across idle
+//! workers — the pool's size-aware hybrid schedule), each lane reusing
+//! a [`ProjectionWorkspace`] so the O(n)-sized buffers are
+//! allocation-free in steady state (the fan-out bookkeeping itself is
+//! O(layers) per iteration — job/result vectors and queue pushes —
+//! which is noise next to the per-weight work). Z is written in place,
+//! and U += W − Z is fused with the primal-residual accumulation
+//! ([`Tensor::dual_update`]). Per-layer arithmetic is untouched by the
+//! parallelism (no cross-layer reduction runs on the workers; the
+//! residual sum is reduced serially in layer order), so results are
+//! bit-identical to the seed's serial path.
 
 use crate::coordinator::trainer::{RunLog, TrainConfig, Trainer};
 use crate::data::Dataset;
@@ -57,14 +60,14 @@ impl Constraint {
     /// Project `v` for layer `i` into `ws.out`, reusing the workspace's
     /// scratch — the zero-alloc path the ADMM hot loop uses. Level
     /// projections additionally split large layers across the pool
-    /// (bit-identical: pure elementwise) when not already inside a pool
-    /// fan-out — nested calls run inline, so concurrency never exceeds
-    /// the pool width.
+    /// (bit-identical: pure elementwise); from inside a per-layer
+    /// fan-out the split uses only idle workers of the same pool, so
+    /// concurrency never exceeds the pool width.
     pub fn project_with(&self, i: usize, v: &[f32], ws: &mut ProjectionWorkspace) {
-        let ProjectionWorkspace { input: _, out, idx } = ws;
+        let ProjectionWorkspace { input: _, out, mags } = ws;
         match self {
             Constraint::Cardinality { keep } => {
-                projection::prune_topk_into(v, keep[i], idx, out)
+                projection::prune_topk_into(v, keep[i], mags, out)
             }
             Constraint::Levels { configs } => projection::quant_nearest_into_par(
                 ThreadPool::global(),
@@ -160,14 +163,16 @@ impl<'s, 'r> AdmmRunner<'s, 'r> {
             assert_eq!(zs.len(), wi.len(), "Z count != weight count");
             assert_eq!(us.len(), wi.len(), "U count != weight count");
             let params: &Vec<Tensor> = params;
+            let sizes: Vec<usize> = wi.iter().map(|&pi| params[pi].len()).collect();
             let jobs: Vec<(usize, &mut Tensor, &mut Tensor)> = wi
                 .iter()
                 .zip(zs.iter_mut().zip(us.iter_mut()))
                 .map(|(&pi, (z, u))| (pi, z, u))
                 .collect();
             let mut wss: Vec<ProjectionWorkspace> = Vec::new();
-            ThreadPool::global().map_with_scratch(
+            ThreadPool::global().map_with_scratch_sized(
                 jobs,
+                &sizes,
                 &mut wss,
                 ProjectionWorkspace::new,
                 |li, (pi, z, u), ws| {
@@ -217,13 +222,15 @@ impl<'s, 'r> AdmmRunner<'s, 'r> {
                 assert_eq!(zs.len(), wi.len(), "Z count != weight count");
                 assert_eq!(us.len(), wi.len(), "U count != weight count");
                 let params: &Vec<Tensor> = params;
+                let sizes: Vec<usize> = wi.iter().map(|&pi| params[pi].len()).collect();
                 let jobs: Vec<(usize, &mut Tensor, &mut Tensor)> = wi
                     .iter()
                     .zip(zs.iter_mut().zip(us.iter_mut()))
                     .map(|(&pi, (z, u))| (pi, z, u))
                     .collect();
-                let layer_sq = pool.map_with_scratch(
+                let layer_sq = pool.map_with_scratch_sized(
                     jobs,
+                    &sizes,
                     &mut wss,
                     ProjectionWorkspace::new,
                     |li, (pi, z, u), ws| {
@@ -265,6 +272,7 @@ impl<'s, 'r> AdmmRunner<'s, 'r> {
             assert_eq!(masks.len(), wi.len(), "mask count != weight count");
             assert_eq!(zs.len(), wi.len(), "Z count != weight count");
             assert_eq!(us.len(), wi.len(), "U count != weight count");
+            let sizes: Vec<usize> = wi.iter().map(|&pi| params[pi].len()).collect();
             let wparams = TrainState::weight_tensors_mut(params, &wi);
             let jobs: Vec<(&mut Tensor, &mut Tensor, &mut Tensor, &mut Tensor)> =
                 wparams
@@ -275,8 +283,9 @@ impl<'s, 'r> AdmmRunner<'s, 'r> {
                     .collect();
             let freeze_masks = matches!(constraint, Constraint::Cardinality { .. });
             let mut wss: Vec<ProjectionWorkspace> = Vec::new();
-            ThreadPool::global().map_with_scratch(
+            ThreadPool::global().map_with_scratch_sized(
                 jobs,
+                &sizes,
                 &mut wss,
                 ProjectionWorkspace::new,
                 |li, (w, m, z, u), ws| {

@@ -56,8 +56,15 @@ impl CompressedLayer {
         Tensor::new(self.shape.clone(), decode_levels(&codes, self.q))
     }
 
+    /// Nonzero count straight from the stored entries — O(stored), no
+    /// dense decode or allocation: real entries carry a nonzero level
+    /// code, padding entries carry code 0 (`RelIndex::encode` never
+    /// stores a real weight with code 0). `size_report` calls this per
+    /// layer, so the previous O(dense_len)+alloc decode made the report
+    /// scale with the *dense* model; property-tested against the
+    /// decode-based count.
     pub fn nnz(&self) -> usize {
-        self.enc.decode().iter().filter(|&&c| c != 0).count()
+        self.enc.entries.iter().filter(|&&(_, c)| c != 0).count()
     }
 }
 
@@ -128,27 +135,27 @@ impl CompressedModel {
         let mut w = Vec::new();
         put_u32(&mut w, MAGIC);
         put_str(&mut w, &self.model_name);
-        put_u32(&mut w, self.layers.len() as u32);
+        put_count(&mut w, self.layers.len(), "layer count")?;
         for l in &self.layers {
             put_str(&mut w, &l.name);
-            put_u32(&mut w, l.shape.len() as u32);
+            put_count(&mut w, l.shape.len(), "shape rank")?;
             for &d in &l.shape {
-                put_u32(&mut w, d as u32);
+                put_count(&mut w, d, "shape dim")?;
             }
             put_u32(&mut w, l.bits);
             put_f32(&mut w, l.q);
             put_u32(&mut w, l.enc.index_bits);
-            put_u32(&mut w, l.enc.dense_len as u32);
-            put_u32(&mut w, l.enc.entries.len() as u32);
+            put_count(&mut w, l.enc.dense_len, "dense_len")?;
+            put_count(&mut w, l.enc.entries.len(), "entry count")?;
             for &(gap, code) in &l.enc.entries {
                 put_u32(&mut w, gap);
                 put_u32(&mut w, code as u32);
             }
         }
-        put_u32(&mut w, self.biases.len() as u32);
+        put_count(&mut w, self.biases.len(), "bias count")?;
         for (name, t) in &self.biases {
             put_str(&mut w, name);
-            put_u32(&mut w, t.len() as u32);
+            put_count(&mut w, t.len(), "bias length")?;
             for &x in t.data() {
                 put_f32(&mut w, x);
             }
@@ -214,6 +221,16 @@ impl CompressedModel {
 
 fn put_u32(w: &mut Vec<u8>, v: u32) {
     w.write_all(&v.to_le_bytes()).unwrap();
+}
+
+/// Checked u32 count/dim field: a value above `u32::MAX` (a >4G-element
+/// layer) used to truncate silently via `as u32`, writing a checkpoint
+/// that decodes to garbage — refuse with an error instead.
+fn put_count(w: &mut Vec<u8>, v: usize, what: &str) -> crate::Result<()> {
+    let v = u32::try_from(v)
+        .map_err(|_| anyhow!("cannot save checkpoint: {what} {v} exceeds the u32 field"))?;
+    put_u32(w, v);
+    Ok(())
 }
 
 fn put_f32(w: &mut Vec<u8>, v: f32) {
@@ -311,6 +328,54 @@ mod tests {
         let report = m.size_report(10_000);
         assert!(report.model_bytes() > report.data_bytes());
         assert!(report.data_compress_ratio() > report.model_compress_ratio());
+    }
+
+    #[test]
+    fn nnz_matches_decode_based_count() {
+        // O(stored) nnz vs the old O(dense) decode-and-count, across
+        // densities (the 1% case forces relative-index padding entries,
+        // which must NOT be counted) and index widths.
+        let mut rng = Rng::new(5);
+        for (n, k) in [(4_000usize, 2_000usize), (50_000, 500), (10_000, 0), (300, 300)] {
+            let w = prune_topk(&rng.normal_vec(n, 0.1), k);
+            let support = w.iter().filter(|&&x| x != 0.0).count();
+            let cfg = search_interval(&w, 3);
+            let t = Tensor::new(vec![n], cfg.apply(&w));
+            for index_bits in [4u32, 8] {
+                let l = CompressedLayer::from_quantized("x", &t, &cfg, index_bits);
+                let decoded = l.enc.decode();
+                let want = decoded.iter().filter(|&&c| c != 0).count();
+                assert_eq!(l.nnz(), want, "n={n} k={k} index_bits={index_bits}");
+                assert_eq!(l.nnz(), support, "quantization must preserve the support");
+            }
+        }
+    }
+
+    #[test]
+    fn save_rejects_oversized_dense_len() {
+        // A >4G-element layer used to truncate `dense_len` via `as u32`
+        // and write a corrupt checkpoint; now it must refuse. The huge
+        // length is metadata only — no giant buffer is allocated.
+        let mut m = sample_model();
+        m.layers[0].enc.dense_len = u32::MAX as usize + 1;
+        let dir = std::env::temp_dir().join("admm_nn_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("oversized.bin");
+        let err = m.save(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("dense_len"), "unexpected error: {msg}");
+    }
+
+    #[test]
+    fn save_rejects_oversized_shape_dim() {
+        let mut m = sample_model();
+        m.layers[1].shape = vec![u32::MAX as usize + 2];
+        let dir = std::env::temp_dir().join("admm_nn_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("oversized_dim.bin");
+        let err = m.save(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("shape dim"), "unexpected error: {msg}");
     }
 
     #[test]

@@ -102,6 +102,43 @@ fn keep_at(
         .collect()
 }
 
+/// Accept/reject bracket search over aggressiveness x ∈ [0, 1] — the
+/// probe loop of both Fig. 5 search rounds. Starts at `x0`, halves the
+/// bracket after every probe, and **never probes the same x twice**:
+/// once the next midpoint collapses onto the point just probed, the
+/// round terminates early. In particular, accepting the very first
+/// probe at x = 1.0 ends the round immediately — the previous loop kept
+/// `lo = hi = 1.0` and re-ran the identical (and expensive) full ADMM
+/// prune + retrain probe for every remaining iteration, silently
+/// wasting `search_probes − 1` probes' worth of wall-clock (the
+/// regression test drives this with a counting probe wrapper).
+fn search_bracket(
+    x0: f64,
+    max_probes: usize,
+    mut probe: impl FnMut(f64) -> crate::Result<bool>,
+) -> crate::Result<()> {
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    let mut x = x0;
+    for _ in 0..max_probes {
+        if probe(x)? {
+            lo = x;
+        } else {
+            hi = x;
+        }
+        let next = 0.5 * (lo + hi);
+        // Collapse check against *both* endpoints, not just the last
+        // probe: at float exhaustion the midpoint can round back onto
+        // the far endpoint (probed many iterations earlier), which
+        // would re-run that probe. Every strictly-interior midpoint is
+        // guaranteed unprobed.
+        if next == lo || next == hi {
+            break; // bracket collapsed onto an endpoint
+        }
+        x = next;
+    }
+    Ok(())
+}
+
 /// Run Fig. 5 end-to-end. `st` must hold a (pre)trained dense model.
 pub fn hw_aware_compress(
     sess: &ModelSession,
@@ -162,10 +199,10 @@ pub fn hw_aware_compress(
     };
 
     // -- round 1: binary search the global aggressiveness ------------------
+    // (starting from s = 1.0, the most aggressive config; accepting it
+    // ends the round — see `search_bracket`)
     let mut best: Option<(f64, Vec<f64>, f64, TrainState)> = None; // (s, keep, acc, state)
-    let (mut lo, mut hi) = (0.0f64, 1.0f64);
-    let mut s = 1.0; // try the most aggressive config first
-    for _ in 0..cfg.search_probes {
+    search_bracket(1.0, cfg.search_probes, |s| {
         let keep = keep_at(s, &init, &compute_share, &is_conv,
                            cfg.min_keep, cfg.fc_coupling);
         let (acc, cand) = probe(&keep)?;
@@ -175,16 +212,11 @@ pub fn hw_aware_compress(
             eprintln!("[hw-aware] probe s={s:.3} → acc {acc:.4} ({})",
                       if ok { "accept" } else { "reject" });
         }
-        if ok {
-            if best.as_ref().map_or(true, |(bs, ..)| s > *bs) {
-                best = Some((s, keep, acc, cand));
-            }
-            lo = s;
-        } else {
-            hi = s;
+        if ok && best.as_ref().map_or(true, |(bs, ..)| s > *bs) {
+            best = Some((s, keep, acc, cand));
         }
-        s = 0.5 * (lo + hi);
-    }
+        Ok(ok)
+    })?;
     let (_, mut keep, mut acc, mut state) = match best {
         Some(b) => b,
         None => {
@@ -217,11 +249,11 @@ pub fn hw_aware_compress(
             );
         }
         // Spend the freed margin: push the surviving conv layers harder,
-        // secondary binary search on an extra aggressiveness t.
+        // secondary binary search on an extra aggressiveness t (same
+        // duplicate-probe guard as round 1).
         let base = keep.clone();
-        let (mut lo, mut hi) = (0.0f64, 1.0f64);
-        let mut t = 0.5;
-        for _ in 0..cfg.search_probes.max(1) {
+        let mut best_t: Option<f64> = None;
+        search_bracket(0.5, cfg.search_probes.max(1), |t| {
             let mut cand_keep = base.clone();
             for i in 0..n {
                 if !restored[i] {
@@ -236,16 +268,14 @@ pub fn hw_aware_compress(
                 eprintln!("[hw-aware] probe t={t:.3} → acc {a:.4} ({})",
                           if ok { "accept" } else { "reject" });
             }
-            if ok {
+            if ok && best_t.map_or(true, |bt| t > bt) {
+                best_t = Some(t);
                 keep = cand_keep;
                 acc = a;
                 state = cand;
-                lo = t;
-            } else {
-                hi = t;
             }
-            t = 0.5 * (lo + hi);
-        }
+            Ok(ok)
+        })?;
         // If no secondary probe passed, re-probe the restored baseline so
         // the returned state matches `keep`.
         if keep == base {
@@ -303,5 +333,73 @@ mod tests {
         let init = vec![0.5];
         let k = keep_at(0.0, &init, &[1.0], &[true], 0.02, 0.5);
         assert!((k[0] - 0.5).abs() < 1e-9);
+    }
+
+    /// Counting probe wrapper: records every aggressiveness the search
+    /// asks for and fails on a repeat — each probe is a full ADMM prune
+    /// + retrain, so a duplicate is pure wasted wall-clock.
+    struct CountingProbe {
+        seen: Vec<f64>,
+    }
+
+    impl CountingProbe {
+        fn new() -> Self {
+            CountingProbe { seen: Vec::new() }
+        }
+
+        fn record(&mut self, x: f64) {
+            assert!(
+                !self.seen.contains(&x),
+                "duplicate probe at x={x} (already probed {:?})",
+                self.seen
+            );
+            self.seen.push(x);
+        }
+    }
+
+    #[test]
+    fn accepted_top_probe_short_circuits() {
+        // Regression for the round-1 loop: with the accuracy target met
+        // at s = 1.0, the old loop set lo = s and recomputed
+        // s = 0.5·(lo + hi) = 1.0 forever, re-running the identical
+        // full-ADMM probe `search_probes` times. The fixed bracket
+        // search must probe s = 1.0 exactly once.
+        let mut counter = CountingProbe::new();
+        search_bracket(1.0, 4, |s| {
+            counter.record(s);
+            Ok(true) // most aggressive config is acceptable
+        })
+        .unwrap();
+        assert_eq!(counter.seen, vec![1.0], "exactly one probe expected");
+    }
+
+    #[test]
+    fn bracket_search_never_repeats_a_probe() {
+        // Monotone accept boundaries, both rounds' starting points
+        // (round 1: x0 = 1.0, round 2: x0 = 0.5), including the
+        // all-accept and all-reject extremes, at a deep probe budget so
+        // float bracket collapse is actually reached.
+        for x0 in [1.0f64, 0.5] {
+            for boundary in [0.0f64, 0.2, 0.34, 0.5, 0.75, 1.0] {
+                let mut counter = CountingProbe::new();
+                search_bracket(x0, 64, |x| {
+                    counter.record(x);
+                    Ok(x <= boundary)
+                })
+                .unwrap();
+                assert!(
+                    !counter.seen.is_empty() && counter.seen.len() <= 64,
+                    "x0={x0} boundary={boundary}"
+                );
+                // every probe stayed in the bracket
+                assert!(counter.seen.iter().all(|&x| (0.0..=1.0).contains(&x)));
+            }
+        }
+    }
+
+    #[test]
+    fn bracket_search_propagates_probe_errors() {
+        let err = search_bracket(1.0, 4, |_| Err(anyhow::anyhow!("probe exploded")));
+        assert!(err.is_err());
     }
 }

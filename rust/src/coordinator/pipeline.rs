@@ -123,12 +123,15 @@ pub fn run_pipeline(
     }
 
     // -- stage 4: quantizer selection on the survivors ---------------------
-    // Histogram-accelerated searches, one layer per pool worker (layers
-    // are read-only and independent here).
+    // Histogram-accelerated searches, one layer per pool lane (layers
+    // are read-only and independent here; size hints start the dominant
+    // fc layer first).
+    let layer_sizes: Vec<usize> = wi.iter().map(|&pi| st.params[pi].len()).collect();
     let mut quant: Vec<QuantConfig> = {
         let params = &st.params;
-        ThreadPool::global().map_with_scratch(
+        ThreadPool::global().map_with_scratch_sized(
             wi.clone(),
+            &layer_sizes,
             &mut Vec::new(),
             || (),
             |li, pi, _| {
@@ -160,8 +163,9 @@ pub fn run_pipeline(
         let wparams = TrainState::weight_tensors_mut(&mut st.params, &wi);
         let jobs: Vec<(&mut QuantConfig, &mut Tensor)> =
             quant.iter_mut().zip(wparams).collect();
-        ThreadPool::global().map_with_scratch(
+        ThreadPool::global().map_with_scratch_sized(
             jobs,
+            &layer_sizes,
             &mut Vec::new(),
             || (),
             |_, (qc, t), _| {
@@ -174,20 +178,41 @@ pub fn run_pipeline(
     sess.invalidate_slow();
 
     // -- stage 6: package + validate the stored representation -------------
+    // RelIndex encoding is independent per layer, so packaging fans out
+    // across the pool (size hints: encode time is linear in the layer,
+    // and the fc layers dominate). Per-layer output order is preserved,
+    // so the stored model is identical to the serial encode.
+    let packaged: Vec<(CompressedLayer, (String, usize, usize))> = {
+        let params = &st.params;
+        let quant = &quant;
+        let wps = &wps;
+        ThreadPool::global().map_with_scratch_sized(
+            wi.clone(),
+            &layer_sizes,
+            &mut Vec::new(),
+            || (),
+            |li, pi, _| {
+                let t = &params[pi];
+                // storage-optimal index width for this layer's density
+                let keep = t.count_nonzero() as f64 / t.len().max(1) as f64;
+                let index_bits = if cfg.index_bits == 0 {
+                    crate::sparsity::best_index_bits(keep, quant[li].bits)
+                } else {
+                    cfg.index_bits
+                };
+                (
+                    CompressedLayer::from_quantized(
+                        &wps[li].name, t, &quant[li], index_bits),
+                    (wps[li].name.clone(), t.len(), t.count_nonzero()),
+                )
+            },
+        )
+    };
     let mut layers = Vec::with_capacity(wps.len());
     let mut layer_keep = Vec::with_capacity(wps.len());
-    for (li, &pi) in wi.iter().enumerate() {
-        let t = &st.params[pi];
-        // storage-optimal index width for this layer's achieved density
-        let keep = t.count_nonzero() as f64 / t.len().max(1) as f64;
-        let index_bits = if cfg.index_bits == 0 {
-            crate::sparsity::best_index_bits(keep, quant[li].bits)
-        } else {
-            cfg.index_bits
-        };
-        layers.push(CompressedLayer::from_quantized(
-            &wps[li].name, t, &quant[li], index_bits));
-        layer_keep.push((wps[li].name.clone(), t.len(), t.count_nonzero()));
+    for (l, lk) in packaged {
+        layers.push(l);
+        layer_keep.push(lk);
     }
     let biases = entry
         .params

@@ -35,10 +35,12 @@
 //! * [`data`] — deterministic synthetic datasets (MNIST-like digits,
 //!   ImageNet-proxy textures) standing in for the paper's corpora.
 //! * [`report`] — regenerates every table and figure of the evaluation.
-//! * [`util`] — deterministic RNG, search primitives, the scoped
-//!   [`util::ThreadPool`] (std-only) that fans per-layer Z-updates and
-//!   quantizer searches across cores with bit-identical results, and the
-//!   bench harness with optional machine-readable JSON output
+//! * [`util`] — deterministic RNG, search primitives, the persistent
+//!   size-aware [`util::ThreadPool`] (std-only) that fans per-layer
+//!   Z-updates and quantizer searches across cores with bit-identical
+//!   results (workers park when idle; dominant layers additionally
+//!   split elementwise work across idle lanes), and the bench harness
+//!   with optional machine-readable JSON output
 //!   ([`util::bench::BenchSuite`]).
 //!
 //! Python never runs at coordination time: after `make artifacts` the

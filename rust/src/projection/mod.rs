@@ -24,16 +24,64 @@
 /// formulation in the kernel which may keep extra tied entries — the
 /// difference only matters on exact float ties; tests pin both behaviours.
 pub fn prune_topk(v: &[f32], k: usize) -> Vec<f32> {
-    let mut idx = Vec::new();
+    let mut mags = Vec::new();
     let mut out = Vec::new();
-    prune_topk_into(v, k, &mut idx, &mut out);
+    prune_topk_into(v, k, &mut mags, &mut out);
     out
 }
 
-/// [`prune_topk`] into caller-owned buffers: `idx` is index-selection
+/// [`prune_topk`] into caller-owned buffers: `mags` is magnitude-select
 /// scratch, `out` receives the projection. No allocation after the first
 /// call at a given size.
-pub fn prune_topk_into(v: &[f32], k: usize, idx: &mut Vec<u32>, out: &mut Vec<f32>) {
+///
+/// Blocked magnitude select: the selection runs on a contiguous `|v|`
+/// copy (flat f32 compares, no per-comparison index gather like the
+/// PR-1 [`prune_topk_into_indexsel`] path), then one branch-light fill
+/// pass applies the threshold. Ties at the threshold keep the earliest
+/// indices — bit-identical to the index-indirect select, which ordered
+/// by (|v| desc, index asc) (property-tested).
+pub fn prune_topk_into(v: &[f32], k: usize, mags: &mut Vec<f32>, out: &mut Vec<f32>) {
+    let n = v.len();
+    out.clear();
+    if k >= n {
+        out.extend_from_slice(v);
+        return;
+    }
+    if k == 0 {
+        out.resize(n, 0.0);
+        return;
+    }
+    // Pass 1: contiguous magnitudes, k-th largest via select_nth
+    // (O(n) average, direct f32 compares on a cache-friendly slice).
+    mags.clear();
+    mags.extend(v.iter().map(|x| x.abs()));
+    mags.select_nth_unstable_by(k - 1, |a, b| {
+        b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let thresh = mags[k - 1];
+    // Pass 2: entries strictly above the threshold always survive; the
+    // remaining k − n_above slots go to threshold ties in index order.
+    // (saturating: NaN input makes the select partition unspecified, so
+    // n_above can exceed k — degrade gracefully instead of underflowing)
+    let n_above = v.iter().filter(|x| x.abs() > thresh).count();
+    let mut ties_left = k.saturating_sub(n_above);
+    out.resize(n, 0.0);
+    for (o, &x) in out.iter_mut().zip(v) {
+        let m = x.abs();
+        if m > thresh {
+            *o = x;
+        } else if m == thresh && ties_left > 0 {
+            *o = x;
+            ties_left -= 1;
+        }
+    }
+}
+
+/// The PR-1 index-indirect selection (`select_nth_unstable` over an
+/// index permutation with a gather-per-compare comparator). Kept for
+/// cross-validation and the before/after benchmark; [`prune_topk_into`]
+/// is the production path.
+pub fn prune_topk_into_indexsel(v: &[f32], k: usize, idx: &mut Vec<u32>, out: &mut Vec<f32>) {
     let n = v.len();
     out.clear();
     if k >= n {
@@ -44,7 +92,6 @@ pub fn prune_topk_into(v: &[f32], k: usize, idx: &mut Vec<u32>, out: &mut Vec<f3
     if k == 0 {
         return;
     }
-    // select_nth_unstable on |v| descending: O(n) average.
     idx.clear();
     idx.extend(0..n as u32);
     idx.select_nth_unstable_by(k - 1, |&a, &b| {
@@ -104,10 +151,12 @@ pub fn quant_nearest_into(v: &[f32], q: f32, half_m: u32, out: &mut Vec<f32>) {
 }
 
 /// [`quant_nearest_into`] with intra-op parallelism: the slice is split
-/// into contiguous chunks, one per pool worker (the pool runs small
-/// slices — and any call made from inside a pool fan-out — inline, so
-/// concurrency never exceeds the pool width). Pure elementwise, so
-/// results are bit-identical to the serial path. This is what
+/// into contiguous chunks across pool lanes. Small slices run inline;
+/// from inside a fan-out of the *same* pool the split uses only the
+/// currently-idle workers (the size-aware hybrid schedule — a dominant
+/// layer soaks up cores its siblings left idle, and concurrency never
+/// exceeds the pool width). Pure elementwise, so results are
+/// bit-identical to the serial path at any split. This is what
 /// `Constraint::project_with` runs for level projections.
 pub fn quant_nearest_into_par(
     pool: &crate::util::ThreadPool,
@@ -156,9 +205,9 @@ pub fn quant_error(v: &[f32], q: f32, half_m: u32) -> f64 {
 /// steps in this order: "weight pruning first, then ... quantization on
 /// the remaining, non-zero weights").
 pub fn joint_project(v: &[f32], k: usize, q: f32, half_m: u32) -> Vec<f32> {
-    let mut idx = Vec::new();
+    let mut mags = Vec::new();
     let mut out = Vec::new();
-    joint_project_into(v, k, q, half_m, &mut idx, &mut out);
+    joint_project_into(v, k, q, half_m, &mut mags, &mut out);
     out
 }
 
@@ -168,10 +217,10 @@ pub fn joint_project_into(
     k: usize,
     q: f32,
     half_m: u32,
-    idx: &mut Vec<u32>,
+    mags: &mut Vec<f32>,
     out: &mut Vec<f32>,
 ) {
-    prune_topk_into(v, k, idx, out);
+    prune_topk_into(v, k, mags, out);
     quant_nearest_inplace(out, q, half_m);
 }
 
@@ -188,9 +237,9 @@ pub fn mask_of_slice(src: &[f32], dst: &mut [f32]) {
     }
 }
 
-/// Reusable per-worker scratch for the ADMM projection hot loop: staging
-/// for W+U, the projection output, and top-k index scratch. One of these
-/// lives per pool worker and persists across ADMM iterations, so the
+/// Reusable per-lane scratch for the ADMM projection hot loop: staging
+/// for W+U, the projection output, and top-k magnitude scratch. One of
+/// these lives per pool lane and persists across ADMM iterations, so the
 /// steady-state Z-update's O(n) buffers are allocation-free (the pool's
 /// per-call job bookkeeping is O(layers), not O(weights)).
 #[derive(Default)]
@@ -199,8 +248,8 @@ pub struct ProjectionWorkspace {
     pub input: Vec<f32>,
     /// Last projection result.
     pub out: Vec<f32>,
-    /// Index scratch for top-k selection.
-    pub idx: Vec<u32>,
+    /// Magnitude scratch for the blocked top-k selection.
+    pub mags: Vec<f32>,
 }
 
 impl ProjectionWorkspace {
@@ -269,14 +318,50 @@ mod tests {
     #[test]
     fn topk_into_reuses_buffers_bit_identical() {
         let mut rng = Rng::new(21);
-        let mut idx = Vec::new();
+        let mut mags = Vec::new();
         let mut out = Vec::new();
         // deliberately different sizes back-to-back to exercise reuse
         for (n, k) in [(1000usize, 100usize), (500, 499), (1000, 0), (64, 64)] {
             let v = rng.normal_vec(n, 1.0);
-            prune_topk_into(&v, k, &mut idx, &mut out);
+            prune_topk_into(&v, k, &mut mags, &mut out);
             assert_eq!(out, prune_topk(&v, k), "n={n} k={k}");
         }
+    }
+
+    #[test]
+    fn blocked_select_matches_index_select() {
+        // The blocked magnitude select must reproduce the PR-1
+        // index-indirect path bit-for-bit, including its tie rule
+        // (earliest index wins at the threshold magnitude).
+        let mut rng = Rng::new(25);
+        let mut mags = Vec::new();
+        let mut idx = Vec::new();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for trial in 0..30 {
+            let n = 50 + rng.below(3000);
+            // quantize magnitudes coarsely so exact float ties are common
+            let v: Vec<f32> = rng
+                .normal_vec(n, 1.0)
+                .iter()
+                .map(|&x| (x * 4.0).round() / 4.0)
+                .collect();
+            let k = rng.below(n + 1);
+            prune_topk_into(&v, k, &mut mags, &mut a);
+            prune_topk_into_indexsel(&v, k, &mut idx, &mut b);
+            assert_eq!(a, b, "trial {trial} n={n} k={k}");
+        }
+        // degenerate tie storms: constant and sign-flipped constant input
+        let v = vec![0.5f32; 257];
+        for k in [0usize, 1, 128, 256, 257] {
+            prune_topk_into(&v, k, &mut mags, &mut a);
+            prune_topk_into_indexsel(&v, k, &mut idx, &mut b);
+            assert_eq!(a, b, "constant ties k={k}");
+            assert_eq!(a.iter().filter(|&&x| x != 0.0).count(), k.min(257));
+        }
+        let v: Vec<f32> = (0..300).map(|i| if i % 2 == 0 { 0.25 } else { -0.25 }).collect();
+        prune_topk_into(&v, 33, &mut mags, &mut a);
+        prune_topk_into_indexsel(&v, 33, &mut idx, &mut b);
+        assert_eq!(a, b, "signed ties");
     }
 
     #[test]

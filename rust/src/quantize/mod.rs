@@ -150,9 +150,15 @@ impl MagnitudeHistogram {
     }
 }
 
-/// The shared golden-section bracket (same as the seed exact search):
-/// the optimum lies in (0, max|w|] — q above max|w| only inflates the
-/// lowest level; q → 0 clamps everything to the top level.
+/// The shared golden-section bracket (same as the seed exact search).
+/// The optimum lies in (0, max|w|] — q above max|w| only inflates the
+/// lowest level, and q → 0 clamps everything to the top level — but the
+/// bracket is deliberately wider: [max|w|/(64·half_m), 1.25·max|w|].
+/// Golden-section only evaluates *interior* points and returns the
+/// final bracket's midpoint, so an optimum sitting right at max|w|
+/// (e.g. one dominant magnitude at 1 bit, where q* = mean|w| ≈ max|w|)
+/// needs the 1.25× pad to be straddled rather than pinned to the edge;
+/// likewise the lower end stops short of the q → 0 plateau.
 fn golden_q(max_abs: f32, half_m: u32, f: impl FnMut(f64) -> f64) -> f64 {
     let hi = max_abs as f64 * 1.25;
     let lo = max_abs as f64 / half_m as f64 / 64.0;

@@ -1,6 +1,6 @@
 //! Small utilities shared across the crate: deterministic RNG, binary
-//! search, the scoped thread-pool behind per-layer parallelism, and
-//! human-readable formatting.
+//! search, the persistent size-aware thread-pool behind per-layer
+//! parallelism, and human-readable formatting.
 
 pub mod bench;
 pub mod cli;

@@ -1,62 +1,226 @@
-//! Scoped thread-pool for the coordinator's per-layer parallelism.
+//! Persistent size-aware thread pool for the coordinator's host-side
+//! parallelism (per-layer fan-outs + intra-layer elementwise splits).
 //!
-//! Std-only (the build is offline): work is fanned out with
-//! [`std::thread::scope`], so borrowed per-layer state (`&mut Tensor`
-//! from the ADMM `TrainState`) can cross into workers without `'static`
-//! bounds or reference counting. Per-item results come back **in item
-//! order**, and per-item computation is byte-identical to the serial
-//! path — items never share mutable state and no cross-item reduction
-//! happens on the workers — so parallel and serial projections agree
-//! bit-for-bit (property-tested in `tests/hot_paths_equivalence.rs`).
+//! ## Scheduling contract
+//!
+//! * **Persistent workers.** A pool of width `n` owns `n − 1` long-lived
+//!   worker threads behind a job queue; the *calling* thread is always
+//!   the n-th lane (it claims work itself, so progress never depends on
+//!   worker availability). Workers are spawned lazily on the first
+//!   parallel fan-out and park on a condvar while idle — an idle pool
+//!   costs nothing, and steady-state fan-outs pay a queue push + wake
+//!   instead of the former per-call `thread::scope` spawn/join (~10µs
+//!   per worker per call, measurable at LeNet scale).
+//! * **Item order, bit-identical.** [`ThreadPool::map_with_scratch`]
+//!   returns results **in item order**, items never share mutable state,
+//!   and no cross-item reduction runs on the workers — so parallel and
+//!   serial execution agree bit-for-bit at any width (property-tested in
+//!   `tests/hot_paths_equivalence.rs`).
+//! * **Size hints.** [`ThreadPool::map_with_scratch_sized`] accepts
+//!   per-job size hints; bigger jobs are *started* first (hints reorder
+//!   start times only — never results), so a dominant layer does not end
+//!   up scheduled last behind a fleet of small ones.
+//! * **Nested calls.** A `map_with_scratch` fan-out issued from inside a
+//!   pool lane runs inline (concurrency never exceeds the pool width).
+//!   Elementwise splits ([`ThreadPool::par_zip_map`]) are the exception:
+//!   issued from a lane *of the same pool*, they may fan out across the
+//!   currently **idle** workers — this is the size-aware hybrid schedule
+//!   that lets one giant fc layer soak up cores the small layers left
+//!   idle, without oversubscribing busy ones. Splits on a *different*
+//!   pool than the one the lane belongs to always run inline.
+//! * **Panics.** A panic in any job is caught on the executing lane and
+//!   re-raised on the caller as `"pool worker panicked"` after every
+//!   job of the fan-out has finished.
 //!
 //! Thread count: `ADMM_NN_THREADS` env override, else
-//! `available_parallelism()`. A pool of 1 runs everything inline.
+//! `available_parallelism()`. A pool of 1 runs everything inline on the
+//! caller and never spawns a thread.
 
 use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
 
-/// Minimum elements per worker for elementwise splits — below this the
-/// spawn overhead dominates and [`ThreadPool::par_zip_map`] runs inline.
+/// Minimum elements per lane for elementwise splits — below this the
+/// scheduling overhead dominates and [`ThreadPool::par_zip_map`] runs
+/// inline.
 const MIN_CHUNK: usize = 16 * 1024;
 
 thread_local! {
-    /// True on threads spawned by a pool fan-out. Nested pool calls on
-    /// such threads run inline, so total concurrency never exceeds the
-    /// pool width (no N×N oversubscription when a parallel per-layer
-    /// job itself uses an intra-op split).
-    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+    /// Identity (by `Shared` address) of the pool whose lane is running
+    /// on this thread; 0 when the thread is not inside any pool fan-out.
+    /// Nested `map` fan-outs check it to run inline; nested elementwise
+    /// splits check it to borrow idle workers of the *same* pool only.
+    static LANE_OF: Cell<usize> = const { Cell::new(0) };
 }
 
-fn in_pool_worker() -> bool {
-    IN_POOL_WORKER.with(|f| f.get())
+fn current_lane_pool() -> usize {
+    LANE_OF.with(|f| f.get())
+}
+
+fn in_pool_lane() -> bool {
+    current_lane_pool() != 0
+}
+
+type BoxedTask = Box<dyn FnOnce() + Send + 'static>;
+
+fn boxed<'env, F: FnOnce() + Send + 'env>(f: F) -> Box<dyn FnOnce() + Send + 'env> {
+    Box::new(f)
+}
+
+/// One scoped fan-out: tasks behind a claim cursor plus a completion
+/// latch. Shared by the caller lane and any helping workers.
+struct TaskSet {
+    tasks: Vec<Mutex<Option<BoxedTask>>>,
+    next: AtomicUsize,
+    done: Mutex<DoneState>,
+    finished: Condvar,
+}
+
+#[derive(Default)]
+struct DoneState {
+    count: usize,
+    panicked: bool,
+}
+
+impl TaskSet {
+    fn new(tasks: Vec<BoxedTask>) -> Self {
+        TaskSet {
+            tasks: tasks.into_iter().map(|t| Mutex::new(Some(t))).collect(),
+            next: AtomicUsize::new(0),
+            done: Mutex::new(DoneState::default()),
+            finished: Condvar::new(),
+        }
+    }
+
+    /// Claim and run tasks until the cursor is exhausted. Task panics are
+    /// caught and recorded so the latch always completes.
+    fn drain(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.tasks.len() {
+                break;
+            }
+            let task = self.tasks[i]
+                .lock()
+                .expect("task slot poisoned")
+                .take()
+                .expect("task claimed twice");
+            let result = catch_unwind(AssertUnwindSafe(task));
+            let mut st = self.done.lock().expect("done latch poisoned");
+            st.count += 1;
+            if result.is_err() {
+                st.panicked = true;
+            }
+            self.finished.notify_all();
+        }
+    }
+
+    /// Block until every task has finished; true if any panicked.
+    fn wait(&self) -> bool {
+        let mut st = self.done.lock().expect("done latch poisoned");
+        while st.count < self.tasks.len() {
+            st = self.finished.wait(st).expect("done latch poisoned");
+        }
+        st.panicked
+    }
+}
+
+struct QueueState {
+    queue: VecDeque<Arc<TaskSet>>,
+    shutdown: bool,
+}
+
+/// State shared between a pool handle and its persistent workers.
+struct Shared {
+    q: Mutex<QueueState>,
+    available: Condvar,
+    /// Workers currently parked (approximate — used only as a
+    /// scheduling hint for nested elementwise splits).
+    idle: AtomicUsize,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    LANE_OF.with(|f| f.set(Arc::as_ptr(&shared) as usize));
+    loop {
+        let set = {
+            let mut qs = shared.q.lock().expect("pool queue poisoned");
+            loop {
+                if let Some(set) = qs.queue.pop_front() {
+                    break Some(set);
+                }
+                if qs.shutdown {
+                    break None;
+                }
+                shared.idle.fetch_add(1, Ordering::SeqCst);
+                qs = shared.available.wait(qs).expect("pool queue poisoned");
+                shared.idle.fetch_sub(1, Ordering::SeqCst);
+            }
+        };
+        match set {
+            Some(set) => set.drain(),
+            None => return,
+        }
+    }
+}
+
+struct PoolInner {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl PoolInner {
+    fn spawn(n_workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            q: Mutex::new(QueueState { queue: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+            idle: AtomicUsize::new(0),
+        });
+        let handles = (0..n_workers)
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name("admm-nn-pool".into())
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        PoolInner { shared, handles }
+    }
 }
 
 pub struct ThreadPool {
     n: usize,
+    inner: OnceLock<PoolInner>,
 }
 
 static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
 
+/// Pool width from the `ADMM_NN_THREADS` value (`None` / unparsable /
+/// zero fall back to `available_parallelism`).
+fn width_from_env(var: Option<&str>) -> usize {
+    var.and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+        })
+}
+
 impl ThreadPool {
     pub fn new(n: usize) -> Self {
-        ThreadPool { n: n.max(1) }
+        ThreadPool { n: n.max(1), inner: OnceLock::new() }
     }
 
-    /// Process-wide pool: `ADMM_NN_THREADS` override, else one worker
-    /// per available core.
+    /// Process-wide pool: `ADMM_NN_THREADS` override, else one lane per
+    /// available core. Workers spawn on first use and park when idle.
     pub fn global() -> &'static ThreadPool {
         GLOBAL.get_or_init(|| {
-            let n = std::env::var("ADMM_NN_THREADS")
-                .ok()
-                .and_then(|s| s.parse::<usize>().ok())
-                .filter(|&n| n > 0)
-                .unwrap_or_else(|| {
-                    std::thread::available_parallelism()
-                        .map(|p| p.get())
-                        .unwrap_or(1)
-                });
-            ThreadPool::new(n)
+            let env = std::env::var("ADMM_NN_THREADS").ok();
+            ThreadPool::new(width_from_env(env.as_deref()))
         })
     }
 
@@ -64,14 +228,107 @@ impl ThreadPool {
         self.n
     }
 
+    /// The persistent worker set (`n − 1` threads), spawned on demand.
+    /// Only reached when `n > 1`.
+    fn inner(&self) -> &PoolInner {
+        self.inner.get_or_init(|| PoolInner::spawn(self.n - 1))
+    }
+
+    /// Address tag identifying this pool's worker set (0 before first use).
+    fn pool_id(&self) -> usize {
+        self.inner
+            .get()
+            .map(|i| Arc::as_ptr(&i.shared) as usize)
+            .unwrap_or(0)
+    }
+
+    /// Parked workers right now (scheduling hint only).
+    fn idle_workers(&self) -> usize {
+        self.inner
+            .get()
+            .map(|i| i.shared.idle.load(Ordering::SeqCst))
+            .unwrap_or(0)
+    }
+
+    /// Run borrowed tasks to completion: the calling thread claims tasks
+    /// itself while parked workers are woken to steal the rest. Returns
+    /// only after every task finished; panics in any task are re-raised
+    /// here.
+    fn run_scoped<'env>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        if self.n <= 1 || tasks.len() == 1 {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let inner = self.inner();
+        // SAFETY: the lifetime-erased tasks are all claimed by the
+        // caller's own drain below and completed before wait() returns,
+        // so no borrow in a task outlives 'env. A worker that dequeues
+        // the Arc *after* that only observes an exhausted cursor and
+        // empty task slots (the Arc keeps the bookkeeping alive, never
+        // the closures).
+        let tasks: Vec<BoxedTask> = tasks
+            .into_iter()
+            .map(|t| unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, BoxedTask>(t)
+            })
+            .collect();
+        let helpers = (tasks.len() - 1).min(self.n - 1);
+        let set = Arc::new(TaskSet::new(tasks));
+        {
+            let mut qs = inner.shared.q.lock().expect("pool queue poisoned");
+            for _ in 0..helpers {
+                qs.queue.push_back(set.clone());
+            }
+        }
+        for _ in 0..helpers {
+            inner.shared.available.notify_one();
+        }
+        // The caller is a lane too: mark it so nested calls schedule
+        // against this pool exactly like on a worker thread.
+        let prev = LANE_OF.with(|f| f.replace(Arc::as_ptr(&inner.shared) as usize));
+        set.drain();
+        LANE_OF.with(|f| f.set(prev));
+        if set.wait() {
+            panic!("pool worker panicked");
+        }
+    }
+
     /// Run `f(i, item, scratch)` over every item, fanning out across up
-    /// to `threads()` workers. `scratch` supplies one reusable workspace
-    /// per worker (grown with `mk` on demand and retained by the caller
+    /// to `threads()` lanes. `scratch` supplies one reusable workspace
+    /// per lane (grown with `mk` on demand and retained by the caller
     /// across calls — this is what makes the hot loop allocation-free).
     /// Results return in item order.
     pub fn map_with_scratch<T, R, S, F, M>(
         &self,
         items: Vec<T>,
+        scratch: &mut Vec<S>,
+        mk: M,
+        f: F,
+    ) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        S: Send,
+        F: Fn(usize, T, &mut S) -> R + Sync,
+        M: FnMut() -> S,
+    {
+        self.map_with_scratch_sized(items, &[], scratch, mk, f)
+    }
+
+    /// [`ThreadPool::map_with_scratch`] with per-job size hints: jobs are
+    /// *started* in descending-size order (an empty `sizes` keeps item
+    /// order), so a dominant layer runs from the first moment and its
+    /// nested elementwise splits can absorb workers as they go idle.
+    /// Hints never affect results — only start times of independent jobs.
+    pub fn map_with_scratch_sized<T, R, S, F, M>(
+        &self,
+        items: Vec<T>,
+        sizes: &[usize],
         scratch: &mut Vec<S>,
         mut mk: M,
         f: F,
@@ -84,15 +341,21 @@ impl ThreadPool {
         M: FnMut() -> S,
     {
         let n_items = items.len();
-        let workers = if in_pool_worker() {
+        assert!(
+            sizes.is_empty() || sizes.len() == n_items,
+            "size hints length mismatch: {} hints for {} items",
+            sizes.len(),
+            n_items
+        );
+        let lanes = if in_pool_lane() {
             1
         } else {
             self.n.min(n_items).max(1)
         };
-        while scratch.len() < workers {
+        while scratch.len() < lanes {
             scratch.push(mk());
         }
-        if workers == 1 {
+        if lanes == 1 {
             let s0 = &mut scratch[0];
             return items
                 .into_iter()
@@ -101,81 +364,121 @@ impl ThreadPool {
                 .collect();
         }
 
-        // Work-stealing by atomic index; each item sits in a one-shot
-        // slot. Jobs here are per-layer (tens, not millions), so the
-        // per-item lock is noise next to the O(n) layer work.
+        let mut order: Vec<u32> = (0..n_items as u32).collect();
+        if !sizes.is_empty() {
+            order.sort_by_key(|&i| std::cmp::Reverse(sizes[i as usize]));
+        }
         let slots: Vec<Mutex<Option<T>>> =
             items.into_iter().map(|t| Mutex::new(Some(t))).collect();
-        let next = AtomicUsize::new(0);
-        let mut collected: Vec<Vec<(usize, R)>> = Vec::new();
-        std::thread::scope(|sc| {
-            let mut handles = Vec::with_capacity(workers);
-            for s in scratch.iter_mut().take(workers) {
-                let slots = &slots;
-                let next = &next;
-                let f = &f;
-                handles.push(sc.spawn(move || {
-                    IN_POOL_WORKER.with(|f| f.set(true));
-                    let mut local = Vec::new();
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= slots.len() {
+        let results: Vec<Mutex<Option<R>>> =
+            (0..n_items).map(|_| Mutex::new(None)).collect();
+        let cursor = AtomicUsize::new(0);
+        {
+            let order = &order;
+            let slots = &slots;
+            let results = &results;
+            let cursor = &cursor;
+            let f = &f;
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = scratch
+                .iter_mut()
+                .take(lanes)
+                .map(|s| {
+                    boxed(move || loop {
+                        let pos = cursor.fetch_add(1, Ordering::Relaxed);
+                        if pos >= order.len() {
                             break;
                         }
+                        let i = order[pos] as usize;
                         let item = slots[i]
                             .lock()
                             .expect("job slot poisoned")
                             .take()
                             .expect("job taken twice");
-                        local.push((i, f(i, item, &mut *s)));
-                    }
-                    local
-                }));
-            }
-            for h in handles {
-                collected.push(h.join().expect("pool worker panicked"));
-            }
-        });
-        let mut out: Vec<Option<R>> = (0..n_items).map(|_| None).collect();
-        for batch in collected {
-            for (i, r) in batch {
-                out[i] = Some(r);
-            }
+                        let r = f(i, item, &mut *s);
+                        *results[i].lock().expect("result slot poisoned") = Some(r);
+                    })
+                })
+                .collect();
+            self.run_scoped(tasks);
         }
-        out.into_iter().map(|o| o.expect("missing result")).collect()
+        results
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .expect("result slot poisoned")
+                    .expect("missing result")
+            })
+            .collect()
     }
 
-    /// Elementwise `dst[i] = f(src[i])` split into contiguous chunks, one
-    /// per worker. Bit-identical to the serial loop: `f` is pure per
-    /// element and no reduction reorders floating-point sums.
+    /// How many lanes an elementwise split of `len` may use right now:
+    /// bounded by the [`MIN_CHUNK`] grain and — from inside a lane of
+    /// this same pool — by 1 + the currently-idle workers, so a dominant
+    /// layer soaks up spare capacity without oversubscribing busy lanes.
+    /// Inside a lane of a *different* pool the split runs inline.
+    fn elementwise_lanes(&self, len: usize) -> usize {
+        let grain = len / MIN_CHUNK;
+        if grain <= 1 {
+            return 1;
+        }
+        let width = match current_lane_pool() {
+            0 => self.n,
+            p if p == self.pool_id() => 1 + self.idle_workers(),
+            _ => 1,
+        };
+        width.min(grain).max(1)
+    }
+
+    /// Elementwise `dst[i] = f(src[i])` split into contiguous chunks.
+    /// Bit-identical to the serial loop: `f` is pure per element, chunk
+    /// boundaries never change any element's result, and no reduction
+    /// reorders floating-point sums. See the module docs for when this
+    /// may borrow idle workers from inside a fan-out.
     pub fn par_zip_map<F>(&self, src: &[f32], dst: &mut [f32], f: F)
     where
         F: Fn(f32) -> f32 + Sync,
     {
         assert_eq!(src.len(), dst.len(), "par_zip_map length mismatch");
-        let workers = if in_pool_worker() {
-            1
-        } else {
-            self.n.min((src.len() / MIN_CHUNK).max(1))
-        };
-        if workers <= 1 {
+        let lanes = self.elementwise_lanes(src.len());
+        if lanes <= 1 {
             for (d, &s) in dst.iter_mut().zip(src) {
                 *d = f(s);
             }
             return;
         }
-        let chunk = (src.len() + workers - 1) / workers;
-        std::thread::scope(|sc| {
-            for (ds, ss) in dst.chunks_mut(chunk).zip(src.chunks(chunk)) {
-                let f = &f;
-                sc.spawn(move || {
-                    IN_POOL_WORKER.with(|w| w.set(true));
+        let chunk = (src.len() + lanes - 1) / lanes;
+        let f = &f;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = dst
+            .chunks_mut(chunk)
+            .zip(src.chunks(chunk))
+            .map(|(ds, ss)| {
+                boxed(move || {
                     for (d, &s) in ds.iter_mut().zip(ss) {
                         *d = f(s);
                     }
-                });
+                })
+            })
+            .collect();
+        self.run_scoped(tasks);
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.get_mut() {
+            {
+                let mut qs = inner
+                    .shared
+                    .q
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner());
+                qs.shutdown = true;
             }
-        });
+            inner.shared.available.notify_all();
+            for h in inner.handles.drain(..) {
+                let _ = h.join();
+            }
+        }
     }
 }
 
@@ -196,7 +499,7 @@ mod tests {
             assert_eq!(*gi, i);
             assert_eq!(*doubled, i * 2);
         }
-        // every worker got a scratch slot, and all items were processed
+        // every lane got a scratch slot, and all items were processed
         assert!(scratch.len() <= 4);
         assert_eq!(scratch.iter().sum::<u64>(), 100);
     }
@@ -234,6 +537,30 @@ mod tests {
     }
 
     #[test]
+    fn scratch_stable_at_shrinking_widths() {
+        // wide call first, then narrower ones: the scratch vec must not
+        // grow again, and reuse must stay clean.
+        let pool = ThreadPool::new(8);
+        let mut scratch: Vec<Vec<u8>> = Vec::new();
+        pool.map_with_scratch((0..32).collect(), &mut scratch, Vec::new, |_, _: i32, s| {
+            s.push(1);
+        });
+        let wide = scratch.len();
+        assert!(wide <= 8);
+        for n_items in [4usize, 2, 1] {
+            pool.map_with_scratch(
+                (0..n_items as i32).collect(),
+                &mut scratch,
+                Vec::new,
+                |_, _, s| {
+                    s.push(1);
+                },
+            );
+            assert_eq!(scratch.len(), wide, "n_items={n_items}");
+        }
+    }
+
+    #[test]
     fn par_zip_map_matches_serial() {
         let src: Vec<f32> = (0..100_000).map(|i| (i as f32) * 0.37 - 7.0).collect();
         let f = |x: f32| (x * 0.001).round() * 3.0;
@@ -248,7 +575,8 @@ mod tests {
 
     #[test]
     fn nested_pool_calls_run_inline() {
-        // A fan-out inside a pool worker must not fan out again: total
+        // A map fan-out inside a pool lane must not fan out again, and a
+        // *foreign* pool's elementwise split must run inline: total
         // concurrency stays bounded by the outer width, and results are
         // still correct.
         let outer = ThreadPool::new(4);
@@ -258,7 +586,7 @@ mod tests {
             || (),
             |_, x, _| {
                 let inner = ThreadPool::new(8);
-                // inner map: should take the serial path (1 worker)
+                // inner map: should take the serial path (1 lane)
                 let mut scratch: Vec<()> = Vec::new();
                 let parts = inner.map_with_scratch(
                     (0..x).collect::<Vec<usize>>(),
@@ -267,7 +595,7 @@ mod tests {
                     |_, y, _| y,
                 );
                 assert!(scratch.len() <= 1, "nested call fanned out");
-                // inner elementwise split: also inline
+                // inner elementwise split on a different pool: inline
                 let src: Vec<f32> = (0..100_000).map(|i| i as f32).collect();
                 let mut dst = vec![0.0f32; src.len()];
                 inner.par_zip_map(&src, &mut dst, |v| v + 1.0);
@@ -279,6 +607,55 @@ mod tests {
     }
 
     #[test]
+    fn size_aware_nested_split_matches_serial() {
+        // The hybrid schedule: a fan-out where one dominant job splits
+        // its elementwise work across the same pool's idle workers must
+        // be bit-identical to the serial path at every width.
+        let src: Vec<f32> = (0..200_000).map(|i| (i as f32) * 0.1 - 300.0).collect();
+        let want: Vec<f32> = src.iter().map(|&x| x * 2.0 + 1.0).collect();
+        for threads in [1usize, 2, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            let out = pool.map_with_scratch_sized(
+                vec![0usize, 1, 2],
+                &[src.len(), 8, 8],
+                &mut Vec::new(),
+                || (),
+                |_, job, _| {
+                    if job == 0 {
+                        let mut dst = vec![0.0f32; src.len()];
+                        pool.par_zip_map(&src, &mut dst, |x| x * 2.0 + 1.0);
+                        dst
+                    } else {
+                        vec![job as f32]
+                    }
+                },
+            );
+            assert_eq!(out[0], want, "threads={threads}");
+            assert_eq!(out[1], vec![1.0], "threads={threads}");
+            assert_eq!(out[2], vec![2.0], "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn sized_map_returns_in_item_order() {
+        let pool = ThreadPool::new(4);
+        let sizes: Vec<usize> = (0..40).map(|i| (i * 7919) % 1000).collect();
+        let items: Vec<usize> = (0..40).collect();
+        let out = pool.map_with_scratch_sized(
+            items,
+            &sizes,
+            &mut Vec::new(),
+            || (),
+            |i, x, _| {
+                assert_eq!(i, x, "item index passed through");
+                x * 10
+            },
+        );
+        let want: Vec<usize> = (0..40).map(|i| i * 10).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
     fn empty_and_single_item() {
         let pool = ThreadPool::new(4);
         let out: Vec<u32> =
@@ -286,5 +663,85 @@ mod tests {
         assert!(out.is_empty());
         let out = pool.map_with_scratch(vec![9u32], &mut Vec::new(), || (), |_, x, _| x + 1);
         assert_eq!(out, vec![10]);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool worker panicked")]
+    fn worker_panic_propagates() {
+        let pool = ThreadPool::new(4);
+        pool.map_with_scratch(
+            (0..64usize).collect::<Vec<usize>>(),
+            &mut Vec::new(),
+            || (),
+            |_, x, _| {
+                if x == 33 {
+                    panic!("boom");
+                }
+                x
+            },
+        );
+    }
+
+    #[test]
+    fn pool_survives_a_propagated_panic() {
+        // The latch completes even when a job panics, and the same pool
+        // keeps scheduling correctly afterwards.
+        let pool = ThreadPool::new(4);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.map_with_scratch(vec![1usize, 2, 3, 4], &mut Vec::new(), || (), |_, x, _| {
+                if x == 2 {
+                    panic!("boom");
+                }
+                x
+            })
+        }));
+        assert!(r.is_err(), "panic must propagate");
+        let out = pool.map_with_scratch(vec![5usize, 6], &mut Vec::new(), || (), |_, x, _| x * 2);
+        assert_eq!(out, vec![10, 12]);
+    }
+
+    #[test]
+    fn repeated_fanouts_reuse_persistent_workers() {
+        let pool = ThreadPool::new(4);
+        let mut scratch: Vec<()> = Vec::new();
+        for round in 0..100usize {
+            let out = pool.map_with_scratch(
+                (0..16usize).collect::<Vec<usize>>(),
+                &mut scratch,
+                || (),
+                |_, x, _| x + round,
+            );
+            let want: Vec<usize> = (0..16).map(|x| x + round).collect();
+            assert_eq!(out, want, "round {round}");
+        }
+    }
+
+    #[test]
+    fn width_one_runs_inline_without_threads() {
+        // ADMM_NN_THREADS=1 semantics: a width-1 pool never spawns a
+        // worker (inner stays uninitialized) and computes serially.
+        let pool = ThreadPool::new(1);
+        let out = pool.map_with_scratch(
+            (0..10usize).collect::<Vec<usize>>(),
+            &mut Vec::new(),
+            || (),
+            |_, x, _| x + 1,
+        );
+        assert_eq!(out, (1..=10).collect::<Vec<usize>>());
+        let src: Vec<f32> = (0..100_000).map(|i| i as f32).collect();
+        let mut dst = vec![0.0f32; src.len()];
+        pool.par_zip_map(&src, &mut dst, |x| x - 1.0);
+        assert_eq!(dst[70_001], 70_000.0);
+        assert!(pool.inner.get().is_none(), "width-1 pool spawned workers");
+    }
+
+    #[test]
+    fn env_width_parsing() {
+        assert_eq!(width_from_env(Some("3")), 3);
+        assert_eq!(width_from_env(Some("1")), 1);
+        // zero / garbage / unset fall back to a positive default
+        assert!(width_from_env(Some("0")) >= 1);
+        assert!(width_from_env(Some("not a number")) >= 1);
+        assert!(width_from_env(None) >= 1);
     }
 }

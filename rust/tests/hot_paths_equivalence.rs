@@ -1,13 +1,17 @@
-//! Property tests for the projection-engine PR: every converted hot path
-//! must agree with its seed counterpart.
+//! Property tests for the projection-engine and persistent-pool PRs:
+//! every converted hot path must agree with its seed counterpart.
 //!
 //! * `_into` / in-place projection variants are bit-identical to the
 //!   allocating ones on random vectors (including dirty reused buffers);
+//! * the blocked magnitude top-k select is bit-identical to the PR-1
+//!   index-indirect select, ties included;
 //! * the histogram quantizer search agrees with the exact golden-section
 //!   search to ≤ 1% relative error in the final `QuantConfig::error`
 //!   across bit-widths 1–8;
-//! * per-layer parallel projection produces results identical to the
-//!   serial path at any worker count;
+//! * per-layer parallel projection — including the persistent pool's
+//!   size-aware split of a dominant layer across idle workers — produces
+//!   results identical to the serial path at widths {1, 2, 4, 8};
+//! * parallel `RelIndex` packaging stores byte-identical encodings;
 //! * the fused dual update reproduces the composed tensor ops exactly.
 //!
 //! Pure host code — no PJRT artifacts required.
@@ -15,6 +19,7 @@
 use admm_nn::coordinator::Constraint;
 use admm_nn::projection::{self, ProjectionWorkspace};
 use admm_nn::quantize::{self, QuantConfig};
+use admm_nn::sparsity::RelIndex;
 use admm_nn::tensor::Tensor;
 use admm_nn::util::{Rng, ThreadPool};
 
@@ -111,6 +116,111 @@ fn parallel_constraint_projection_identical_to_serial() {
                 },
             );
             assert_eq!(serial, parallel, "threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn blocked_topk_select_matches_index_select_on_layer_mix() {
+    let mut mags = Vec::new();
+    let mut idx = Vec::new();
+    let (mut blocked, mut indexsel) = (Vec::new(), Vec::new());
+    for (li, v) in random_layers(21).iter().enumerate() {
+        for k in [0usize, 1, v.len() / 7, v.len() / 2, v.len()] {
+            projection::prune_topk_into(v, k, &mut mags, &mut blocked);
+            projection::prune_topk_into_indexsel(v, k, &mut idx, &mut indexsel);
+            assert_eq!(blocked, indexsel, "layer {li} k={k}");
+        }
+    }
+}
+
+#[test]
+fn size_aware_dominant_layer_split_identical_to_serial() {
+    // One dominant fc layer (big enough that its Levels projection
+    // splits elementwise across idle workers from inside the per-layer
+    // fan-out) among small siblings: results must be bit-identical to
+    // the serial path at every pool width.
+    let mut rng = Rng::new(31);
+    let mut layers: Vec<Vec<f32>> = vec![rng.normal_vec(300_000, 0.1)];
+    for n in [500usize, 3_000, 64, 1_200] {
+        layers.push(rng.normal_vec(n, 0.3));
+    }
+    let sizes: Vec<usize> = layers.iter().map(|l| l.len()).collect();
+    let configs: Vec<QuantConfig> = layers
+        .iter()
+        .map(|l| quantize::search_interval(l, 4))
+        .collect();
+    let constraint = Constraint::Levels { configs };
+    let serial: Vec<Vec<f32>> = layers
+        .iter()
+        .enumerate()
+        .map(|(li, l)| constraint.project(li, l))
+        .collect();
+    for threads in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(threads);
+        let mut wss: Vec<ProjectionWorkspace> = Vec::new();
+        let jobs: Vec<(usize, &Vec<f32>)> = layers.iter().enumerate().collect();
+        let parallel = pool.map_with_scratch_sized(
+            jobs,
+            &sizes,
+            &mut wss,
+            ProjectionWorkspace::new,
+            |_, (li, l), ws| {
+                constraint.project_with(li, l, ws);
+                ws.out.clone()
+            },
+        );
+        assert_eq!(serial, parallel, "threads={threads}");
+    }
+    // Production path: fan out over the *global* pool, so the dominant
+    // layer's nested Levels projection splits across that same pool's
+    // idle workers (on a foreign pool, as above, it runs inline).
+    let mut wss: Vec<ProjectionWorkspace> = Vec::new();
+    let jobs: Vec<(usize, &Vec<f32>)> = layers.iter().enumerate().collect();
+    let global = ThreadPool::global().map_with_scratch_sized(
+        jobs,
+        &sizes,
+        &mut wss,
+        ProjectionWorkspace::new,
+        |_, (li, l), ws| {
+            constraint.project_with(li, l, ws);
+            ws.out.clone()
+        },
+    );
+    assert_eq!(serial, global, "global pool");
+}
+
+#[test]
+fn parallel_relindex_packaging_identical_to_serial() {
+    // The CompressedModel packaging fan-out must store exactly the same
+    // encoding the serial loop produced, layer order preserved.
+    let mut rng = Rng::new(32);
+    let codes_per_layer: Vec<Vec<i32>> = (0..7)
+        .map(|i| {
+            let n = 5_000 + 11_000 * i;
+            let w = projection::prune_topk(&rng.normal_vec(n, 0.1), n / 15);
+            let c = quantize::search_interval(&w, 3);
+            quantize::encode_levels(&c.apply(&w), &c)
+        })
+        .collect();
+    let sizes: Vec<usize> = codes_per_layer.iter().map(|c| c.len()).collect();
+    let serial: Vec<RelIndex> = codes_per_layer
+        .iter()
+        .map(|c| RelIndex::encode(c, 4))
+        .collect();
+    for threads in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(threads);
+        let parallel = pool.map_with_scratch_sized(
+            codes_per_layer.iter().collect::<Vec<&Vec<i32>>>(),
+            &sizes,
+            &mut Vec::new(),
+            || (),
+            |_, c, _| RelIndex::encode(c, 4),
+        );
+        for (li, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+            assert_eq!(a.entries, b.entries, "threads={threads} layer={li}");
+            assert_eq!(a.dense_len, b.dense_len, "threads={threads} layer={li}");
+            assert_eq!(a.index_bits, b.index_bits);
         }
     }
 }

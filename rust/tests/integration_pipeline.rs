@@ -5,11 +5,14 @@
 //! structural invariants (exact sparsity, level-set membership, stored-
 //! model fidelity) rather than absolute accuracy. Skips without artifacts.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use admm_nn::baselines;
 use admm_nn::coordinator::{
-    pipeline, AdmmConfig, CompressedModel, PipelineConfig, TrainConfig, Trainer,
+    hw_aware, pipeline, AdmmConfig, CompressedModel, HwAwareConfig, PipelineConfig,
+    TrainConfig, Trainer,
 };
-use admm_nn::data;
+use admm_nn::data::{self, Batch, Dataset, Split};
 use admm_nn::runtime::{Runtime, TrainState};
 
 fn runtime() -> Option<Runtime> {
@@ -135,6 +138,92 @@ fn baselines_hit_their_sparsity_targets() {
     assert_eq!(quant.overall_prune_ratio, 1.0);
     // 2-bit quantization of a trained dense model keeps it above chance
     assert!(quant.accuracy > 0.2, "quant acc {}", quant.accuracy);
+}
+
+/// Counting `Dataset` wrapper: every probe of the Fig. 5 search pulls
+/// training/eval batches through here, so the total batch count is a
+/// direct measure of how much full-ADMM probe work the search ran.
+struct CountingDataset<'a> {
+    inner: &'a dyn Dataset,
+    batches: AtomicU64,
+}
+
+impl<'a> CountingDataset<'a> {
+    fn new(inner: &'a dyn Dataset) -> Self {
+        CountingDataset { inner, batches: AtomicU64::new(0) }
+    }
+
+    fn calls(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+}
+
+impl Dataset for CountingDataset<'_> {
+    fn input_shape(&self) -> Vec<usize> {
+        self.inner.input_shape()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.inner.n_classes()
+    }
+
+    fn batch(&self, split: Split, index: u64, batch: usize) -> Batch {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.inner.batch(split, index, batch)
+    }
+}
+
+#[test]
+fn hw_aware_search_never_reruns_an_accepted_top_probe() {
+    // Regression for the Fig. 5 round-1 loop: with a tolerance loose
+    // enough that the most aggressive config (s = 1.0) is accepted on
+    // the first probe, the old loop re-ran the *identical* full ADMM
+    // prune + retrain probe for every remaining search iteration. With
+    // the fix, a 4-probe budget must do exactly the same amount of
+    // probe work as a 1-probe budget — measured end-to-end through a
+    // counting Dataset wrapper — and never probe the same s twice.
+    let Some(rt) = runtime() else { return };
+    let sess = rt.model("mlp").unwrap();
+    let ds = data::for_input_shape(&sess.entry.input_shape);
+    let mut st = TrainState::init(&sess.entry, 4);
+    let mut trainer = Trainer::new(&sess, ds.as_ref());
+    trainer
+        .run(&mut st, &TrainConfig { steps: 40, ..Default::default() })
+        .unwrap();
+
+    let cfg = |probes: usize| HwAwareConfig {
+        acc_drop_tol: 1.0, // any accuracy is acceptable -> s = 1.0 accepted
+        admm: quick_admm(),
+        retrain_steps: 20,
+        search_probes: probes,
+        eval_batches: 2,
+        min_keep: 0.2,
+        ..Default::default()
+    };
+
+    let one = CountingDataset::new(ds.as_ref());
+    let r1 = hw_aware::hw_aware_compress(&sess, &one, &st, &cfg(1)).unwrap();
+    let budget_one = one.calls();
+
+    let four = CountingDataset::new(ds.as_ref());
+    let r4 = hw_aware::hw_aware_compress(&sess, &four, &st, &cfg(4)).unwrap();
+    let budget_four = four.calls();
+
+    // the accepted top probe short-circuits: a 4-probe budget must not
+    // pull a single extra batch compared to a 1-probe budget
+    assert_eq!(
+        budget_four, budget_one,
+        "4-probe budget re-ran probe work: {budget_four} vs {budget_one} batches"
+    );
+    assert_eq!(r4.probes.len(), 1, "probes: {:?}", r4.probes);
+    assert_eq!(r1.probes.len(), 1);
+    // and no aggressiveness value is ever probed twice
+    for (i, (s, ..)) in r4.probes.iter().enumerate() {
+        assert!(
+            !r4.probes[..i].iter().any(|(s2, ..)| s2 == s),
+            "duplicate probe at s={s}"
+        );
+    }
 }
 
 #[test]
