@@ -15,8 +15,10 @@
 verify:
 	cargo build --release && cargo test -q
 
+# Cargo runs bench binaries with CWD = the package root (rust/), so pin
+# the JSON output to the repo root where bench-report expects it.
 bench:
-	cargo bench --bench hot_paths -- --json
+	BENCH_JSON_DIR=$(CURDIR) cargo bench --bench hot_paths -- --json
 
 bench-report: bench
 	cargo run --release -p admm_nn --bin bench-report -- BENCH_hot_paths.json BENCH_baseline.json

@@ -122,8 +122,23 @@ fn main() {
                 black_box(ws.out.len());
             },
         );
+        // PR-3 parallel partition select vs the single-lane blocked
+        // select just measured (LeNet fc1 = 400K, AlexNet-fc1-ish = 1M;
+        // the 25K case sits below the split grain and stays ~1x). Width
+        // comes from the global pool (ADMM_NN_THREADS).
+        let par = suite.bench(
+            &format!("prune_topk n={n} k=5% (parallel blocked select)"),
+            3,
+            15,
+            || {
+                projection::prune_topk_into_par(
+                    pool, black_box(&v), k, &mut ws.mags, &mut ws.out);
+                black_box(ws.out.len());
+            },
+        );
         suite.speedup(&format!("prune_topk n={n}"), &alloc, &into);
         suite.speedup(&format!("prune_topk n={n} blocked vs index select"), &idxsel, &into);
+        suite.speedup(&format!("topk select n={n} parallel partition"), &into, &par);
     }
 
     let v400k = rng.normal_vec(400_000, 0.1);

@@ -19,12 +19,14 @@
 //! Subproblem 2 and the dual update are the host-side (L3) hot path:
 //! layers are independent, so the Z-updates fan out across the
 //! persistent [`ThreadPool`] with per-layer size hints (biggest layer
-//! first; its elementwise work may additionally split across idle
-//! workers — the pool's size-aware hybrid schedule), each lane reusing
+//! first; its intra-layer work — the elementwise level snap *and* the
+//! blocked top-k partition select — may additionally split across idle
+//! workers: the pool's size-aware hybrid schedule), each lane reusing
 //! a [`ProjectionWorkspace`] so the O(n)-sized buffers are
-//! allocation-free in steady state (the fan-out bookkeeping itself is
-//! O(layers) per iteration — job/result vectors and queue pushes —
-//! which is noise next to the per-weight work). Z is written in place,
+//! allocation-free in steady state (per-iteration bookkeeping — the
+//! O(layers) job/result vectors, queue pushes, and the blocked select's
+//! O(blocks · buckets) histograms — is small and independent of the
+//! per-weight O(n), so it is noise next to the per-weight work). Z is written in place,
 //! and U += W − Z is fused with the primal-residual accumulation
 //! ([`Tensor::dual_update`]). Per-layer arithmetic is untouched by the
 //! parallelism (no cross-layer reduction runs on the workers; the
@@ -58,17 +60,22 @@ impl Constraint {
     }
 
     /// Project `v` for layer `i` into `ws.out`, reusing the workspace's
-    /// scratch — the zero-alloc path the ADMM hot loop uses. Level
-    /// projections additionally split large layers across the pool
-    /// (bit-identical: pure elementwise); from inside a per-layer
-    /// fan-out the split uses only idle workers of the same pool, so
-    /// concurrency never exceeds the pool width.
+    /// scratch — the zero-alloc path the ADMM hot loop uses. Both arms
+    /// additionally split large layers across the pool (bit-identical:
+    /// pure elementwise for levels, the deterministic blocked partition
+    /// select for cardinality); from inside a per-layer fan-out the
+    /// split uses only idle workers of the same pool, so concurrency
+    /// never exceeds the pool width.
     pub fn project_with(&self, i: usize, v: &[f32], ws: &mut ProjectionWorkspace) {
         let ProjectionWorkspace { input: _, out, mags } = ws;
         match self {
-            Constraint::Cardinality { keep } => {
-                projection::prune_topk_into(v, keep[i], mags, out)
-            }
+            Constraint::Cardinality { keep } => projection::prune_topk_into_par(
+                ThreadPool::global(),
+                v,
+                keep[i],
+                mags,
+                out,
+            ),
             Constraint::Levels { configs } => projection::quant_nearest_into_par(
                 ThreadPool::global(),
                 v,

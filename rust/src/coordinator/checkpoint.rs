@@ -165,6 +165,14 @@ impl CompressedModel {
             .with_context(|| format!("writing {}", path.as_ref().display()))
     }
 
+    /// Load and **validate** a checkpoint. Every count is checked against
+    /// the remaining byte budget before allocating, and each layer's
+    /// entry stream must pass [`RelIndex::validate`] (gap within the
+    /// index width, codes within ±2^(bits−1), decode cursor inside
+    /// `dense_len`) — the load-side twin of `put_count`'s save-side
+    /// hardening. A corrupt or truncated file yields a
+    /// checkpoint-corrupt `Err`; it can never panic downstream in
+    /// `RelIndex::decode_into`.
     pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
         let data = std::fs::read(path.as_ref())
             .with_context(|| format!("reading {}", path.as_ref().display()))?;
@@ -173,39 +181,52 @@ impl CompressedModel {
             return Err(anyhow!("bad magic (not a CompressedModel file)"));
         }
         let model_name = get_str(&mut r)?;
-        let n_layers = get_u32(&mut r)? as usize;
+        // minimum serialized layer: name len + rank + bits + q +
+        // index_bits + dense_len + entry count = 7 u32 fields
+        let n_layers = get_count(&mut r, 28, "layer count")?;
         let mut layers = Vec::with_capacity(n_layers);
         for _ in 0..n_layers {
             let name = get_str(&mut r)?;
-            let ndim = get_u32(&mut r)? as usize;
+            let ndim = get_count(&mut r, 4, "shape rank")?;
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
                 shape.push(get_u32(&mut r)? as usize);
             }
             let bits = get_u32(&mut r)?;
+            if !(1..=16).contains(&bits) {
+                return Err(corrupt(&name, format!("weight bits {bits} out of 1..=16")));
+            }
             let q = get_f32(&mut r)?;
             let index_bits = get_u32(&mut r)?;
             let dense_len = get_u32(&mut r)? as usize;
-            let n_entries = get_u32(&mut r)? as usize;
+            // checked product: corrupt dims must not overflow-panic
+            let covered = shape.iter().try_fold(1usize, |a, &d| a.checked_mul(d));
+            if covered != Some(dense_len) {
+                return Err(corrupt(
+                    &name,
+                    format!("shape {shape:?} does not cover dense length {dense_len}"),
+                ));
+            }
+            let n_entries = get_count(&mut r, 8, "entry count")?;
             let mut entries = Vec::with_capacity(n_entries);
             for _ in 0..n_entries {
                 let gap = get_u32(&mut r)?;
                 let code = get_u32(&mut r)? as i32;
                 entries.push((gap, code));
             }
-            layers.push(CompressedLayer {
-                name,
-                shape,
-                bits,
-                q,
-                enc: RelIndex { index_bits, entries, dense_len },
-            });
+            let enc = RelIndex { index_bits, entries, dense_len };
+            let max_code = 1i32 << (bits - 1);
+            if let Err(why) = enc.validate(max_code) {
+                return Err(corrupt(&name, why));
+            }
+            layers.push(CompressedLayer { name, shape, bits, q, enc });
         }
-        let n_biases = get_u32(&mut r)? as usize;
+        // minimum serialized bias: name len + vector length = 2 u32s
+        let n_biases = get_count(&mut r, 8, "bias count")?;
         let mut biases = Vec::with_capacity(n_biases);
         for _ in 0..n_biases {
             let name = get_str(&mut r)?;
-            let n = get_u32(&mut r)? as usize;
+            let n = get_count(&mut r, 4, "bias length")?;
             let mut v = Vec::with_capacity(n);
             for _ in 0..n {
                 v.push(get_f32(&mut r)?);
@@ -242,10 +263,31 @@ fn put_str(w: &mut Vec<u8>, s: &str) {
     w.write_all(s.as_bytes()).unwrap();
 }
 
+fn corrupt(layer: &str, why: String) -> anyhow::Error {
+    anyhow!("corrupt checkpoint: layer {layer}: {why}")
+}
+
 fn get_u32(r: &mut &[u8]) -> crate::Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b).map_err(|_| anyhow!("truncated checkpoint"))?;
     Ok(u32::from_le_bytes(b))
+}
+
+/// Read a count field and check the remaining bytes can actually hold
+/// `count × elem_bytes` (the *minimum* serialized element size) — a
+/// corrupt count used to drive a multi-GB `Vec::with_capacity` before
+/// the truncation was even noticed; now any pre-allocation is bounded
+/// by a small multiple of the actual file size.
+fn get_count(r: &mut &[u8], elem_bytes: usize, what: &str) -> crate::Result<usize> {
+    let n = get_u32(r)? as usize;
+    if n.saturating_mul(elem_bytes) > r.len() {
+        return Err(anyhow!(
+            "corrupt checkpoint: {what} {n} needs {} bytes but only {} remain",
+            n.saturating_mul(elem_bytes),
+            r.len()
+        ));
+    }
+    Ok(n)
 }
 
 fn get_f32(r: &mut &[u8]) -> crate::Result<f32> {
@@ -255,7 +297,7 @@ fn get_f32(r: &mut &[u8]) -> crate::Result<f32> {
 }
 
 fn get_str(r: &mut &[u8]) -> crate::Result<String> {
-    let n = get_u32(r)? as usize;
+    let n = get_count(r, 1, "string length")?;
     let mut b = vec![0u8; n];
     r.read_exact(&mut b).map_err(|_| anyhow!("truncated checkpoint"))?;
     String::from_utf8(b).map_err(|_| anyhow!("bad utf8 in checkpoint"))
@@ -385,5 +427,102 @@ mod tests {
         let path = dir.join("garbage.bin");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(CompressedModel::load(&path).is_err());
+    }
+
+    #[test]
+    fn load_rejects_every_truncation() {
+        // A checkpoint cut off at ANY byte boundary must return Err —
+        // never panic, never parse.
+        let m = sample_model();
+        let dir = std::env::temp_dir().join("admm_nn_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let full_path = dir.join("trunc_src.bin");
+        m.save(&full_path).unwrap();
+        let bytes = std::fs::read(&full_path).unwrap();
+        let path = dir.join("trunc.bin");
+        for len in 0..bytes.len() {
+            std::fs::write(&path, &bytes[..len]).unwrap();
+            assert!(
+                CompressedModel::load(&path).is_err(),
+                "truncation at {len}/{} parsed",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn load_survives_bit_flips_without_panicking() {
+        // Flip bits all over a valid checkpoint: every load must return
+        // (Ok or Err — no panic, no unbounded allocation), and anything
+        // that loads Ok must also decode without panicking (the
+        // validation guarantee behind RelIndex::decode_into).
+        let m = sample_model();
+        let dir = std::env::temp_dir().join("admm_nn_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let full_path = dir.join("flip_src.bin");
+        m.save(&full_path).unwrap();
+        let bytes = std::fs::read(&full_path).unwrap();
+        let path = dir.join("flip.bin");
+        for pos in 0..bytes.len() {
+            for bit in [0u8, 4, 7] {
+                let mut corrupt = bytes.clone();
+                corrupt[pos] ^= 1 << bit;
+                std::fs::write(&path, &corrupt).unwrap();
+                if let Ok(loaded) = CompressedModel::load(&path) {
+                    for l in &loaded.layers {
+                        let _ = l.to_tensor();
+                        let _ = l.nnz();
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn load_rejects_corrupt_entry_streams() {
+        // Streams that the binary format can represent but encode()
+        // never produces: each must be refused with a corrupt-checkpoint
+        // error instead of panicking later in decode.
+        let dir = std::env::temp_dir().join("admm_nn_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad_entries.bin");
+        let cases: Vec<(&str, Vec<(u32, i32)>)> = vec![
+            ("cursor past dense_len", vec![(10, 1); 8]),
+            ("oversized gap", vec![(200, 1)]),
+            ("code 0 real entry", vec![(0, 0)]),
+            ("code out of range", vec![(0, 99)]),
+            ("pad with nonzero code", vec![(15, 3)]),
+            ("too many entries", (0..80).map(|_| (1u32, 1i32)).collect()),
+        ];
+        for (what, entries) in cases {
+            let mut m = sample_model();
+            m.layers[0] = CompressedLayer {
+                name: "bad".into(),
+                shape: vec![80],
+                bits: 3,
+                q: 0.5,
+                enc: RelIndex { index_bits: 4, entries, dense_len: 80 },
+            };
+            m.save(&path).unwrap();
+            let err = CompressedModel::load(&path).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("corrupt checkpoint"), "{what}: {msg}");
+        }
+        // index_bits outside 1..=16
+        let mut m = sample_model();
+        m.layers[0].enc = RelIndex { index_bits: 0, entries: vec![], dense_len: 400 };
+        m.layers[0].shape = vec![400];
+        m.save(&path).unwrap();
+        assert!(CompressedModel::load(&path).is_err(), "index_bits 0");
+        // bits outside 1..=16
+        let mut m = sample_model();
+        m.layers[0].bits = 40;
+        m.save(&path).unwrap();
+        assert!(CompressedModel::load(&path).is_err(), "bits 40");
+        // shape product vs dense_len mismatch
+        let mut m = sample_model();
+        m.layers[0].shape = vec![7, 3];
+        m.save(&path).unwrap();
+        assert!(CompressedModel::load(&path).is_err(), "shape mismatch");
     }
 }

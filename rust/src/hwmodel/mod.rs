@@ -73,10 +73,28 @@ impl Default for HwConfig {
     }
 }
 
+/// Speedup floor for degenerate designs (no PE area left after SRAM):
+/// finite so [`HwConfig::delay`] and [`network_speedup`] stay finite —
+/// a zero speedup used to send `delay()` to `inf` and silently zero the
+/// Table 9 "overall" number. 1e-6 keeps `ops / speedup` well inside
+/// f64 range for any realistic op count.
+pub const DEGENERATE_SPEEDUP: f64 = 1e-6;
+
 impl HwConfig {
     /// PE area fraction of the dense baseline.
     pub fn pe_frac(&self) -> f64 {
         1.0 - self.weight_sram_frac - self.feature_sram_frac
+    }
+
+    /// True when the fixed-area comparison degenerates at keep-ratio α
+    /// and [`HwConfig::speedup`] reports the [`DEGENERATE_SPEEDUP`]
+    /// floor — typically because the stored weights + indices eat the
+    /// whole die (`pe_ratio` hits its 0 floor), but also for designs
+    /// whose modeled throughput underflows the floor. Defined as
+    /// "speedup is the floor", so the signal and the reported number
+    /// can never disagree.
+    pub fn is_degenerate(&self, alpha: f64) -> bool {
+        self.speedup(alpha) <= DEGENERATE_SPEEDUP
     }
 
     /// PE-count ratio N(α)/N₀ of the pruned variant under the fixed-area
@@ -111,13 +129,19 @@ impl HwConfig {
             * self.utilization(alpha)
             / alpha;
         if raw <= 0.0 {
-            return 0.0;
+            // Degenerate design: indices ate the entire die and no PE
+            // fits. Report the finite floor (never 0) so delay() and
+            // the network aggregation stay finite; is_degenerate()
+            // exposes the condition explicitly.
+            return DEGENERATE_SPEEDUP;
         }
         // Amdahl: delay = α-part / raw + fixed non-MAC part.
-        1.0 / (1.0 / raw + self.fixed_overhead)
+        (1.0 / (1.0 / raw + self.fixed_overhead)).max(DEGENERATE_SPEEDUP)
     }
 
-    /// Relative delay (dense = 1) for a layer at keep-ratio α.
+    /// Relative delay (dense = 1) for a layer at keep-ratio α. Finite
+    /// for every valid α: degenerate designs hit the
+    /// [`DEGENERATE_SPEEDUP`] floor instead of dividing by zero.
     pub fn delay(&self, alpha: f64) -> f64 {
         1.0 / self.speedup(alpha)
     }
@@ -168,7 +192,10 @@ pub struct NetworkSpeedup {
 }
 
 /// Evaluate a keep-ratio profile over a set of layers with op weights.
-/// `layers` = (name, ops, keep_ratio).
+/// `layers` = (name, ops, keep_ratio). The overall number is always
+/// finite: per-layer speedups are floored at [`DEGENERATE_SPEEDUP`]
+/// (never 0, so no `inf` delay can poison the sum), and an empty or
+/// zero-op layer set reports 1.0 instead of 0/0 = NaN.
 pub fn network_speedup(cfg: &HwConfig, layers: &[(String, u64, f64)]) -> NetworkSpeedup {
     let mut dense_time = 0.0;
     let mut sparse_time = 0.0;
@@ -180,7 +207,8 @@ pub fn network_speedup(cfg: &HwConfig, layers: &[(String, u64, f64)]) -> Network
         sparse_time += t_dense / s;
         rows.push((name.clone(), *alpha, s));
     }
-    NetworkSpeedup { layers: rows, overall: dense_time / sparse_time }
+    let overall = if sparse_time > 0.0 { dense_time / sparse_time } else { 1.0 };
+    NetworkSpeedup { layers: rows, overall }
 }
 
 #[cfg(test)]
@@ -287,6 +315,52 @@ mod tests {
             let result = network_speedup(&cfg, &layers);
             assert!(result.overall < 1.0,
                     "{} overall={}", profile.name, result.overall);
+        }
+    }
+
+    #[test]
+    fn degenerate_index_heavy_config_stays_finite() {
+        // Wide indices at moderate density: stored weight+index bits
+        // exceed the die, pe_ratio floors at 0 — speedup used to return
+        // exactly 0.0, sending delay() to inf and the Table 9 overall
+        // through an inf sum with no signal.
+        let cfg = HwConfig { index_bits: 48, ..HwConfig::default() };
+        let alpha = 0.5; // 0.75·0.5·(16+48)/16 = 1.5 > available area
+        assert!(cfg.pe_ratio(alpha) <= 0.0);
+        assert!(cfg.is_degenerate(alpha));
+        assert!(!cfg.is_degenerate(0.05), "sparse enough designs still fit");
+        let s = cfg.speedup(alpha);
+        assert_eq!(s, DEGENERATE_SPEEDUP);
+        assert!(cfg.delay(alpha).is_finite());
+        // the network aggregate stays finite and positive even with a
+        // degenerate layer in the mix (AlexNet-conv1-scale op counts)
+        let layers = vec![
+            ("conv1".to_string(), 105_415_200u64, alpha),
+            ("conv2".to_string(), 223_948_800u64, 0.05),
+        ];
+        let r = network_speedup(&cfg, &layers);
+        assert!(
+            r.overall.is_finite() && r.overall > 0.0,
+            "overall={}",
+            r.overall
+        );
+        assert!(r.layers.iter().all(|(_, _, s)| s.is_finite() && *s > 0.0));
+        // empty / zero-op layer sets: 0/0 used to be NaN
+        let r = network_speedup(&cfg, &[]);
+        assert!(r.overall.is_finite(), "empty overall={}", r.overall);
+        let r = network_speedup(&cfg, &[("z".to_string(), 0u64, 0.5)]);
+        assert!(r.overall.is_finite(), "zero-op overall={}", r.overall);
+    }
+
+    #[test]
+    fn default_config_never_hits_the_floor() {
+        // The calibrated Fig. 4 curve is unaffected by the degenerate
+        // floor: no α in (0,1] flags as degenerate for the defaults.
+        let cfg = HwConfig::default();
+        for i in 1..=100 {
+            let a = i as f64 / 100.0;
+            assert!(!cfg.is_degenerate(a), "alpha={a}");
+            assert!(cfg.speedup(a) > DEGENERATE_SPEEDUP, "alpha={a}");
         }
     }
 

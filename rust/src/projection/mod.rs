@@ -16,7 +16,11 @@
 //! into caller-owned buffers; [`ProjectionWorkspace`] bundles the scratch
 //! the ADMM hot loop reuses per worker thread. The `_into` variants are
 //! bit-identical to the allocating ones (property-tested) — same
-//! comparator, same elementwise formula, only the storage differs.
+//! comparator, same elementwise formula, only the storage differs. Large
+//! layers additionally split across the thread pool:
+//! [`quant_nearest_into_par`] (elementwise) and [`prune_topk_into_par`]
+//! (the deterministic blocked partition select), both bit-identical to
+//! their serial counterparts at any pool width.
 
 /// Keep the `k` largest-|v| entries of `v`, zeroing the rest.
 ///
@@ -75,6 +79,146 @@ pub fn prune_topk_into(v: &[f32], k: usize, mags: &mut Vec<f32>, out: &mut Vec<f
             ties_left -= 1;
         }
     }
+}
+
+/// Radix rounds of the parallel threshold search: (shift, bucket count)
+/// over the magnitude bit pattern, high bits first (11 + 11 + 10 = 32).
+const PAR_SELECT_ROUNDS: [(u32, usize); 3] = [(21, 2048), (10, 2048), (0, 1024)];
+
+/// Any magnitude bit pattern above +inf's is a NaN payload.
+const NAN_KEY_FLOOR: u32 = 0x7F80_0000;
+
+/// [`prune_topk_into`] with intra-layer parallelism: the deterministic
+/// blocked partition select. `v` splits into contiguous blocks across
+/// pool lanes (partition pinned once via [`ThreadPool::plan_split`] —
+/// from inside a fan-out of the *same* pool only idle workers join, per
+/// the pool's nested-fan-out contract). Two passes:
+///
+/// 1. **Threshold search** — the global k-th largest magnitude is found
+///    by a radix search over the |v| bit pattern (non-negative floats
+///    order like their bits): each round histograms one digit per block
+///    in parallel, the per-block counts are merged serially in
+///    O(blocks · buckets), and the digit holding the k-th rank is
+///    fixed. Three rounds pin the exact 32-bit pattern; along the way
+///    each block accumulates its `count(|v| > t)` and the final round
+///    yields its `count(|v| == t)` — the per-block counts the fill pass
+///    needs.
+/// 2. **Fill** — each block writes its output slice independently
+///    ([`ThreadPool::par_chunk_zip`]); threshold ties get per-block
+///    quotas assigned by a serial prefix sum over blocks in index
+///    order, so ties still keep the earliest indices globally.
+///
+/// The threshold is the *exact* k-th largest magnitude — the same value
+/// `select_nth` hands the serial path — and the tie rule is identical,
+/// so the result is bit-identical to [`prune_topk_into`] at any pool
+/// width and any block partition (property-tested at widths {1,2,4,8},
+/// tie storms included). NaN inputs make the radix ranks meaningless,
+/// so any NaN (detected during round 1) falls back to the serial path —
+/// NaN degradation is *identical* by construction. This is what
+/// `Constraint::project_with` runs for cardinality projections.
+///
+/// Unlike the strictly zero-alloc serial `_into` path, the parallel
+/// select allocates small per-call bookkeeping: one histogram per block
+/// per round (O(blocks · buckets) ≈ tens of KB, independent of `n`)
+/// plus the per-block count/quota vectors — noise next to the O(n)
+/// passes it parallelizes, and nothing O(n) is ever allocated.
+pub fn prune_topk_into_par(
+    pool: &crate::util::ThreadPool,
+    v: &[f32],
+    k: usize,
+    mags: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) {
+    let n = v.len();
+    let blocks = pool.plan_split(n);
+    if blocks <= 1 || k == 0 || k >= n {
+        return prune_topk_into(v, k, mags, out);
+    }
+
+    // Pass 1: radix threshold search. `fixed` bits of the k-th largest
+    // key are known after each round; a key participates in a round iff
+    // its fixed prefix matches.
+    let mut prefix = 0u32;
+    let mut fixed = 0u32;
+    let mut remaining = k; // rank of the target within the prefix class
+    let mut above = vec![0usize; blocks]; // per-block count(|v| > thresh)
+    let mut eq = vec![0usize; blocks]; // per-block count(|v| == thresh)
+    for (shift, buckets) in PAR_SELECT_ROUNDS {
+        let per_block: Vec<(Vec<u32>, bool)> = pool.par_chunk_map(n, blocks, |_, range| {
+            let mut hist = vec![0u32; buckets];
+            let mut nan = false;
+            for &x in &v[range] {
+                let key = x.abs().to_bits();
+                // NaN is always caught in round 1 (which scans every
+                // key, `fixed == 0`); later rounds skip the check.
+                if fixed == 0 {
+                    nan |= key > NAN_KEY_FLOOR;
+                    hist[(key >> shift) as usize & (buckets - 1)] += 1;
+                } else if key >> (32 - fixed) == prefix {
+                    hist[(key >> shift) as usize & (buckets - 1)] += 1;
+                }
+            }
+            (hist, nan)
+        });
+        if per_block.iter().any(|(_, nan)| *nan) {
+            return prune_topk_into(v, k, mags, out);
+        }
+        // Serial merge: walk buckets from the top until the cumulative
+        // count reaches the target rank.
+        let mut chosen = 0usize;
+        let mut above_round = 0usize;
+        for bkt in (0..buckets).rev() {
+            let c: usize = per_block.iter().map(|(h, _)| h[bkt] as usize).sum();
+            if above_round + c >= remaining {
+                chosen = bkt;
+                break;
+            }
+            above_round += c;
+        }
+        remaining -= above_round;
+        for (b, (hist, _)) in per_block.iter().enumerate() {
+            above[b] += hist[chosen + 1..].iter().map(|&c| c as usize).sum::<usize>();
+            eq[b] = hist[chosen] as usize;
+        }
+        fixed += buckets.trailing_zeros();
+        prefix = (prefix << buckets.trailing_zeros()) | chosen as u32;
+    }
+    let thresh = f32::from_bits(prefix);
+
+    // Tie quotas: the k − n_above threshold slots go to the earliest
+    // blocks first (serial prefix sum), earliest index within a block.
+    let n_above: usize = above.iter().sum();
+    let mut ties_left = k.saturating_sub(n_above);
+    let quota: Vec<usize> = eq
+        .iter()
+        .map(|&e| {
+            let t = ties_left.min(e);
+            ties_left -= t;
+            t
+        })
+        .collect();
+
+    // Pass 2: each block fills its slice with its tie quota. Every
+    // element is written (the else arm stores an explicit 0.0), so a
+    // reused buffer only needs resizing, not a serial pre-zeroing pass.
+    if out.len() != n {
+        out.clear();
+        out.resize(n, 0.0);
+    }
+    pool.par_chunk_zip(v, out, blocks, |b, src, dst| {
+        let mut ties = quota[b];
+        for (d, &x) in dst.iter_mut().zip(src) {
+            let m = x.abs();
+            *d = if m > thresh {
+                x
+            } else if m == thresh && ties > 0 {
+                ties -= 1;
+                x
+            } else {
+                0.0
+            };
+        }
+    });
 }
 
 /// The PR-1 index-indirect selection (`select_nth_unstable` over an
@@ -362,6 +506,126 @@ mod tests {
         prune_topk_into(&v, 33, &mut mags, &mut a);
         prune_topk_into_indexsel(&v, 33, &mut idx, &mut b);
         assert_eq!(a, b, "signed ties");
+    }
+
+    /// Bitwise equality that treats NaN as equal to itself (plain
+    /// `assert_eq!` on f32 rejects NaN == NaN).
+    fn assert_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+        assert_eq!(a.len(), b.len(), "{ctx}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: index {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn parallel_select_bit_identical_at_all_widths() {
+        let mut rng = Rng::new(26);
+        let mut mags = Vec::new();
+        let (mut serial, mut par) = (Vec::new(), Vec::new());
+        // n = 200_000 > MIN_CHUNK so the split is real; coarse rounding
+        // makes exact-magnitude ties common across block boundaries.
+        let v: Vec<f32> = rng
+            .normal_vec(200_000, 1.0)
+            .iter()
+            .map(|&x| (x * 8.0).round() / 8.0)
+            .collect();
+        let n = v.len();
+        for threads in [1usize, 2, 4, 8] {
+            let pool = crate::util::ThreadPool::new(threads);
+            for k in [0usize, 1, 37, n / 20, n / 2, n - 1, n] {
+                prune_topk_into(&v, k, &mut mags, &mut serial);
+                prune_topk_into_par(&pool, &v, k, &mut mags, &mut par);
+                assert_eq!(serial, par, "threads={threads} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_select_tie_storms() {
+        // Constant input: every entry ties at the threshold, so the tie
+        // quotas carry the entire selection — earliest indices must win
+        // globally, across block boundaries.
+        let n = 100_000;
+        let v = vec![0.5f32; n];
+        let mut mags = Vec::new();
+        let (mut serial, mut par) = (Vec::new(), Vec::new());
+        for threads in [2usize, 4, 8] {
+            let pool = crate::util::ThreadPool::new(threads);
+            for k in [1usize, n / 3, n / 2 + 1, n - 1] {
+                prune_topk_into(&v, k, &mut mags, &mut serial);
+                prune_topk_into_par(&pool, &v, k, &mut mags, &mut par);
+                assert_eq!(serial, par, "constant ties threads={threads} k={k}");
+                assert_eq!(par.iter().filter(|&&x| x != 0.0).count(), k);
+                // earliest-index rule: kept entries form a prefix
+                assert!(par[..k].iter().all(|&x| x == 0.5), "k={k}");
+            }
+        }
+        // signed ties and sign-flipped constants
+        let v: Vec<f32> = (0..80_000)
+            .map(|i| if i % 2 == 0 { 0.25 } else { -0.25 })
+            .collect();
+        let pool = crate::util::ThreadPool::new(4);
+        prune_topk_into(&v, 1234, &mut mags, &mut serial);
+        prune_topk_into_par(&pool, &v, 1234, &mut mags, &mut par);
+        assert_eq!(serial, par, "signed ties");
+    }
+
+    #[test]
+    fn parallel_select_nan_degrades_identically() {
+        // NaN input makes magnitude ranks meaningless; the parallel
+        // path must detect it and produce exactly what the serial path
+        // produces (it falls back to the same code).
+        let mut rng = Rng::new(27);
+        let mut v = rng.normal_vec(150_000, 1.0);
+        v[13] = f32::NAN;
+        v[77_777] = f32::NAN;
+        v[149_999] = -f32::NAN;
+        let mut mags = Vec::new();
+        let (mut serial, mut par) = (Vec::new(), Vec::new());
+        for threads in [1usize, 2, 4, 8] {
+            let pool = crate::util::ThreadPool::new(threads);
+            for k in [1usize, 5000, 149_999] {
+                prune_topk_into(&v, k, &mut mags, &mut serial);
+                prune_topk_into_par(&pool, &v, k, &mut mags, &mut par);
+                assert_bits_eq(&serial, &par, &format!("threads={threads} k={k}"));
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_select_special_values() {
+        // infinities, zeros, negative zeros, subnormals
+        let mut rng = Rng::new(28);
+        let mut v = rng.normal_vec(120_000, 0.5);
+        v[0] = f32::INFINITY;
+        v[1] = f32::NEG_INFINITY;
+        v[2] = -0.0;
+        v[3] = 0.0;
+        v[4] = f32::MIN_POSITIVE / 2.0; // subnormal
+        for i in (100..200).step_by(3) {
+            v[i] = 0.0;
+        }
+        let mut mags = Vec::new();
+        let (mut serial, mut par) = (Vec::new(), Vec::new());
+        let pool = crate::util::ThreadPool::new(4);
+        for k in [1usize, 2, 3, 60_000, 119_999] {
+            prune_topk_into(&v, k, &mut mags, &mut serial);
+            prune_topk_into_par(&pool, &v, k, &mut mags, &mut par);
+            assert_bits_eq(&serial, &par, &format!("k={k}"));
+        }
+    }
+
+    #[test]
+    fn parallel_select_small_input_runs_serial() {
+        // below the split grain the parallel entry point must take the
+        // serial path (and still be correct)
+        let mut rng = Rng::new(29);
+        let v = rng.normal_vec(500, 1.0);
+        let pool = crate::util::ThreadPool::new(8);
+        let mut mags = Vec::new();
+        let mut out = Vec::new();
+        prune_topk_into_par(&pool, &v, 100, &mut mags, &mut out);
+        assert_eq!(out, prune_topk(&v, 100));
     }
 
     #[test]

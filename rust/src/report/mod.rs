@@ -100,7 +100,11 @@ impl MeasuredRun {
                 .get("bits")?
                 .as_arr()?
                 .iter()
-                .map(|b| Ok(b.as_usize()? as u32))
+                .map(|b| {
+                    let n = b.as_usize()?;
+                    u32::try_from(n)
+                        .map_err(|_| anyhow::anyhow!("bits value {n} exceeds u32"))
+                })
                 .collect::<crate::Result<Vec<_>>>()?,
             data_bytes: j.get("data_bytes")?.as_f64()?,
             model_bytes: j.get("model_bytes")?.as_f64()?,
@@ -116,26 +120,55 @@ impl MeasuredRun {
         Ok(())
     }
 
+    /// Load every readable run file in `dir`, warning on stderr about
+    /// each `.json` that fails to read or parse — a malformed run file
+    /// used to vanish from Tables 1–6 with no signal at all. A missing
+    /// `dir` is the normal "no measured runs yet" case and stays silent.
     pub fn load_all(dir: &std::path::Path) -> Vec<MeasuredRun> {
+        let (runs, errors) = Self::load_all_report(dir);
+        for (path, why) in &errors {
+            eprintln!(
+                "warning: skipping measured run {}: {why} \
+                 (its rows are missing from the tables)",
+                path.display()
+            );
+        }
+        runs
+    }
+
+    /// [`MeasuredRun::load_all`] with the per-file failures returned
+    /// instead of printed, so callers (and tests) can inspect them.
+    pub fn load_all_report(
+        dir: &std::path::Path,
+    ) -> (Vec<MeasuredRun>, Vec<(std::path::PathBuf, String)>) {
         let mut out = Vec::new();
+        let mut errors = Vec::new();
         if let Ok(rd) = std::fs::read_dir(dir) {
             for e in rd.flatten() {
-                if e.path().extension().is_some_and(|x| x == "json") {
-                    if let Ok(text) = std::fs::read_to_string(e.path()) {
-                        if let Ok(j) = crate::util::json::parse(&text) {
-                            if let Ok(run) = MeasuredRun::from_json(&j) {
-                                out.push(run);
-                            }
-                        }
-                    }
+                let path = e.path();
+                if !path.extension().is_some_and(|x| x == "json") {
+                    continue;
+                }
+                let parsed = std::fs::read_to_string(&path)
+                    .map_err(|e| format!("cannot read: {e}"))
+                    .and_then(|text| {
+                        crate::util::json::parse(&text)
+                            .map_err(|e| format!("invalid JSON: {e}"))
+                    })
+                    .and_then(|j| {
+                        MeasuredRun::from_json(&j)
+                            .map_err(|e| format!("not a MeasuredRun: {e}"))
+                    });
+                match parsed {
+                    Ok(run) => out.push(run),
+                    Err(why) => errors.push((path, why)),
                 }
             }
         }
         out.sort_by(|a: &MeasuredRun, b: &MeasuredRun| {
-            (a.model.clone(), a.method.clone())
-                .cmp(&(b.model.clone(), b.method.clone()))
+            (&a.model, &a.method).cmp(&(&b.model, &b.method))
         });
-        out
+        (out, errors)
     }
 }
 
@@ -629,5 +662,61 @@ mod tests {
         assert_eq!(all[0].model, "lenet5");
         let t = table_pruning("lenet5", &all);
         assert!(t.contains("measured"));
+
+        // bits must roundtrip exactly — and refuse u32 overflow instead
+        // of truncating (`as u32` used to wrap huge values silently)
+        assert_eq!(all[0].bits, vec![3, 3, 2, 2]);
+        let mut j = run.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert(
+                "bits".to_string(),
+                Json::Arr(vec![Json::num(5_000_000_000.0)]),
+            );
+        }
+        let err = MeasuredRun::from_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds u32"), "{err:#}");
+    }
+
+    #[test]
+    fn load_all_diagnoses_junk_files_instead_of_hiding_them() {
+        let dir = std::env::temp_dir().join("admm_nn_results_junk_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let run = MeasuredRun {
+            model: "alexnet_proxy".into(),
+            method: "admm prune".into(),
+            dense_accuracy: 0.57,
+            accuracy: 0.56,
+            prune_ratio: 24.0,
+            layer_keep: vec![],
+            bits: vec![5],
+            data_bytes: 1.0,
+            model_bytes: 2.0,
+            wall_s: 1.0,
+        };
+        run.save(&dir).unwrap();
+        // junk that used to vanish silently from the tables
+        std::fs::write(dir.join("junk.json"), "{ not json at all").unwrap();
+        std::fs::write(dir.join("wrong_shape.json"), r#"{"model": "x"}"#).unwrap();
+        std::fs::write(dir.join("ignored.txt"), "not a run file").unwrap();
+
+        let (runs, errors) = MeasuredRun::load_all_report(&dir);
+        assert_eq!(runs.len(), 1, "the valid run still loads");
+        assert_eq!(runs[0].model, "alexnet_proxy");
+        assert_eq!(errors.len(), 2, "both junk .json files are reported");
+        let paths: Vec<String> = errors
+            .iter()
+            .map(|(p, _)| p.file_name().unwrap().to_string_lossy().into_owned())
+            .collect();
+        assert!(paths.contains(&"junk.json".to_string()), "{paths:?}");
+        assert!(paths.contains(&"wrong_shape.json".to_string()), "{paths:?}");
+        for (_, why) in &errors {
+            assert!(!why.is_empty());
+        }
+        // the printing wrapper returns the same runs
+        assert_eq!(MeasuredRun::load_all(&dir).len(), 1);
+        // a missing dir stays the silent "no runs yet" case
+        let (runs, errors) =
+            MeasuredRun::load_all_report(&dir.join("does_not_exist"));
+        assert!(runs.is_empty() && errors.is_empty());
     }
 }

@@ -93,6 +93,79 @@ impl RelIndex {
         }
     }
 
+    /// Check the structural invariants [`RelIndex::encode`] guarantees —
+    /// the load-side gate for entry streams read from untrusted bytes
+    /// (a corrupt checkpoint used to panic out-of-bounds inside
+    /// [`RelIndex::decode_into`] instead). Verified:
+    ///
+    /// * `index_bits` in 1..=16 (the constructor's range);
+    /// * every entry is either a padding slot (gap = 2ⁿ−1, code 0) or a
+    ///   real weight (gap < 2ⁿ−1, code ≠ 0, |code| ≤ `max_code`);
+    /// * the cumulative decode position never leaves `0..dense_len`, and
+    ///   `dense_len` is reachable from the stream's end (< 2ⁿ−1 trailing
+    ///   positions — encode pads longer runs), so decode-side buffers
+    ///   stay proportional to the stored data.
+    ///
+    /// `max_code` is the largest legal level magnitude (2^(bits−1) for a
+    /// `bits`-wide quantizer). Returns a description of the first
+    /// violation, so callers can wrap it in their own error type.
+    pub fn validate(&self, max_code: i32) -> Result<(), String> {
+        if !(1..=16).contains(&self.index_bits) {
+            return Err(format!("index_bits {} out of 1..=16", self.index_bits));
+        }
+        let max_gap = (1u32 << self.index_bits) - 1;
+        let mut pos = 0usize;
+        for (i, &(gap, code)) in self.entries.iter().enumerate() {
+            if gap > max_gap {
+                return Err(format!("entry {i}: gap {gap} exceeds max gap {max_gap}"));
+            }
+            pos += gap as usize;
+            if gap == max_gap && code == 0 {
+                continue; // padding slot occupies the position itself
+            }
+            if gap == max_gap {
+                return Err(format!(
+                    "entry {i}: gap {max_gap} with nonzero code {code} \
+                     (padding slots must carry code 0)"
+                ));
+            }
+            if code == 0 {
+                return Err(format!("entry {i}: stored weight with code 0"));
+            }
+            if code.unsigned_abs() > max_code.unsigned_abs() {
+                return Err(format!(
+                    "entry {i}: code {code} outside ±{max_code}"
+                ));
+            }
+            if pos >= self.dense_len {
+                return Err(format!(
+                    "entry {i}: position {pos} past dense length {}",
+                    self.dense_len
+                ));
+            }
+            pos += 1;
+        }
+        if pos > self.dense_len {
+            return Err(format!(
+                "trailing padding runs to position {pos}, past dense length {}",
+                self.dense_len
+            ));
+        }
+        // encode() never leaves >= max_gap trailing zeros unflushed (a
+        // full run always emits a pad), so dense_len is bounded by the
+        // entry stream — without this, a crafted dense_len still drives
+        // a decode-side allocation far beyond the stored data.
+        if self.dense_len > pos + max_gap as usize - 1 {
+            return Err(format!(
+                "dense length {} unreachable from the entry stream (ends at {pos}, \
+                 max trailing run {})",
+                self.dense_len,
+                max_gap - 1
+            ));
+        }
+        Ok(())
+    }
+
     /// Stored entries (incl. padding zeros) — what SRAM must hold.
     pub fn stored_entries(&self) -> usize {
         self.entries.len()
@@ -332,6 +405,82 @@ mod tests {
             assert_eq!(enc.dense_len, fresh.dense_len);
             enc.decode_into(&mut decoded);
             assert_eq!(decoded, codes);
+        }
+    }
+
+    #[test]
+    fn validate_accepts_every_encoded_stream() {
+        // Anything encode() produces passes the load-side validation —
+        // across densities, index widths, and degenerate inputs.
+        for keep in [0.9, 0.5, 0.1, 0.01, 0.0] {
+            for bits in [2u32, 4, 8] {
+                let codes = random_codes(20_000, keep, 17);
+                let enc = RelIndex::encode(&codes, bits);
+                enc.validate(4).unwrap_or_else(|why| {
+                    panic!("keep={keep} bits={bits}: {why}")
+                });
+            }
+        }
+        // trailing padding that lands exactly on dense_len
+        let enc = RelIndex::encode(&vec![0i32; 15], 4);
+        enc.validate(4).unwrap();
+        let mut codes = vec![0i32; 100];
+        codes[99] = 3;
+        RelIndex::encode(&codes, 4).validate(4).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_corrupt_streams() {
+        let ok = RelIndex { index_bits: 4, entries: vec![(3, 2)], dense_len: 10 };
+        ok.validate(4).unwrap();
+        let cases: Vec<(&str, RelIndex)> = vec![
+            (
+                "index_bits 0",
+                RelIndex { index_bits: 0, entries: vec![], dense_len: 4 },
+            ),
+            (
+                "index_bits 17",
+                RelIndex { index_bits: 17, entries: vec![], dense_len: 4 },
+            ),
+            (
+                "gap over width",
+                RelIndex { index_bits: 4, entries: vec![(16, 1)], dense_len: 100 },
+            ),
+            (
+                "pad carrying a code",
+                RelIndex { index_bits: 4, entries: vec![(15, 2)], dense_len: 100 },
+            ),
+            (
+                "real entry with code 0",
+                RelIndex { index_bits: 4, entries: vec![(1, 0)], dense_len: 100 },
+            ),
+            (
+                "code above max",
+                RelIndex { index_bits: 4, entries: vec![(0, 5)], dense_len: 100 },
+            ),
+            (
+                "code below -max",
+                RelIndex { index_bits: 4, entries: vec![(0, -5)], dense_len: 100 },
+            ),
+            (
+                "code i32::MIN",
+                RelIndex { index_bits: 4, entries: vec![(0, i32::MIN)], dense_len: 100 },
+            ),
+            (
+                "write past dense_len",
+                RelIndex { index_bits: 4, entries: vec![(9, 1)], dense_len: 9 },
+            ),
+            (
+                "padding runs past dense_len",
+                RelIndex { index_bits: 4, entries: vec![(15, 0), (15, 0)], dense_len: 16 },
+            ),
+            (
+                "dense_len unreachable from the entries",
+                RelIndex { index_bits: 4, entries: vec![], dense_len: 100 },
+            ),
+        ];
+        for (what, enc) in cases {
+            assert!(enc.validate(4).is_err(), "{what} accepted");
         }
     }
 

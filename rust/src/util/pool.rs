@@ -22,12 +22,25 @@
 //!   up scheduled last behind a fleet of small ones.
 //! * **Nested calls.** A `map_with_scratch` fan-out issued from inside a
 //!   pool lane runs inline (concurrency never exceeds the pool width).
-//!   Elementwise splits ([`ThreadPool::par_zip_map`]) are the exception:
-//!   issued from a lane *of the same pool*, they may fan out across the
-//!   currently **idle** workers — this is the size-aware hybrid schedule
-//!   that lets one giant fc layer soak up cores the small layers left
-//!   idle, without oversubscribing busy ones. Splits on a *different*
-//!   pool than the one the lane belongs to always run inline.
+//!   Intra-layer splits ([`ThreadPool::par_zip_map`],
+//!   [`ThreadPool::par_chunk_map`], [`ThreadPool::par_chunk_zip`]) are
+//!   the exception: issued from a lane *of the same pool*, they may fan
+//!   out across the currently **idle** workers — this is the size-aware
+//!   hybrid schedule that lets one giant fc layer soak up cores the
+//!   small layers left idle, without oversubscribing busy ones. Splits
+//!   on a *different* pool than the one the lane belongs to always run
+//!   inline.
+//! * **Chunked map-reduce.** Multi-pass intra-layer algorithms (the
+//!   two-pass blocked top-k select in `projection`) pin one block
+//!   partition up front with [`ThreadPool::plan_split`] and then run
+//!   each pass over that same partition: read passes via
+//!   [`ThreadPool::par_chunk_map`] (per-block results returned in block
+//!   order, merged serially by the caller — the pool itself never
+//!   reduces across blocks, so float ordering is caller-controlled),
+//!   write passes via [`ThreadPool::par_chunk_zip`] (disjoint `&mut`
+//!   block slices). Both honor the nested-fan-out contract above; the
+//!   snapshot of idle workers is taken at `plan_split` time, and the
+//!   block count never exceeds the pool width.
 //! * **Panics.** A panic in any job is caught on the executing lane and
 //!   re-raised on the caller as `"pool worker panicked"` after every
 //!   job of the fan-out has finished.
@@ -429,6 +442,96 @@ impl ThreadPool {
         width.min(grain).max(1)
     }
 
+    /// How many contiguous blocks an intra-layer split of `len` elements
+    /// may use right now — the public planning step of the chunked
+    /// map-reduce contract (see the module docs). Returns 1 when the
+    /// split should run inline (small input, width-1 pool, or a lane of
+    /// a foreign pool). Multi-pass algorithms call this **once** and
+    /// reuse the block count for every pass so all passes see the same
+    /// partition.
+    pub fn plan_split(&self, len: usize) -> usize {
+        self.elementwise_lanes(len)
+    }
+
+    /// The one chunk length both chunked primitives derive their block
+    /// boundaries from — shared so [`ThreadPool::par_chunk_map`] and
+    /// [`ThreadPool::par_chunk_zip`] can never drift apart (two-pass
+    /// algorithms rely on the partitions agreeing exactly).
+    fn chunk_len(len: usize, blocks: usize) -> usize {
+        (len + blocks - 1) / blocks
+    }
+
+    /// Run `f(block, range)` over `blocks` contiguous ranges covering
+    /// `0..len` (block b = `b·⌈len/blocks⌉ ..` capped at `len` — the
+    /// same boundaries `chunks()`/`chunks_mut()` produce, so a read
+    /// pass here and a write pass via [`ThreadPool::par_chunk_zip`]
+    /// with the same `blocks` see identical partitions). Per-block
+    /// results return in block order; any cross-block reduction is the
+    /// caller's, run serially. `blocks` should come from
+    /// [`ThreadPool::plan_split`]; a trailing block past `len` gets an
+    /// empty range.
+    pub fn par_chunk_map<R, F>(&self, len: usize, blocks: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, std::ops::Range<usize>) -> R + Sync,
+    {
+        let blocks = blocks.max(1);
+        if blocks == 1 || len == 0 {
+            return (0..blocks).map(|b| f(b, if b == 0 { 0..len } else { len..len })).collect();
+        }
+        let chunk = Self::chunk_len(len, blocks);
+        let results: Vec<Mutex<Option<R>>> = (0..blocks).map(|_| Mutex::new(None)).collect();
+        {
+            let f = &f;
+            let results = &results;
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..blocks)
+                .map(|b| {
+                    boxed(move || {
+                        let start = (b * chunk).min(len);
+                        let end = ((b + 1) * chunk).min(len);
+                        *results[b].lock().expect("chunk result poisoned") =
+                            Some(f(b, start..end));
+                    })
+                })
+                .collect();
+            self.run_scoped(tasks);
+        }
+        results
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .expect("chunk result poisoned")
+                    .expect("missing chunk result")
+            })
+            .collect()
+    }
+
+    /// Write pass of the chunked map-reduce: split `src`/`dst` into the
+    /// same `blocks` contiguous chunks as [`ThreadPool::par_chunk_map`]
+    /// and run `f(block, src_chunk, dst_chunk)` on each across the pool.
+    /// `f` must fully overwrite its `dst_chunk`; blocks are disjoint, so
+    /// results cannot depend on execution order.
+    pub fn par_chunk_zip<F>(&self, src: &[f32], dst: &mut [f32], blocks: usize, f: F)
+    where
+        F: Fn(usize, &[f32], &mut [f32]) + Sync,
+    {
+        assert_eq!(src.len(), dst.len(), "par_chunk_zip length mismatch");
+        let blocks = blocks.min(src.len()).max(1);
+        if blocks == 1 {
+            f(0, src, dst);
+            return;
+        }
+        let chunk = Self::chunk_len(src.len(), blocks);
+        let f = &f;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = dst
+            .chunks_mut(chunk)
+            .zip(src.chunks(chunk))
+            .enumerate()
+            .map(|(b, (ds, ss))| boxed(move || f(b, ss, ds)))
+            .collect();
+        self.run_scoped(tasks);
+    }
+
     /// Elementwise `dst[i] = f(src[i])` split into contiguous chunks.
     /// Bit-identical to the serial loop: `f` is pure per element, chunk
     /// boundaries never change any element's result, and no reduction
@@ -446,20 +549,11 @@ impl ThreadPool {
             }
             return;
         }
-        let chunk = (src.len() + lanes - 1) / lanes;
-        let f = &f;
-        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = dst
-            .chunks_mut(chunk)
-            .zip(src.chunks(chunk))
-            .map(|(ds, ss)| {
-                boxed(move || {
-                    for (d, &s) in ds.iter_mut().zip(ss) {
-                        *d = f(s);
-                    }
-                })
-            })
-            .collect();
-        self.run_scoped(tasks);
+        self.par_chunk_zip(src, dst, lanes, |_, ss, ds| {
+            for (d, &s) in ds.iter_mut().zip(ss) {
+                *d = f(s);
+            }
+        });
     }
 }
 
@@ -634,6 +728,81 @@ mod tests {
             assert_eq!(out[1], vec![1.0], "threads={threads}");
             assert_eq!(out[2], vec![2.0], "threads={threads}");
         }
+    }
+
+    #[test]
+    fn chunk_map_covers_len_in_block_order() {
+        let pool = ThreadPool::new(4);
+        let len = 100_000;
+        let blocks = pool.plan_split(len);
+        assert!(blocks >= 2 && blocks <= 4, "blocks={blocks}");
+        let ranges = pool.par_chunk_map(len, blocks, |b, r| (b, r));
+        assert_eq!(ranges.len(), blocks);
+        let mut expect_start = 0usize;
+        for (i, (b, r)) in ranges.iter().enumerate() {
+            assert_eq!(*b, i, "block index in order");
+            assert_eq!(r.start, expect_start, "contiguous coverage");
+            expect_start = r.end;
+        }
+        assert_eq!(expect_start, len, "full coverage");
+    }
+
+    #[test]
+    fn chunk_map_and_chunk_zip_partitions_agree() {
+        // The read pass (par_chunk_map) and write pass (par_chunk_zip)
+        // of a two-pass algorithm must see identical block boundaries
+        // for the same `blocks` — the select's per-block tie quotas
+        // depend on it.
+        let src: Vec<f32> = (0..77_777).map(|i| i as f32).collect();
+        let pool = ThreadPool::new(4);
+        for blocks in [1usize, 2, 3, 4, 7] {
+            let map_ranges = pool.par_chunk_map(src.len(), blocks, |_, r| r);
+            let mut dst = vec![0.0f32; src.len()];
+            let zip_lens = std::sync::Mutex::new(Vec::new());
+            pool.par_chunk_zip(&src, &mut dst, blocks, |b, ss, ds| {
+                for (d, &s) in ds.iter_mut().zip(ss) {
+                    *d = s + 1.0;
+                }
+                zip_lens.lock().unwrap().push((b, ss.len()));
+            });
+            let mut zip_lens = zip_lens.into_inner().unwrap();
+            zip_lens.sort();
+            for (b, len) in zip_lens {
+                assert_eq!(
+                    len,
+                    map_ranges[b].len(),
+                    "blocks={blocks} block {b} boundary mismatch"
+                );
+            }
+            assert!(dst.iter().enumerate().all(|(i, &x)| x == i as f32 + 1.0));
+        }
+    }
+
+    #[test]
+    fn plan_split_runs_inline_inside_foreign_pool_lane() {
+        // Nested-fan-out contract for the chunked primitives: from a
+        // lane of a *different* pool, plan_split must say 1 (inline)
+        // while top-level calls may split.
+        let outer = ThreadPool::new(4);
+        let inner = ThreadPool::new(8);
+        assert!(inner.plan_split(1_000_000) > 1);
+        assert_eq!(inner.plan_split(100), 1, "below the grain");
+        let plans = outer.map_with_scratch(
+            vec![(); 3],
+            &mut Vec::new(),
+            || (),
+            |_, _, _| inner.plan_split(1_000_000),
+        );
+        assert_eq!(plans, vec![1, 1, 1], "foreign-pool split must be inline");
+    }
+
+    #[test]
+    fn chunk_map_single_block_and_empty() {
+        let pool = ThreadPool::new(4);
+        let one = pool.par_chunk_map(10, 1, |b, r| (b, r));
+        assert_eq!(one, vec![(0, 0..10)]);
+        let none = pool.par_chunk_map(0, 1, |b, r| (b, r));
+        assert_eq!(none, vec![(0, 0..0)]);
     }
 
     #[test]

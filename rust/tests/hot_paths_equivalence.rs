@@ -11,6 +11,11 @@
 //! * per-layer parallel projection — including the persistent pool's
 //!   size-aware split of a dominant layer across idle workers — produces
 //!   results identical to the serial path at widths {1, 2, 4, 8};
+//! * the parallel blocked top-k select (`prune_topk_into_par`) is
+//!   bit-identical to the serial select at widths {1, 2, 4, 8} — tie
+//!   storms, the k edge set {0, 1, n−1, n}, and NaN inputs included —
+//!   and the chunked map-reduce primitives it runs on honor the pool's
+//!   nested-fan-out contract;
 //! * parallel `RelIndex` packaging stores byte-identical encodings;
 //! * the fused dual update reproduces the composed tensor ops exactly.
 //!
@@ -188,6 +193,161 @@ fn size_aware_dominant_layer_split_identical_to_serial() {
         },
     );
     assert_eq!(serial, global, "global pool");
+}
+
+/// Bitwise slice equality (NaN-tolerant; `assert_eq!` on f32 rejects
+/// NaN == NaN).
+fn assert_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: index {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn parallel_blocked_select_property_suite() {
+    // The deterministic parallel partition select must be bit-identical
+    // to the serial blocked select at every pool width, over the layer
+    // mix, a dominant layer with coarse ties, constant-input tie
+    // storms, the k edge set, and NaN inputs.
+    let mut rng = Rng::new(41);
+    let mut inputs = random_layers(40);
+    // dominant layer with frequent exact ties across block boundaries
+    inputs.push(
+        rng.normal_vec(250_000, 1.0)
+            .iter()
+            .map(|&x| (x * 4.0).round() / 4.0)
+            .collect(),
+    );
+    inputs.push(vec![0.5f32; 100_000]); // constant tie storm
+    let mut nanny = rng.normal_vec(150_000, 1.0);
+    nanny[0] = f32::NAN;
+    nanny[74_000] = f32::NAN;
+    inputs.push(nanny);
+    let mut mags = Vec::new();
+    let (mut serial, mut par) = (Vec::new(), Vec::new());
+    for threads in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(threads);
+        for (li, v) in inputs.iter().enumerate() {
+            let n = v.len();
+            for k in [0usize, 1, n / 7, n / 2, n.saturating_sub(1), n] {
+                projection::prune_topk_into(v, k, &mut mags, &mut serial);
+                projection::prune_topk_into_par(&pool, v, k, &mut mags, &mut par);
+                assert_bits_eq(&serial, &par, &format!("threads={threads} layer {li} k={k}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn cardinality_dominant_layer_split_identical_to_serial() {
+    // The production Z-update shape for pruning: one dominant fc layer
+    // among small siblings, projected through Constraint::Cardinality
+    // inside a per-layer fan-out. On the global pool the dominant
+    // layer's blocked select splits across idle workers; results must
+    // be bit-identical to the serial path either way.
+    let mut rng = Rng::new(42);
+    let mut layers: Vec<Vec<f32>> = vec![rng.normal_vec(300_000, 0.1)];
+    for n in [700usize, 2_500, 96, 1_800] {
+        layers.push(rng.normal_vec(n, 0.3));
+    }
+    let sizes: Vec<usize> = layers.iter().map(|l| l.len()).collect();
+    let keep: Vec<usize> = sizes.iter().map(|&n| n / 11).collect();
+    let constraint = Constraint::Cardinality { keep };
+    let serial: Vec<Vec<f32>> = layers
+        .iter()
+        .enumerate()
+        .map(|(li, l)| constraint.project(li, l))
+        .collect();
+    for threads in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(threads);
+        let mut wss: Vec<ProjectionWorkspace> = Vec::new();
+        let jobs: Vec<(usize, &Vec<f32>)> = layers.iter().enumerate().collect();
+        let parallel = pool.map_with_scratch_sized(
+            jobs,
+            &sizes,
+            &mut wss,
+            ProjectionWorkspace::new,
+            |_, (li, l), ws| {
+                constraint.project_with(li, l, ws);
+                ws.out.clone()
+            },
+        );
+        assert_eq!(serial, parallel, "threads={threads}");
+    }
+    // production path: global pool, nested split over its idle workers
+    let mut wss: Vec<ProjectionWorkspace> = Vec::new();
+    let jobs: Vec<(usize, &Vec<f32>)> = layers.iter().enumerate().collect();
+    let global = ThreadPool::global().map_with_scratch_sized(
+        jobs,
+        &sizes,
+        &mut wss,
+        ProjectionWorkspace::new,
+        |_, (li, l), ws| {
+            constraint.project_with(li, l, ws);
+            ws.out.clone()
+        },
+    );
+    assert_eq!(serial, global, "global pool");
+}
+
+#[test]
+fn chunk_primitives_honor_nested_fanout_contract() {
+    // par_chunk_map / par_chunk_zip from inside a lane of a *foreign*
+    // pool must run inline (plan_split = 1) and still be correct; from
+    // the same pool they may split across idle workers only. Either
+    // way the merged result equals the serial computation.
+    let src: Vec<f32> = (0..200_000).map(|i| (i % 977) as f32 * 0.25).collect();
+    let want_sum: f64 = src.iter().map(|&x| x as f64).sum();
+    let outer = ThreadPool::new(4);
+    let sums = outer.map_with_scratch(
+        vec![0usize, 1],
+        &mut Vec::new(),
+        || (),
+        |_, job, _| {
+            let foreign = ThreadPool::new(8);
+            let blocks = foreign.plan_split(src.len());
+            assert_eq!(blocks, 1, "foreign-pool chunk split must be inline");
+            if job == 0 {
+                // read pass, serial merge in block order
+                foreign
+                    .par_chunk_map(src.len(), blocks, |_, r| {
+                        src[r].iter().map(|&x| x as f64).sum::<f64>()
+                    })
+                    .into_iter()
+                    .sum::<f64>()
+            } else {
+                let mut dst = vec![0.0f32; src.len()];
+                foreign.par_chunk_zip(&src, &mut dst, blocks, |_, ss, ds| {
+                    for (d, &s) in ds.iter_mut().zip(ss) {
+                        *d = s;
+                    }
+                });
+                dst.iter().map(|&x| x as f64).sum::<f64>()
+            }
+        },
+    );
+    assert_eq!(sums, vec![want_sum, want_sum]);
+    // same-pool split from the top level: blocks > 1, same serial-merge
+    // result because block order is preserved.
+    let pool = ThreadPool::new(4);
+    let blocks = pool.plan_split(src.len());
+    assert!(blocks > 1, "top-level split should fan out");
+    let per_block = pool.par_chunk_map(src.len(), blocks, |b, r| {
+        (b, src[r].iter().map(|&x| x as f64).sum::<f64>())
+    });
+    assert!(per_block.iter().enumerate().all(|(i, (b, _))| i == *b));
+    // serial in-order merge is deterministic at any width: compare to a
+    // 2-wide pool's merge of the same partition plan
+    let sum4: f64 = per_block.iter().map(|(_, s)| s).sum();
+    let pool2 = ThreadPool::new(2);
+    let sum2: f64 = pool2
+        .par_chunk_map(src.len(), blocks, |_, r| {
+            src[r].iter().map(|&x| x as f64).sum::<f64>()
+        })
+        .into_iter()
+        .sum();
+    assert_eq!(sum4, sum2, "same partition, same merge order, same bits");
 }
 
 #[test]
