@@ -1,19 +1,27 @@
 # One entry point for builder and reviewer alike.
 #
-#   make verify       — the tier-1 gate: release build + full test suite
+#   make verify       — the tier-1 gate (release build + full test
+#                       suite), then the offline end-to-end native
+#                       pipeline test again in release mode and the
+#                       quickstart example (dense train → ADMM prune →
+#                       quantize → sparse serving), so every merge
+#                       proves the whole workflow actually executes
 #   make bench        — hot-path microbenchmarks with machine-readable
 #                       output (writes BENCH_hot_paths.json into the
 #                       repo root)
 #   make bench-report — run the benchmarks, then diff the fresh
 #                       BENCH_hot_paths.json against the committed
 #                       BENCH_baseline.json, printing per-path speedup
-#                       ratios (first ever run seeds the baseline;
-#                       commit the seeded file to start the trajectory)
+#                       ratios. The first toolchain run seeds the empty
+#                       baseline and commits it (the trajectory anchor);
+#                       later runs never touch the committed file.
 
 .PHONY: verify bench bench-report
 
 verify:
 	cargo build --release && cargo test -q
+	cargo test --release -q -p admm_nn --test integration_pipeline
+	cargo run --release -p admm_nn --example quickstart
 
 # Cargo runs bench binaries with CWD = the package root (rust/), so pin
 # the JSON output to the repo root where bench-report expects it.
@@ -21,4 +29,16 @@ bench:
 	BENCH_JSON_DIR=$(CURDIR) cargo bench --bench hot_paths -- --json
 
 bench-report: bench
+	@cp BENCH_baseline.json .bench_baseline.before 2>/dev/null || true
 	cargo run --release -p admm_nn --bin bench-report -- BENCH_hot_paths.json BENCH_baseline.json
+	@# Auto-commit ONLY a genuine first seeding: the pre-run baseline was
+	@# the empty placeholder ("results":[]) and the tool filled it in. A
+	@# hand-edited or otherwise-diverged baseline is never touched, and a
+	@# failed commit (e.g. no git identity) only prints a note.
+	@if grep -q '"results":\[\]' .bench_baseline.before 2>/dev/null \
+	   && ! cmp -s BENCH_baseline.json .bench_baseline.before; then \
+		git add BENCH_baseline.json && \
+		git commit -q -m "Seed benchmark baseline from first toolchain run" -- BENCH_baseline.json \
+		&& echo "committed seeded BENCH_baseline.json" \
+		|| echo "note: baseline seeded but not committed (commit it manually)"; \
+	fi; rm -f .bench_baseline.before

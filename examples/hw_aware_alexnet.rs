@@ -7,6 +7,7 @@
 //!
 //! Run: `cargo run --release --example hw_aware_alexnet [-- --fast]`
 
+use admm_nn::backend::{native::NativeBackend, ModelExec};
 use admm_nn::coordinator::hw_aware::{hw_aware_compress, HwAwareConfig};
 use admm_nn::coordinator::{AdmmConfig, TrainConfig, Trainer};
 use admm_nn::data;
@@ -20,9 +21,20 @@ fn main() -> admm_nn::Result<()> {
     let (pre, iters, spi, retrain, probes) =
         if fast { (150, 2, 40, 60, 2) } else { (500, 3, 80, 150, 4) };
 
-    let rt = Runtime::load("artifacts")?;
-    let sess = rt.model("alexnet_proxy")?;
-    let ds = data::for_input_shape(&sess.entry.input_shape);
+    let rt;
+    let pjrt_sess;
+    let native_sess;
+    let sess: &dyn ModelExec =
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            rt = Runtime::load("artifacts")?;
+            pjrt_sess = rt.model("alexnet_proxy")?;
+            &pjrt_sess
+        } else {
+            println!("(artifacts not built -- running on the native backend)");
+            native_sess = NativeBackend::open("alexnet_proxy")?;
+            &native_sess
+        };
+    let ds = data::for_input_shape(&sess.entry().input_shape);
     let hw = HwConfig::default();
     println!(
         "hardware model: break-even portion {:.1}% -> ratio {}",
@@ -32,8 +44,8 @@ fn main() -> admm_nn::Result<()> {
 
     // dense pretraining
     println!("== dense pretraining ({pre} steps) ==");
-    let mut st = TrainState::init(&sess.entry, 0);
-    let mut trainer = Trainer::new(&sess, ds.as_ref());
+    let mut st = TrainState::init(sess.entry(), 0);
+    let mut trainer = Trainer::new(sess, ds.as_ref());
     trainer.run(&mut st, &TrainConfig {
         steps: pre,
         verbose: true,
@@ -52,7 +64,7 @@ fn main() -> admm_nn::Result<()> {
         verbose: true,
         ..Default::default()
     };
-    let res = hw_aware_compress(&sess, ds.as_ref(), &st, &cfg)?;
+    let res = hw_aware_compress(sess, ds.as_ref(), &st, &cfg)?;
 
     // Table-9-style report on the proxy
     println!("\n== synthesized speedups (proxy conv layers) ==");
@@ -79,7 +91,7 @@ fn main() -> admm_nn::Result<()> {
 
     // persist
     std::fs::create_dir_all("results")?;
-    let wps: Vec<_> = sess.entry.weight_params().collect();
+    let wps: Vec<_> = sess.entry().weight_params().collect();
     MeasuredRun {
         model: "alexnet_proxy".into(),
         method: "hw-aware admm".into(),

@@ -20,6 +20,7 @@
 
 use std::time::Instant;
 
+use admm_nn::backend::{native::NativeBackend, ModelExec};
 use admm_nn::baselines;
 use admm_nn::coordinator::{pipeline, AdmmConfig, PipelineConfig, TrainConfig, Trainer};
 use admm_nn::data;
@@ -33,18 +34,29 @@ fn main() -> admm_nn::Result<()> {
     let (pre, iters, spi, retrain, rounds) =
         if fast { (200, 2, 60, 100, 2) } else { (900, 5, 150, 400, 4) };
 
-    let rt = Runtime::load("artifacts")?;
-    let sess = rt.model("lenet5")?;
-    let ds = data::for_input_shape(&sess.entry.input_shape);
+    let rt;
+    let pjrt_sess;
+    let native_sess;
+    let sess: &dyn ModelExec =
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            rt = Runtime::load("artifacts")?;
+            pjrt_sess = rt.model("lenet5")?;
+            &pjrt_sess
+        } else {
+            println!("(artifacts not built -- running on the native backend)");
+            native_sess = NativeBackend::open("lenet5")?;
+            &native_sess
+        };
+    let ds = data::for_input_shape(&sess.entry().input_shape);
     std::fs::create_dir_all("results")?;
 
     // Layer-wise keep ratios in the paper's 85×-run shape: conv1 stays
     // denser (input-adjacent), fc1 is pruned hardest.
     let keep = vec![0.55, 0.08, 0.012, 0.12];
     let target_ratio = {
-        let total: f64 = sess.entry.weight_params().map(|p| p.numel() as f64).sum();
+        let total: f64 = sess.entry().weight_params().map(|p| p.numel() as f64).sum();
         let kept: f64 = sess
-            .entry
+            .entry()
             .weight_params()
             .zip(&keep)
             .map(|(p, &a)| p.numel() as f64 * a)
@@ -58,8 +70,8 @@ fn main() -> admm_nn::Result<()> {
 
     // -- 1. dense pretraining ----------------------------------------------
     let t0 = Instant::now();
-    let mut st = TrainState::init(&sess.entry, 0);
-    let mut trainer = Trainer::new(&sess, ds.as_ref());
+    let mut st = TrainState::init(sess.entry(), 0);
+    let mut trainer = Trainer::new(sess, ds.as_ref());
     let log = trainer.run(&mut st, &TrainConfig {
         steps: pre,
         eval_every: (pre / 6).max(1),
@@ -82,9 +94,9 @@ fn main() -> admm_nn::Result<()> {
         verbose: true,
         ..Default::default()
     };
-    let rep = pipeline::run_pipeline(&sess, ds.as_ref(), &mut st, &cfg)?;
+    let rep = pipeline::run_pipeline(sess, ds.as_ref(), &mut st, &cfg)?;
     let admm_wall = t_admm.elapsed().as_secs_f64();
-    let size = rep.model.size_report(sess.entry.total_weight_count() as u64);
+    let size = rep.model.size_report(sess.entry().total_weight_count() as u64);
     rep.model.save("results/lenet5_admm.admm")?;
 
     // -- 3. baselines at the same layer-wise target --------------------------
@@ -92,7 +104,7 @@ fn main() -> admm_nn::Result<()> {
     let t_b = Instant::now();
     let mut bst = dense_state.clone();
     let han = baselines::iterative_magnitude(
-        &sess, ds.as_ref(), &mut bst, &keep, rounds, retrain / rounds as u64,
+        sess, ds.as_ref(), &mut bst, &keep, rounds, retrain / rounds as u64,
         1e-3, 8,
     )?;
     let han_wall = t_b.elapsed().as_secs_f64();
@@ -101,13 +113,13 @@ fn main() -> admm_nn::Result<()> {
 
     let mut bst = dense_state.clone();
     let oneshot = baselines::one_shot_prune(
-        &sess, ds.as_ref(), &mut bst, &keep, retrain, 1e-3, 8)?;
+        sess, ds.as_ref(), &mut bst, &keep, retrain, 1e-3, 8)?;
     println!("  {:<28} acc {:.4}  prune {}", oneshot.name, oneshot.accuracy,
              fmt_ratio(oneshot.overall_prune_ratio));
 
     let mut bst = dense_state.clone();
     let l1 = baselines::l1_then_prune(
-        &sess, ds.as_ref(), &mut bst, 5e-5, iters as u64 * spi, &keep,
+        sess, ds.as_ref(), &mut bst, 5e-5, iters as u64 * spi, &keep,
         retrain, 1e-3, 8)?;
     println!("  {:<28} acc {:.4}  prune {}", l1.name, l1.accuracy,
              fmt_ratio(l1.overall_prune_ratio));

@@ -1,27 +1,37 @@
 //! Quickstart: compress a small MLP with the ADMM-NN joint pipeline.
 //!
-//! Demonstrates the whole public API in ~2 minutes on a laptop CPU:
-//! 1. load the AOT artifacts (`make artifacts` first),
-//! 2. dense-train an MLP on the synthetic digit dataset,
-//! 3. run the joint ADMM prune (10×) + quantize pipeline,
-//! 4. print the accuracy / size summary and save the compressed model.
+//! Runs entirely on the **native** execution backend — pure-Rust host
+//! training and inference, no PJRT plugin and no AOT artifacts needed —
+//! so this works on a fresh checkout:
+//! 1. dense-train an MLP on the synthetic digit dataset,
+//! 2. run the joint ADMM prune (10×) + quantize pipeline,
+//! 3. print the accuracy / size summary and save the compressed model,
+//! 4. reload it and serve inference *from the stored representation*
+//!    (RelIndex → CSR sparse execution), cross-checking the logits
+//!    against dense masked inference.
 //!
 //! Run: `cargo run --release --example quickstart`
+//! (swap `NativeBackend::open` for `Runtime::load("artifacts")` +
+//! `rt.model("mlp")` to drive the same pipeline through PJRT.)
 
+use admm_nn::backend::native::NativeBackend;
+use admm_nn::backend::sparse_infer::SparseInfer;
+use admm_nn::backend::{ModelExec, TrainState};
 use admm_nn::coordinator::{pipeline, AdmmConfig, PipelineConfig, TrainConfig, Trainer};
-use admm_nn::data;
-use admm_nn::runtime::{Runtime, TrainState};
-use admm_nn::util::fmt_bytes;
+use admm_nn::data::{self, Dataset};
+use admm_nn::util::{fmt_bytes, ThreadPool};
 
 fn main() -> admm_nn::Result<()> {
-    let rt = Runtime::load("artifacts")?;
-    println!("PJRT platform: {}", rt.platform());
-    let sess = rt.model("mlp")?;
-    let ds = data::for_input_shape(&sess.entry.input_shape);
+    let sess = NativeBackend::open("mlp")?;
+    println!(
+        "backend: native (host-side, {} pool lanes)",
+        ThreadPool::global().threads()
+    );
+    let ds = data::for_input_shape(&sess.entry().input_shape);
 
     // 1. dense pretraining
     println!("== dense pretraining ==");
-    let mut st = TrainState::init(&sess.entry, 0);
+    let mut st = TrainState::init(sess.entry(), 0);
     let mut trainer = Trainer::new(&sess, ds.as_ref());
     trainer.run(&mut st, &TrainConfig { steps: 300, verbose: true, ..Default::default() })?;
     let dense = sess.evaluate(&st, ds.as_ref(), 8)?;
@@ -29,7 +39,7 @@ fn main() -> admm_nn::Result<()> {
 
     // 2. joint ADMM compression: 10x pruning, auto bit selection
     println!("\n== joint ADMM prune (10x) + quantize ==");
-    let n_w = sess.entry.n_weights();
+    let n_w = sess.entry().n_weights();
     let cfg = PipelineConfig {
         prune_keep: vec![0.1; n_w],
         admm: AdmmConfig { iters: 3, steps_per_iter: 80, verbose: true, ..Default::default() },
@@ -50,7 +60,7 @@ fn main() -> admm_nn::Result<()> {
             q.bits
         );
     }
-    let size = rep.model.size_report(sess.entry.total_weight_count() as u64);
+    let size = rep.model.size_report(sess.entry().total_weight_count() as u64);
     println!(
         "\naccuracy: dense {:.4} -> pruned {:.4} -> stored {:.4}",
         rep.dense_acc, rep.pruned_acc, rep.final_acc
@@ -64,7 +74,7 @@ fn main() -> admm_nn::Result<()> {
         size.model_compress_ratio()
     );
 
-    // 4. persist + reload round trip
+    // 4. persist + reload round trip, then serve from the stored form
     std::fs::create_dir_all("results")?;
     rep.model.save("results/quickstart_mlp.admm")?;
     let loaded = admm_nn::coordinator::CompressedModel::load("results/quickstart_mlp.admm")?;
@@ -72,6 +82,31 @@ fn main() -> admm_nn::Result<()> {
         "saved + reloaded compressed model: {} layers, stored accuracy {:.4}",
         loaded.layers.len(),
         loaded.accuracy
+    );
+
+    let server = SparseInfer::new(&loaded, sess.entry())?;
+    let batch = ds.batch(data::Split::Test, 0, 64);
+    let sparse_logits = server.infer(&batch.x, 64)?;
+    let restored = loaded.restore_params(sess.entry())?;
+    let mut vst = st.clone();
+    vst.params = restored;
+    let dense_logits = sess.infer(&vst, &batch.x, 64)?;
+    let mut max_err = 0.0f32;
+    for (i, (a, b)) in sparse_logits.iter().zip(&dense_logits).enumerate() {
+        let d = (a - b).abs();
+        // explicit per-logit gate: a NaN diff must fail, not fall out
+        // of a max() fold
+        assert!(
+            d <= 1e-4,
+            "sparse serving drifted from dense inference at logit {i}: \
+             {a} vs {b}"
+        );
+        max_err = max_err.max(d);
+    }
+    println!(
+        "sparse serving ({} stored nonzeros): max |sparse - dense| logit \
+         error {max_err:.2e} over a 64-batch",
+        server.nnz()
     );
     Ok(())
 }

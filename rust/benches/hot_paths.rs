@@ -359,5 +359,54 @@ fn main() {
     });
     suite.speedup("dual_update n=400K", &d_seed, &d_fused);
 
+    println!("\n== sparse serving vs dense (hwmodel cross-check) ==");
+    // Serve the MLP proxy from its stored CompressedModel form (RelIndex
+    // → CSR, levels on the fly) vs dense masked inference on the native
+    // backend, and put the measured host speedup next to the analytic
+    // accelerator prediction for the same keep ratio. The host CPU has
+    // no index-decode hardware, so measured < modeled is expected — the
+    // point is that both now exist on the same axis.
+    {
+        use admm_nn::backend::native::NativeBackend;
+        use admm_nn::backend::sparse_infer::{prune_quantize_package, SparseInfer};
+        use admm_nn::backend::{ModelExec, TrainState};
+        use admm_nn::data::{self, Dataset, Split};
+
+        let nb = NativeBackend::open("mlp").expect("native backend");
+        let ds = data::for_input_shape(&nb.entry().input_shape);
+        let batch = ds.batch(Split::Test, 0, 64);
+        for keep in [0.2f64, 0.05] {
+            let mut st = TrainState::init(nb.entry(), 9);
+            let model = prune_quantize_package(nb.entry(), "mlp", &mut st, keep, 4, 8);
+            let sp = SparseInfer::new(&model, nb.entry()).expect("sparse server");
+            let dense = suite.bench(
+                &format!("mlp dense masked infer b=64 keep={keep}"),
+                3,
+                15,
+                || {
+                    black_box(nb.infer(&st, &batch.x, 64).unwrap().len());
+                },
+            );
+            let sparse = suite.bench(
+                &format!("mlp sparse CSR infer b=64 keep={keep}"),
+                3,
+                15,
+                || {
+                    black_box(sp.infer(&batch.x, 64).unwrap().len());
+                },
+            );
+            suite.speedup(
+                &format!("sparse serving keep={keep} (measured host)"),
+                &dense,
+                &sparse,
+            );
+            println!(
+                "    hwmodel prediction at keep={keep}: {:.2}x \
+                 (fixed-area accelerator, Fig. 4 curve)",
+                hw.speedup(keep)
+            );
+        }
+    }
+
     suite.finish();
 }

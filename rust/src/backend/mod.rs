@@ -1,0 +1,198 @@
+//! Execution backends: the seam between the coordinator and whatever
+//! actually runs the model.
+//!
+//! The coordinator (ADMM engine, pipelines, baselines) only ever needs
+//! four operations — run one train step, evaluate, infer, and be told
+//! when the slow-changing ADMM state (masks/Z/U/ρ) was mutated. That
+//! contract is [`ModelExec`]; everything above it is backend-agnostic
+//! (the ADMM algorithm itself is: any differentiable trainer solves
+//! subproblem 1 — arXiv:1804.03294).
+//!
+//! Two implementations exist:
+//! * [`crate::runtime::ModelSession`] — the PJRT path: executes the AOT
+//!   HLO artifacts produced by the python compile pipeline. Needs
+//!   `make artifacts` plus a real PJRT plugin (the vendored `xla` stub
+//!   fails fast offline).
+//! * [`native::NativeBackend`] — the pure-Rust host path: dense
+//!   forward/backward (im2col conv + GEMM in [`crate::tensor`]),
+//!   softmax-CE loss, ADAM with the fused ADMM penalty ρ/2‖W−Z+U‖² and
+//!   mask application, parallelized over the [`crate::util::ThreadPool`].
+//!   Runs everywhere, so the integration pipeline finally executes
+//!   end-to-end offline.
+//! * [`sparse_infer::SparseInfer`] — serving-oriented inference straight
+//!   from the *stored* [`crate::coordinator::CompressedModel`]
+//!   representation (RelIndex-decoded CSR × dense GEMM, quantized levels
+//!   materialized on the fly), for measuring sparse-vs-dense throughput
+//!   against the [`crate::hwmodel`] predictions.
+//!
+//! The two trainable backends are **not** bit-identical to each other
+//! (different kernels, different reduction orders); each is internally
+//! deterministic, and cross-backend checks are tolerance-based. The
+//! shared host-side state ([`TrainState`]) and its projection math are
+//! bit-identical regardless of backend.
+
+pub mod native;
+pub mod sparse_infer;
+
+use crate::data::{Batch, Dataset};
+use crate::metrics::EvalStats;
+use crate::runtime::manifest::ModelEntry;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Hyper-parameters of a training phase.
+#[derive(Clone, Copy, Debug)]
+pub struct Hyper {
+    pub lr: f32,
+    /// L1 subgradient coefficient (Wen-style baseline; 0 otherwise).
+    pub l1_lambda: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper { lr: 1e-3, l1_lambda: 0.0 }
+    }
+}
+
+/// Per-step scalars returned by a train step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    /// Data loss + ADMM penalty.
+    pub loss: f32,
+    /// Batch accuracy.
+    pub acc: f32,
+}
+
+/// One loaded model's execution surface — everything the coordinator
+/// needs from a backend. Object-safe on purpose: the coordinator holds
+/// `&dyn ModelExec`, so PJRT sessions and the native backend are
+/// interchangeable at every call site.
+pub trait ModelExec {
+    /// Manifest name of the model.
+    fn name(&self) -> &str;
+
+    /// The manifest entry describing topology, parameter order, and
+    /// batch sizes — the contract [`TrainState`] is laid out against.
+    fn entry(&self) -> &ModelEntry;
+
+    /// Execute one ADAM+ADMM step on
+    /// `f(W,b) + Σ ρᵢ/2 ‖Wᵢ − Zᵢ + Uᵢ‖² (+ λ‖W‖₁)`, with hard masks
+    /// folded into forward, gradients, and the post-update weights;
+    /// updates `st` in place.
+    fn train_step(
+        &self,
+        st: &mut TrainState,
+        hyper: &Hyper,
+        batch: &Batch,
+    ) -> crate::Result<StepStats>;
+
+    /// Evaluate on `n_batches` deterministic test batches of the
+    /// entry's `eval_batch` size (masks applied).
+    fn evaluate(
+        &self,
+        st: &TrainState,
+        data: &dyn Dataset,
+        n_batches: u64,
+    ) -> crate::Result<EvalStats>;
+
+    /// Batch-`b` inference on raw input data; returns flat logits
+    /// (b × n_classes, row-major). Masks applied.
+    fn infer(&self, st: &TrainState, x: &[f32], b: usize) -> crate::Result<Vec<f32>>;
+
+    /// Invalidate any cached view of the slow-changing inputs
+    /// (masks/Z/U/ρ) after the coordinator mutates them (projection
+    /// step, mask freeze, ρ change). Backends without such a cache
+    /// treat this as a no-op.
+    fn invalidate_slow(&self);
+}
+
+/// Host-side training state: everything a train step reads/writes. The
+/// coordinator snapshots, projects, checkpoints, and mutates this
+/// between steps — backends only ever see it through
+/// [`ModelExec::train_step`] / [`ModelExec::evaluate`].
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    /// All parameters (weights + biases), manifest order.
+    pub params: Vec<Tensor>,
+    pub adam_m: Vec<Tensor>,
+    pub adam_v: Vec<Tensor>,
+    /// 1-based ADAM step counter (f32 input of the train artifact).
+    pub step: f32,
+    /// Per weight-tensor (manifest weight order):
+    pub masks: Vec<Tensor>,
+    pub zs: Vec<Tensor>,
+    pub us: Vec<Tensor>,
+    pub rhos: Vec<f32>,
+}
+
+impl TrainState {
+    /// Fresh state: He-normal weights / zero biases (same init family as
+    /// the python tests), ones masks, zero Z/U, zero ρ.
+    pub fn init(entry: &ModelEntry, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::with_capacity(entry.params.len());
+        for p in &entry.params {
+            let mut stream = rng.fork(p.numel() as u64);
+            let data = if p.is_weight() {
+                stream.he_normal(p.numel(), p.fan_in)
+            } else {
+                vec![0.0; p.numel()]
+            };
+            params.push(Tensor::new(p.shape.clone(), data));
+        }
+        let weights: Vec<&crate::runtime::ParamEntry> =
+            entry.weight_params().collect();
+        TrainState {
+            params,
+            adam_m: entry.params.iter()
+                .map(|p| Tensor::zeros(p.shape.clone())).collect(),
+            adam_v: entry.params.iter()
+                .map(|p| Tensor::zeros(p.shape.clone())).collect(),
+            step: 1.0,
+            masks: weights.iter().map(|p| Tensor::ones(p.shape.clone())).collect(),
+            zs: weights.iter().map(|p| Tensor::zeros(p.shape.clone())).collect(),
+            us: weights.iter().map(|p| Tensor::zeros(p.shape.clone())).collect(),
+            rhos: vec![0.0; weights.len()],
+        }
+    }
+
+    /// Reset the ADAM moments (paper restarts retraining phases fresh).
+    pub fn reset_adam(&mut self) {
+        for t in self.adam_m.iter_mut().chain(self.adam_v.iter_mut()) {
+            for x in t.data_mut() {
+                *x = 0.0;
+            }
+        }
+        self.step = 1.0;
+    }
+
+    /// Indices into `params` of the weight tensors (manifest order).
+    pub fn weight_indices(entry: &ModelEntry) -> Vec<usize> {
+        entry
+            .params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.is_weight())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Mutable references to the weight tensors of `params`, in manifest
+    /// weight order (`wi` is [`TrainState::weight_indices`], which is
+    /// ascending) — for zipping against the per-layer masks/Z/U vectors.
+    pub fn weight_tensors_mut<'a>(
+        params: &'a mut [Tensor],
+        wi: &[usize],
+    ) -> Vec<&'a mut Tensor> {
+        let mut is_weight = vec![false; params.len()];
+        for &pi in wi {
+            is_weight[pi] = true;
+        }
+        params
+            .iter_mut()
+            .enumerate()
+            .filter(|(i, _)| is_weight[*i])
+            .map(|(_, t)| t)
+            .collect()
+    }
+}

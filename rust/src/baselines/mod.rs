@@ -12,11 +12,12 @@
 //!   rows of Table 6): per-layer interval search at fixed bits, snap,
 //!   evaluate. No retraining (matching the table's "quant." baselines).
 
+use crate::backend::ModelExec;
 use crate::coordinator::trainer::{TrainConfig, Trainer};
 use crate::data::Dataset;
 use crate::projection;
 use crate::quantize::search_interval;
-use crate::runtime::{ModelSession, TrainState};
+use crate::runtime::TrainState;
 use crate::tensor::Tensor;
 
 /// Outcome of a baseline compression run.
@@ -29,9 +30,9 @@ pub struct BaselineReport {
     pub overall_prune_ratio: f64,
 }
 
-fn snapshot(sess: &ModelSession, st: &TrainState) -> Vec<(String, usize, usize)> {
-    let wi = TrainState::weight_indices(&sess.entry);
-    sess.entry
+fn snapshot(sess: &dyn ModelExec, st: &TrainState) -> Vec<(String, usize, usize)> {
+    let wi = TrainState::weight_indices(sess.entry());
+    sess.entry()
         .weight_params()
         .zip(&wi)
         .map(|(p, &pi)| {
@@ -48,8 +49,8 @@ fn overall(layer_keep: &[(String, usize, usize)]) -> f64 {
 }
 
 /// Hard-prune `st` to per-layer keep ratios and freeze masks.
-pub fn hard_prune(sess: &ModelSession, st: &mut TrainState, keep: &[f64]) {
-    let wi = TrainState::weight_indices(&sess.entry);
+pub fn hard_prune(sess: &dyn ModelExec, st: &mut TrainState, keep: &[f64]) {
+    let wi = TrainState::weight_indices(sess.entry());
     for (li, &pi) in wi.iter().enumerate() {
         let w = &st.params[pi];
         let k = ((w.len() as f64 * keep[li]).round() as usize).min(w.len());
@@ -64,7 +65,7 @@ pub fn hard_prune(sess: &ModelSession, st: &mut TrainState, keep: &[f64]) {
 
 /// Han-style iterative magnitude pruning.
 pub fn iterative_magnitude(
-    sess: &ModelSession,
+    sess: &dyn ModelExec,
     data: &dyn Dataset,
     st: &mut TrainState,
     target_keep: &[f64],
@@ -101,7 +102,7 @@ pub fn iterative_magnitude(
 
 /// L1-regularized training followed by one-shot pruning + retrain.
 pub fn l1_then_prune(
-    sess: &ModelSession,
+    sess: &dyn ModelExec,
     data: &dyn Dataset,
     st: &mut TrainState,
     lambda: f32,
@@ -132,7 +133,7 @@ pub fn l1_then_prune(
 
 /// One-shot magnitude prune + retrain (no ADMM, no iteration).
 pub fn one_shot_prune(
-    sess: &ModelSession,
+    sess: &dyn ModelExec,
     data: &dyn Dataset,
     st: &mut TrainState,
     target_keep: &[f64],
@@ -155,13 +156,13 @@ pub fn one_shot_prune(
 
 /// Quantize the dense model (no pruning, no retrain) at fixed bits.
 pub fn quant_only(
-    sess: &ModelSession,
+    sess: &dyn ModelExec,
     data: &dyn Dataset,
     st: &mut TrainState,
     bits: u32,
     eval_batches: u64,
 ) -> crate::Result<BaselineReport> {
-    let wi = TrainState::weight_indices(&sess.entry);
+    let wi = TrainState::weight_indices(sess.entry());
     for &pi in &wi {
         let w = &st.params[pi];
         let cfg = search_interval(w.data(), bits);

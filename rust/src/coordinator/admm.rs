@@ -2,8 +2,9 @@
 //!
 //! One ADMM *iteration* is:
 //! 1. **Subproblem 1** — `steps_per_iter` ADAM steps on
-//!    f(W,b) + Σ ρᵢ/2 ‖Wᵢ − Zᵢ + Uᵢ‖² (runs inside the train artifact;
-//!    the penalty value/grad are the fused Pallas kernel);
+//!    f(W,b) + Σ ρᵢ/2 ‖Wᵢ − Zᵢ + Uᵢ‖² (runs inside the backend's train
+//!    step: the fused Pallas kernel on PJRT, the fused host loop on the
+//!    native backend);
 //! 2. **Subproblem 2** — analytic projection Zᵢ ← Π_{Sᵢ}(Wᵢ + Uᵢ):
 //!    keep-top-αᵢ for the pruning set, snap-to-level for quantization;
 //! 3. **Dual update** — Uᵢ ← Uᵢ + Wᵢ − Zᵢ.
@@ -33,11 +34,12 @@
 //! residual sum is reduced serially in layer order), so results are
 //! bit-identical to the seed's serial path.
 
+use crate::backend::ModelExec;
 use crate::coordinator::trainer::{RunLog, TrainConfig, Trainer};
 use crate::data::Dataset;
 use crate::projection::{self, ProjectionWorkspace};
 use crate::quantize::QuantConfig;
-use crate::runtime::{ModelSession, TrainState};
+use crate::runtime::TrainState;
 use crate::tensor::Tensor;
 use crate::util::ThreadPool;
 
@@ -142,16 +144,17 @@ pub struct AdmmPhase {
     pub trace: AdmmTrace,
 }
 
-/// Drives ADMM iterations for one constraint over one model session.
-pub struct AdmmRunner<'s, 'r> {
-    pub sess: &'s ModelSession<'r>,
+/// Drives ADMM iterations for one constraint over one execution
+/// backend (PJRT session or the native host backend).
+pub struct AdmmRunner<'s> {
+    pub sess: &'s dyn ModelExec,
     pub data: &'s dyn Dataset,
     pub cfg: AdmmConfig,
 }
 
-impl<'s, 'r> AdmmRunner<'s, 'r> {
+impl<'s> AdmmRunner<'s> {
     pub fn new(
-        sess: &'s ModelSession<'r>,
+        sess: &'s dyn ModelExec,
         data: &'s dyn Dataset,
         cfg: AdmmConfig,
     ) -> Self {
@@ -162,7 +165,7 @@ impl<'s, 'r> AdmmRunner<'s, 'r> {
     /// the standard warm start from a pretrained model). Layers project
     /// in parallel.
     pub fn warm_start(&self, st: &mut TrainState, constraint: &Constraint) {
-        let wi = TrainState::weight_indices(&self.sess.entry);
+        let wi = TrainState::weight_indices(self.sess.entry());
         assert_eq!(wi.len(), constraint.n_layers());
         let rho = self.cfg.rho;
         {
@@ -202,7 +205,7 @@ impl<'s, 'r> AdmmRunner<'s, 'r> {
         st: &mut TrainState,
         constraint: &Constraint,
     ) -> crate::Result<AdmmPhase> {
-        let wi = TrainState::weight_indices(&self.sess.entry);
+        let wi = TrainState::weight_indices(self.sess.entry());
         let mut trace = AdmmTrace::default();
         let mut trainer = Trainer::new(self.sess, self.data);
         let pool = ThreadPool::global();
@@ -273,7 +276,7 @@ impl<'s, 'r> AdmmRunner<'s, 'r> {
     /// masks; clears ρ/Z/U so subsequent training is pure masked retrain.
     /// Layers project in parallel.
     pub fn finalize(&self, st: &mut TrainState, constraint: &Constraint) {
-        let wi = TrainState::weight_indices(&self.sess.entry);
+        let wi = TrainState::weight_indices(self.sess.entry());
         {
             let TrainState { params, masks, zs, us, rhos, .. } = st;
             assert_eq!(masks.len(), wi.len(), "mask count != weight count");

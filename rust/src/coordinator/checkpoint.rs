@@ -97,6 +97,28 @@ impl CompressedModel {
         }
     }
 
+    /// Measure the accuracy of the *stored* representation through an
+    /// execution backend: decode codes + indices into a fresh param
+    /// list, evaluate on `batches` test batches, and record the result
+    /// in `self.accuracy`. `st` supplies the non-parameter state (masks
+    /// stay frozen, so masked eval sees the same support the codes
+    /// store).
+    pub fn validate_accuracy(
+        &mut self,
+        exec: &dyn crate::backend::ModelExec,
+        data: &dyn crate::data::Dataset,
+        st: &crate::backend::TrainState,
+        batches: u64,
+    ) -> crate::Result<f64> {
+        let restored = self.restore_params(exec.entry())?;
+        let mut vst = st.clone();
+        vst.params = restored;
+        exec.invalidate_slow();
+        let acc = exec.evaluate(&vst, data, batches)?.accuracy();
+        self.accuracy = acc;
+        Ok(acc)
+    }
+
     /// Restore weights + biases into a fresh `TrainState` param list
     /// (manifest order) for accuracy validation of the *stored* model.
     pub fn restore_params(&self, entry: &ModelEntry) -> crate::Result<Vec<Tensor>> {

@@ -18,11 +18,12 @@
 //! 5. reports the final configuration with synthesized per-layer and
 //!    overall speedups from the hardware model.
 
+use crate::backend::ModelExec;
 use crate::coordinator::admm::{AdmmConfig, AdmmRunner, Constraint};
 use crate::coordinator::trainer::{TrainConfig, Trainer};
 use crate::data::Dataset;
 use crate::hwmodel::{network_speedup, HwConfig, NetworkSpeedup};
-use crate::runtime::{ModelSession, TrainState};
+use crate::runtime::TrainState;
 
 /// Configuration of the hardware-aware search.
 #[derive(Clone, Debug)]
@@ -139,14 +140,15 @@ fn search_bracket(
     Ok(())
 }
 
-/// Run Fig. 5 end-to-end. `st` must hold a (pre)trained dense model.
+/// Run Fig. 5 end-to-end over any execution backend. `st` must hold a
+/// (pre)trained dense model.
 pub fn hw_aware_compress(
-    sess: &ModelSession,
+    sess: &dyn ModelExec,
     data: &dyn Dataset,
     st: &TrainState,
     cfg: &HwAwareConfig,
 ) -> crate::Result<HwAwareResult> {
-    let entry = &sess.entry;
+    let entry = sess.entry();
     let wps: Vec<_> = entry.weight_params().cloned().collect();
     let n = wps.len();
     let init = cfg.init_keep.clone().unwrap_or_else(|| vec![1.0; n]);

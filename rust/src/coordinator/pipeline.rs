@@ -16,13 +16,14 @@
 //!    the *stored* representation (codes + indices), not the in-memory
 //!    weights.
 
+use crate::backend::ModelExec;
 use crate::coordinator::admm::{AdmmConfig, AdmmRunner, Constraint};
 use crate::coordinator::checkpoint::{CompressedLayer, CompressedModel};
 use crate::coordinator::trainer::{TrainConfig, Trainer};
 use crate::data::Dataset;
 use crate::projection::quant_nearest_inplace;
 use crate::quantize::{search_interval, select_bits, QuantConfig};
-use crate::runtime::{ModelSession, TrainState};
+use crate::runtime::TrainState;
 use crate::tensor::Tensor;
 use crate::util::ThreadPool;
 
@@ -81,14 +82,15 @@ pub struct CompressReport {
     pub model: CompressedModel,
 }
 
-/// Run the joint pipeline on an already-(pre)trained state.
+/// Run the joint pipeline on an already-(pre)trained state, over any
+/// execution backend.
 pub fn run_pipeline(
-    sess: &ModelSession,
+    sess: &dyn ModelExec,
     data: &dyn Dataset,
     st: &mut TrainState,
     cfg: &PipelineConfig,
 ) -> crate::Result<CompressReport> {
-    let entry = &sess.entry;
+    let entry = sess.entry();
     let wps: Vec<_> = entry.weight_params().cloned().collect();
     assert_eq!(cfg.prune_keep.len(), wps.len(),
                "prune_keep must have one ratio per weight tensor");
@@ -222,18 +224,14 @@ pub fn run_pipeline(
         .map(|(i, p)| (p.name.clone(), st.params[i].clone()))
         .collect();
     let mut model = CompressedModel {
-        model_name: sess.name.clone(),
+        model_name: sess.name().to_string(),
         layers,
         biases,
         accuracy: 0.0,
     };
 
     // Validate through the stored path: decode → eval.
-    let restored = model.restore_params(entry)?;
-    let mut vst = st.clone();
-    vst.params = restored;
-    let final_acc = sess.evaluate(&vst, data, cfg.eval_batches)?.accuracy();
-    model.accuracy = final_acc;
+    let final_acc = model.validate_accuracy(sess, data, st, cfg.eval_batches)?;
     if cfg.verbose {
         eprintln!("[pipeline] stored-model accuracy {final_acc:.4}");
     }

@@ -1,16 +1,20 @@
-//! Generic training driver over the train artifact.
+//! Generic training driver over any execution backend.
 //!
 //! One loop serves four roles, selected purely by `TrainState` contents
-//! and hyper-parameters (ρ = 0 / λ = 0 degrade the artifact to plain
+//! and hyper-parameters (ρ = 0 / λ = 0 degrade the train step to plain
 //! training):
 //! * dense pretraining (ones masks, ρ = 0),
 //! * ADMM subproblem 1 (ρ > 0, Z/U live),
 //! * masked retraining after hard pruning (masks frozen, ρ = 0),
 //! * L1-regularized training for the Wen-style baseline (λ > 0).
+//!
+//! The driver only sees [`ModelExec`], so the PJRT artifact session and
+//! the native host backend are interchangeable.
 
+use crate::backend::ModelExec;
 use crate::data::{Dataset, Split};
 use crate::metrics::EvalStats;
-use crate::runtime::{Hyper, ModelSession, TrainState};
+use crate::runtime::{Hyper, TrainState};
 
 /// Training-phase configuration.
 #[derive(Clone, Copy, Debug)]
@@ -88,14 +92,14 @@ impl RunLog {
 
 /// The driver. Stateless besides a batch counter so successive phases
 /// see fresh data.
-pub struct Trainer<'s, 'r> {
-    pub sess: &'s ModelSession<'r>,
+pub struct Trainer<'s> {
+    pub sess: &'s dyn ModelExec,
     pub data: &'s dyn Dataset,
     batch_counter: u64,
 }
 
-impl<'s, 'r> Trainer<'s, 'r> {
-    pub fn new(sess: &'s ModelSession<'r>, data: &'s dyn Dataset) -> Self {
+impl<'s> Trainer<'s> {
+    pub fn new(sess: &'s dyn ModelExec, data: &'s dyn Dataset) -> Self {
         Trainer { sess, data, batch_counter: 0 }
     }
 
@@ -106,7 +110,7 @@ impl<'s, 'r> Trainer<'s, 'r> {
         cfg: &TrainConfig,
     ) -> crate::Result<RunLog> {
         let hyper = Hyper { lr: cfg.lr, l1_lambda: cfg.l1_lambda };
-        let b = self.sess.entry.train_batch;
+        let b = self.sess.entry().train_batch;
         let mut log = RunLog::default();
         for s in 0..cfg.steps {
             let batch = self.data.batch(Split::Train, self.batch_counter, b);

@@ -4,13 +4,26 @@
 //! *ADMM-NN: An Algorithm-Hardware Co-Design Framework of DNNs Using
 //! Alternating Direction Method of Multipliers* (Ren et al., 2018).
 //!
-//! The compute graphs (L2: JAX models; L1: Pallas kernels) are AOT-lowered
-//! once by `python/compile/aot.py` into `artifacts/*.hlo.txt`; this crate
-//! loads them through the PJRT C API ([`runtime`]) and owns everything else:
+//! The coordinator is **backend-generic**: everything algorithmic runs
+//! against the [`backend::ModelExec`] trait, with two implementations —
+//! the PJRT artifact session ([`runtime`]) and a pure-Rust native
+//! backend ([`backend::native`]) that trains and serves the proxy nets
+//! host-side, so the full pipeline executes offline. The compute graphs
+//! (L2: JAX models; L1: Pallas kernels) are AOT-lowered once by
+//! `python/compile/aot.py` into `artifacts/*.hlo.txt` for the PJRT
+//! path; module map:
 //!
+//! * [`backend`] — the execution seam: [`backend::ModelExec`] (train
+//!   step / evaluate / infer / slow-state invalidation) plus the host
+//!   [`backend::TrainState`] contract; [`backend::native`] implements
+//!   it in pure Rust (im2col conv + GEMM, softmax-CE, fused ADAM+ADMM
+//!   update), and [`backend::sparse_infer`] serves inference directly
+//!   from the stored [`coordinator::CompressedModel`] representation
+//!   (RelIndex → CSR, levels materialized on the fly).
 //! * [`coordinator`] — the ADMM engine (W/Z/U state, subproblem scheduling,
 //!   dual updates), the joint prune→quantize pipeline (paper Fig. 2), and
-//!   the hardware-aware compression algorithm (paper Fig. 5).
+//!   the hardware-aware compression algorithm (paper Fig. 5) — all over
+//!   `&dyn ModelExec`.
 //! * [`projection`] — host-side Euclidean projections onto the paper's
 //!   constraint sets (cardinality / equal-interval levels), each with a
 //!   zero-allocation `_into` variant plus the reusable
@@ -33,7 +46,9 @@
 //!   regularization pruning (Wen et al. style), projection-only, and
 //!   quantization-only comparators.
 //! * [`data`] — deterministic synthetic datasets (MNIST-like digits,
-//!   ImageNet-proxy textures) standing in for the paper's corpora.
+//!   ImageNet-proxy textures) standing in for the paper's corpora;
+//!   batches are pure functions of (split, index, batch size), so both
+//!   backends and every test see identical data.
 //! * [`report`] — regenerates every table and figure of the evaluation.
 //! * [`util`] — deterministic RNG, search primitives, the persistent
 //!   size-aware [`util::ThreadPool`] (std-only) that fans per-layer
@@ -43,9 +58,14 @@
 //!   with optional machine-readable JSON output
 //!   ([`util::bench::BenchSuite`]).
 //!
-//! Python never runs at coordination time: after `make artifacts` the
-//! binary is self-contained.
+//! Python never runs at coordination time: the native backend needs no
+//! artifacts at all, and after `make artifacts` the PJRT path is
+//! self-contained too. Host-side projection/selection paths are
+//! bit-identical at any pool width (property-tested); PJRT-vs-native
+//! agreement is tolerance-checked (different kernels, different
+//! reduction orders), as is sparse-vs-dense inference (≤1e-4/logit).
 
+pub mod backend;
 pub mod baselines;
 pub mod coordinator;
 pub mod data;

@@ -7,10 +7,14 @@
 //!                  synthesized Table-9 speedups.
 //! * `report`     — regenerate any table/figure of the evaluation.
 //!
-//! All compute runs through AOT artifacts (`make artifacts` first);
-//! python is never invoked. Argument parsing is in-tree ([`util::cli`])
-//! — this repo builds offline with no clap dependency.
+//! Compute runs on an execution backend selected by `--backend`:
+//! `native` (pure-Rust host training/inference, no artifacts needed),
+//! `pjrt` (the AOT artifacts; `make artifacts` first), or the default
+//! `auto` (pjrt when `artifacts/manifest.json` exists, else native).
+//! Python is never invoked. Argument parsing is in-tree
+//! ([`util::cli`]) — this repo builds offline with no clap dependency.
 
+use admm_nn::backend::{native::NativeBackend, ModelExec};
 use admm_nn::coordinator::{
     pipeline, AdmmConfig, PipelineConfig, TrainConfig, Trainer,
 };
@@ -23,7 +27,8 @@ use admm_nn::util::cli::Args;
 const USAGE: &str = "\
 admm-nn — ADMM-NN algorithm-hardware co-design framework
 
-USAGE: admm-nn [--artifacts DIR] [--results DIR] <command> [options]
+USAGE: admm-nn [--artifacts DIR] [--results DIR] [--backend auto|native|pjrt]
+               <command> [options]
 
 COMMANDS:
   train       --model M --steps N [--lr F] [--seed N]
@@ -47,6 +52,7 @@ fn run() -> admm_nn::Result<()> {
     let mut args = Args::parse(std::env::args().skip(1));
     let artifacts = args.opt_str("artifacts").unwrap_or_else(|| "artifacts".into());
     let results = args.opt_str("results").unwrap_or_else(|| "results".into());
+    let backend = args.opt_str("backend").unwrap_or_else(|| "auto".into());
     let cmd = match args.next_positional() {
         Some(c) => c,
         None => {
@@ -63,12 +69,22 @@ fn run() -> admm_nn::Result<()> {
             let seed: u64 = args.opt_parse("seed")?.unwrap_or(0);
             args.finish()?;
 
-            let rt = Runtime::load(&artifacts)?;
-            eprintln!("platform: {}", rt.platform());
-            let sess = rt.model(&model)?;
-            let ds = data::for_input_shape(&sess.entry.input_shape);
-            let mut st = TrainState::init(&sess.entry, seed);
-            let mut trainer = Trainer::new(&sess, ds.as_ref());
+            let rt;
+            let pjrt_sess;
+            let native_sess;
+            let sess: &dyn ModelExec = if use_native(&backend, &artifacts)? {
+                eprintln!("backend: native (host-side)");
+                native_sess = NativeBackend::open(&model)?;
+                &native_sess
+            } else {
+                rt = Runtime::load(&artifacts)?;
+                eprintln!("backend: pjrt, platform {}", rt.platform());
+                pjrt_sess = rt.model(&model)?;
+                &pjrt_sess
+            };
+            let ds = data::for_input_shape(&sess.entry().input_shape);
+            let mut st = TrainState::init(sess.entry(), seed);
+            let mut trainer = Trainer::new(sess, ds.as_ref());
             let log = trainer.run(&mut st, &TrainConfig {
                 steps,
                 lr,
@@ -96,19 +112,30 @@ fn run() -> admm_nn::Result<()> {
             let save = args.opt_str("save");
             args.finish()?;
 
-            let rt = Runtime::load(&artifacts)?;
-            let sess = rt.model(&model)?;
-            let ds = data::for_input_shape(&sess.entry.input_shape);
-            let mut st = TrainState::init(&sess.entry, seed);
+            let rt;
+            let pjrt_sess;
+            let native_sess;
+            let sess: &dyn ModelExec = if use_native(&backend, &artifacts)? {
+                eprintln!("backend: native (host-side)");
+                native_sess = NativeBackend::open(&model)?;
+                &native_sess
+            } else {
+                rt = Runtime::load(&artifacts)?;
+                eprintln!("backend: pjrt, platform {}", rt.platform());
+                pjrt_sess = rt.model(&model)?;
+                &pjrt_sess
+            };
+            let ds = data::for_input_shape(&sess.entry().input_shape);
+            let mut st = TrainState::init(sess.entry(), seed);
             eprintln!("[1/2] dense pretraining ({pretrain_steps} steps)");
-            let mut trainer = Trainer::new(&sess, ds.as_ref());
+            let mut trainer = Trainer::new(sess, ds.as_ref());
             trainer.run(&mut st, &TrainConfig {
                 steps: pretrain_steps,
                 verbose: true,
                 ..Default::default()
             })?;
             eprintln!("[2/2] joint ADMM compression (target {prune_ratio}x)");
-            let n_w = sess.entry.n_weights();
+            let n_w = sess.entry().n_weights();
             let keep = vec![1.0 / prune_ratio; n_w];
             let t0 = std::time::Instant::now();
             let cfg = PipelineConfig {
@@ -124,8 +151,8 @@ fn run() -> admm_nn::Result<()> {
                 verbose: true,
                 ..Default::default()
             };
-            let rep = pipeline::run_pipeline(&sess, ds.as_ref(), &mut st, &cfg)?;
-            let size = rep.model.size_report(sess.entry.total_weight_count() as u64);
+            let rep = pipeline::run_pipeline(sess, ds.as_ref(), &mut st, &cfg)?;
+            let size = rep.model.size_report(sess.entry().total_weight_count() as u64);
             println!(
                 "dense_acc={:.4} pruned_acc={:.4} final_acc={:.4} prune={:.1}x \
                  data={} ({:.0}x) model={} ({:.0}x)",
@@ -204,4 +231,17 @@ fn run() -> admm_nn::Result<()> {
         }
     }
     Ok(())
+}
+
+/// Backend selection: `native` / `pjrt` explicitly, `auto` picks pjrt
+/// only when an artifact manifest is present.
+fn use_native(backend: &str, artifacts: &str) -> admm_nn::Result<bool> {
+    match backend {
+        "native" => Ok(true),
+        "pjrt" => Ok(false),
+        "auto" => Ok(!std::path::Path::new(artifacts).join("manifest.json").exists()),
+        other => Err(anyhow::anyhow!(
+            "unknown --backend {other:?} (want auto, native, or pjrt)"
+        )),
+    }
 }

@@ -24,119 +24,10 @@ use super::manifest::ModelEntry;
 use super::{lit_f32, lit_i32, lit_to_scalar, lit_to_tensor, tensor_to_lit, Runtime};
 use crate::data::Batch;
 use crate::metrics::EvalStats;
-use crate::tensor::Tensor;
-use crate::util::Rng;
 
-/// Hyper-parameters of a training phase.
-#[derive(Clone, Copy, Debug)]
-pub struct Hyper {
-    pub lr: f32,
-    /// L1 subgradient coefficient (Wen-style baseline; 0 otherwise).
-    pub l1_lambda: f32,
-}
-
-impl Default for Hyper {
-    fn default() -> Self {
-        Hyper { lr: 1e-3, l1_lambda: 0.0 }
-    }
-}
-
-/// Host-side training state: everything the train artifact reads/writes.
-#[derive(Clone, Debug)]
-pub struct TrainState {
-    /// All parameters (weights + biases), manifest order.
-    pub params: Vec<Tensor>,
-    pub adam_m: Vec<Tensor>,
-    pub adam_v: Vec<Tensor>,
-    /// 1-based ADAM step counter (f32 input of the artifact).
-    pub step: f32,
-    /// Per weight-tensor (manifest weight order):
-    pub masks: Vec<Tensor>,
-    pub zs: Vec<Tensor>,
-    pub us: Vec<Tensor>,
-    pub rhos: Vec<f32>,
-}
-
-impl TrainState {
-    /// Fresh state: He-normal weights / zero biases (same init family as
-    /// the python tests), ones masks, zero Z/U, zero ρ.
-    pub fn init(entry: &ModelEntry, seed: u64) -> Self {
-        let mut rng = Rng::new(seed);
-        let mut params = Vec::with_capacity(entry.params.len());
-        for p in &entry.params {
-            let mut stream = rng.fork(p.numel() as u64);
-            let data = if p.is_weight() {
-                stream.he_normal(p.numel(), p.fan_in)
-            } else {
-                vec![0.0; p.numel()]
-            };
-            params.push(Tensor::new(p.shape.clone(), data));
-        }
-        let weights: Vec<&crate::runtime::ParamEntry> =
-            entry.weight_params().collect();
-        TrainState {
-            params,
-            adam_m: entry.params.iter()
-                .map(|p| Tensor::zeros(p.shape.clone())).collect(),
-            adam_v: entry.params.iter()
-                .map(|p| Tensor::zeros(p.shape.clone())).collect(),
-            step: 1.0,
-            masks: weights.iter().map(|p| Tensor::ones(p.shape.clone())).collect(),
-            zs: weights.iter().map(|p| Tensor::zeros(p.shape.clone())).collect(),
-            us: weights.iter().map(|p| Tensor::zeros(p.shape.clone())).collect(),
-            rhos: vec![0.0; weights.len()],
-        }
-    }
-
-    /// Reset the ADAM moments (paper restarts retraining phases fresh).
-    pub fn reset_adam(&mut self) {
-        for t in self.adam_m.iter_mut().chain(self.adam_v.iter_mut()) {
-            for x in t.data_mut() {
-                *x = 0.0;
-            }
-        }
-        self.step = 1.0;
-    }
-
-    /// Indices into `params` of the weight tensors (manifest order).
-    pub fn weight_indices(entry: &ModelEntry) -> Vec<usize> {
-        entry
-            .params
-            .iter()
-            .enumerate()
-            .filter(|(_, p)| p.is_weight())
-            .map(|(i, _)| i)
-            .collect()
-    }
-
-    /// Mutable references to the weight tensors of `params`, in manifest
-    /// weight order (`wi` is [`TrainState::weight_indices`], which is
-    /// ascending) — for zipping against the per-layer masks/Z/U vectors.
-    pub fn weight_tensors_mut<'a>(
-        params: &'a mut [Tensor],
-        wi: &[usize],
-    ) -> Vec<&'a mut Tensor> {
-        let mut is_weight = vec![false; params.len()];
-        for &pi in wi {
-            is_weight[pi] = true;
-        }
-        params
-            .iter_mut()
-            .enumerate()
-            .filter(|(i, _)| is_weight[*i])
-            .map(|(_, t)| t)
-            .collect()
-    }
-}
-
-/// Per-step scalars returned by the train artifact.
-#[derive(Clone, Copy, Debug)]
-pub struct StepStats {
-    /// Data loss + ADMM penalty.
-    pub loss: f32,
-    /// Batch accuracy.
-    pub acc: f32,
-}
+// The training-state contract lives with the backend seam now; re-export
+// so `runtime::{Hyper, StepStats, TrainState}` keeps working.
+pub use crate::backend::{Hyper, StepStats, TrainState};
 
 /// One loaded model: compiled executables + marshalling.
 pub struct ModelSession<'r> {
@@ -309,5 +200,43 @@ impl<'r> ModelSession<'r> {
         args.push(lit_f32(x, &shape)?);
         let outs = self.rt.run(&exe, &args)?;
         super::lit_to_vec(&outs[0])
+    }
+}
+
+/// The PJRT session is one execution backend among others; the
+/// coordinator only ever sees this trait surface.
+impl<'r> crate::backend::ModelExec for ModelSession<'r> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    fn train_step(
+        &self,
+        st: &mut TrainState,
+        hyper: &Hyper,
+        batch: &Batch,
+    ) -> crate::Result<StepStats> {
+        ModelSession::train_step(self, st, hyper, batch)
+    }
+
+    fn evaluate(
+        &self,
+        st: &TrainState,
+        data: &dyn crate::data::Dataset,
+        n_batches: u64,
+    ) -> crate::Result<EvalStats> {
+        ModelSession::evaluate(self, st, data, n_batches)
+    }
+
+    fn infer(&self, st: &TrainState, x: &[f32], b: usize) -> crate::Result<Vec<f32>> {
+        ModelSession::infer(self, st, x, b)
+    }
+
+    fn invalidate_slow(&self) {
+        ModelSession::invalidate_slow(self)
     }
 }

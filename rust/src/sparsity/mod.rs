@@ -222,6 +222,89 @@ impl Csr {
         self.codes.len()
     }
 
+    /// Check the structural invariants [`Csr::encode`] guarantees — the
+    /// Csr twin of [`RelIndex::validate`], gating matrices built from
+    /// untrusted bytes before [`Csr::decode`] or a sparse GEMM walks
+    /// them (either would index out of bounds on a corrupt stream).
+    /// Verified:
+    ///
+    /// * `row_ptr` has exactly `rows + 1` entries, starts at 0, and is
+    ///   monotonically non-decreasing;
+    /// * the final row pointer equals both `col_idx.len()` and
+    ///   `codes.len()` (the nnz accounting agrees with the payload);
+    /// * every column index is `< cols`, and columns are strictly
+    ///   increasing within each row (encode scans columns in order);
+    /// * every code is nonzero (a zero is *absent*, never stored) with
+    ///   `|code| ≤ max_code` (2^(bits−1) for a `bits`-wide quantizer).
+    ///
+    /// Returns a description of the first violation, so callers can
+    /// wrap it in their own error type.
+    pub fn validate(&self, max_code: i32) -> Result<(), String> {
+        if self.row_ptr.len() != self.rows + 1 {
+            return Err(format!(
+                "row_ptr has {} entries for {} rows (want rows + 1)",
+                self.row_ptr.len(),
+                self.rows
+            ));
+        }
+        if self.row_ptr[0] != 0 {
+            return Err(format!("row_ptr starts at {} (want 0)", self.row_ptr[0]));
+        }
+        for (r, win) in self.row_ptr.windows(2).enumerate() {
+            if win[0] > win[1] {
+                return Err(format!(
+                    "row_ptr not monotone at row {r}: {} > {}",
+                    win[0], win[1]
+                ));
+            }
+        }
+        let nnz = *self.row_ptr.last().unwrap() as usize;
+        if nnz != self.col_idx.len() {
+            return Err(format!(
+                "row_ptr ends at {nnz} but col_idx has {} entries",
+                self.col_idx.len()
+            ));
+        }
+        if nnz != self.codes.len() {
+            return Err(format!(
+                "row_ptr ends at {nnz} but codes has {} entries",
+                self.codes.len()
+            ));
+        }
+        for r in 0..self.rows {
+            let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            let mut prev: Option<u32> = None;
+            for i in s..e {
+                let col = self.col_idx[i];
+                if col as usize >= self.cols {
+                    return Err(format!(
+                        "row {r}: column {col} outside 0..{}",
+                        self.cols
+                    ));
+                }
+                if let Some(p) = prev {
+                    if col <= p {
+                        return Err(format!(
+                            "row {r}: columns not strictly increasing \
+                             ({p} then {col})"
+                        ));
+                    }
+                }
+                prev = Some(col);
+                let code = self.codes[i];
+                if code == 0 {
+                    return Err(format!("row {r}: stored entry with code 0"));
+                }
+                if code.unsigned_abs() > max_code.unsigned_abs() {
+                    return Err(format!(
+                        "row {r}: code {code} outside ±{max_code}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Storage bits: weights + column indices (⌈log₂ cols⌉ each) + row
     /// pointers (32-bit each).
     pub fn total_bits(&self, weight_bits: u32) -> u64 {
@@ -507,6 +590,128 @@ mod tests {
         let csr = Csr::encode(&[1, 0, 0, 2, 0, 3], 2, 3);
         // 3 nnz * (4 weight bits + 2 col bits) + 3 row ptrs * 32
         assert_eq!(csr.total_bits(4), 3 * 6 + 96);
+    }
+
+    #[test]
+    fn csr_validate_accepts_every_encoded_matrix() {
+        for keep in [0.9, 0.5, 0.1, 0.01, 0.0] {
+            let codes = random_codes(64 * 50, keep, 23);
+            let csr = Csr::encode(&codes, 64, 50);
+            csr.validate(4)
+                .unwrap_or_else(|why| panic!("keep={keep}: {why}"));
+        }
+        // degenerate shapes
+        Csr::encode(&[], 0, 0).validate(4).unwrap();
+        Csr::encode(&[0, 0, 0], 3, 1).validate(4).unwrap();
+        Csr::encode(&[1], 1, 1).validate(4).unwrap();
+    }
+
+    #[test]
+    fn csr_validate_rejects_corrupt_matrices() {
+        let ok = Csr::encode(&[1, 0, -2, 0, 3, 0], 2, 3);
+        ok.validate(4).unwrap();
+        let truncate_codes = {
+            let mut c = ok.clone();
+            c.codes.pop();
+            c
+        };
+        let truncate_cols = {
+            let mut c = ok.clone();
+            c.col_idx.pop();
+            c
+        };
+        let truncate_row_ptr = {
+            let mut c = ok.clone();
+            c.row_ptr.pop();
+            c
+        };
+        let cases: Vec<(&str, Csr)> = vec![
+            ("truncated codes", truncate_codes),
+            ("truncated col_idx", truncate_cols),
+            ("truncated row_ptr", truncate_row_ptr),
+            (
+                "row_ptr not starting at 0",
+                Csr { rows: 1, cols: 3, row_ptr: vec![1, 1],
+                      col_idx: vec![], codes: vec![] },
+            ),
+            (
+                "row_ptr decreasing",
+                Csr { rows: 2, cols: 3, row_ptr: vec![0, 2, 1],
+                      col_idx: vec![0, 1], codes: vec![1, 1] },
+            ),
+            (
+                "row_ptr overruns payload",
+                Csr { rows: 1, cols: 3, row_ptr: vec![0, 9],
+                      col_idx: vec![0], codes: vec![1] },
+            ),
+            (
+                "column out of bounds",
+                Csr { rows: 1, cols: 3, row_ptr: vec![0, 1],
+                      col_idx: vec![3], codes: vec![1] },
+            ),
+            (
+                "columns not increasing",
+                Csr { rows: 1, cols: 3, row_ptr: vec![0, 2],
+                      col_idx: vec![1, 1], codes: vec![1, 2] },
+            ),
+            (
+                "stored zero code",
+                Csr { rows: 1, cols: 3, row_ptr: vec![0, 1],
+                      col_idx: vec![0], codes: vec![0] },
+            ),
+            (
+                "code above max",
+                Csr { rows: 1, cols: 3, row_ptr: vec![0, 1],
+                      col_idx: vec![0], codes: vec![9] },
+            ),
+            (
+                "code i32::MIN",
+                Csr { rows: 1, cols: 3, row_ptr: vec![0, 1],
+                      col_idx: vec![0], codes: vec![i32::MIN] },
+            ),
+        ];
+        for (what, csr) in cases {
+            assert!(csr.validate(4).is_err(), "{what} accepted");
+        }
+    }
+
+    #[test]
+    fn csr_validate_gates_decode_under_bit_flips() {
+        // Flip bits in every structural field of a valid CSR: validate
+        // must either reject the mutation or the matrix must decode
+        // without panicking to the right length — the same guarantee
+        // RelIndex::validate gives the checkpoint loader.
+        let codes = random_codes(40 * 12, 0.3, 31);
+        let base = Csr::encode(&codes, 40, 12);
+        base.validate(4).unwrap();
+        let mut cases: Vec<Csr> = Vec::new();
+        for pos in 0..base.row_ptr.len() {
+            for bit in [0u32, 3, 16, 31] {
+                let mut c = base.clone();
+                c.row_ptr[pos] ^= 1 << bit;
+                cases.push(c);
+            }
+        }
+        for pos in 0..base.col_idx.len().min(64) {
+            for bit in [0u32, 2, 30] {
+                let mut c = base.clone();
+                c.col_idx[pos] ^= 1 << bit;
+                cases.push(c);
+            }
+        }
+        for pos in 0..base.codes.len().min(64) {
+            for bit in [0u32, 2, 31] {
+                let mut c = base.clone();
+                c.codes[pos] ^= 1 << bit;
+                cases.push(c);
+            }
+        }
+        for c in cases {
+            if c.validate(4).is_ok() {
+                let decoded = c.decode();
+                assert_eq!(decoded.len(), c.rows * c.cols);
+            }
+        }
     }
 
     #[test]

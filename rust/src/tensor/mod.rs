@@ -1,12 +1,21 @@
-//! Minimal host-side tensor: flat `f32` storage + shape.
+//! Minimal host-side tensor: flat `f32` storage + shape, plus the dense
+//! compute kernels the native execution backend runs on.
 //!
 //! The coordinator keeps master copies of every ADMM variable (W, Z, U,
-//! ADAM moments, masks) host-side and round-trips them through PJRT
-//! literals each step. All heavy math runs in the AOT artifacts; this type
-//! only needs cheap elementwise ops, reductions, and a reference matmul
-//! for cross-checks, so we avoid an ndarray dependency entirely.
+//! ADAM moments, masks) host-side. On the PJRT backend all heavy math
+//! runs in the AOT artifacts and this module only supplies cheap
+//! elementwise ops and reductions; the native backend
+//! ([`crate::backend::native`]) additionally uses the free-function
+//! kernels here — the [`gemm`]/[`gemm_tn`]/[`gemm_nt`] family (each with
+//! a `_par` row-blocked variant over the [`ThreadPool`]) and the
+//! [`im2col`]/[`col2im`] patch transforms that turn stride-1
+//! convolutions into GEMMs. Parallel variants are bit-identical to the
+//! serial kernels: rows are independent and every dot product
+//! accumulates in the same order regardless of the block partition.
 
 use std::fmt;
+
+use crate::util::ThreadPool;
 
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
@@ -236,6 +245,276 @@ impl Tensor {
     }
 }
 
+// -- dense kernels (the native backend's compute substrate) ----------------
+
+/// `out = a · b` for row-major `a` (m×k), `b` (k×n), `out` (m×n).
+/// Overwrites `out`. Skips exact-zero `a` entries (sparse activations /
+/// masked weights cost nothing), like [`Tensor::matmul`].
+pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "gemm: a length");
+    assert_eq!(b.len(), k * n, "gemm: b length");
+    assert_eq!(out.len(), m * n, "gemm: out length");
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        orow.fill(0.0);
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// How many row blocks a kernel of `rows` rows costing `cost` total
+/// flops may split into right now (1 = run serial).
+fn row_blocks(pool: &ThreadPool, rows: usize, cost: usize) -> usize {
+    if rows <= 1 {
+        return 1;
+    }
+    pool.plan_split(cost).min(rows).max(1)
+}
+
+/// [`gemm`] with the m rows split into contiguous blocks across the
+/// pool. Bit-identical to the serial kernel (rows are independent; the
+/// k-accumulation order per output element never changes).
+pub fn gemm_par(
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let blocks = row_blocks(pool, m, m.saturating_mul(k).saturating_mul(n));
+    if blocks <= 1 {
+        return gemm(a, b, m, k, n, out);
+    }
+    assert_eq!(a.len(), m * k, "gemm_par: a length");
+    assert_eq!(out.len(), m * n, "gemm_par: out length");
+    let rows_per = (m + blocks - 1) / blocks;
+    pool.par_chunks_mut(out, rows_per * n, |bi, oc| {
+        let r0 = bi * rows_per;
+        let rows = oc.len() / n;
+        gemm(&a[r0 * k..(r0 + rows) * k], b, rows, k, n, oc);
+    });
+}
+
+/// `out = aᵀ · b` for row-major `a` (m×k), `b` (m×n), `out` (k×n) — the
+/// weight-gradient shape `dW = xᵀ·dy`. Overwrites `out`; accumulation
+/// over the m dimension runs in ascending row order.
+pub fn gemm_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "gemm_tn: a length");
+    assert_eq!(b.len(), m * n, "gemm_tn: b length");
+    assert_eq!(out.len(), k * n, "gemm_tn: out length");
+    out.fill(0.0);
+    for bi in 0..m {
+        let arow = &a[bi * k..(bi + 1) * k];
+        let brow = &b[bi * n..(bi + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// [`gemm_tn`] with the k *output* rows split across the pool. Each
+/// block accumulates its rows over the full m range in the same
+/// ascending order as the serial kernel — bit-identical results.
+pub fn gemm_tn_par(
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let blocks = row_blocks(pool, k, m.saturating_mul(k).saturating_mul(n));
+    if blocks <= 1 {
+        return gemm_tn(a, b, m, k, n, out);
+    }
+    assert_eq!(a.len(), m * k, "gemm_tn_par: a length");
+    assert_eq!(b.len(), m * n, "gemm_tn_par: b length");
+    assert_eq!(out.len(), k * n, "gemm_tn_par: out length");
+    let rows_per = (k + blocks - 1) / blocks;
+    pool.par_chunks_mut(out, rows_per * n, |bi, oc| {
+        let p0 = bi * rows_per;
+        oc.fill(0.0);
+        for b2 in 0..m {
+            let arow = &a[b2 * k..(b2 + 1) * k];
+            let brow = &b[b2 * n..(b2 + 1) * n];
+            for (pi, orow) in oc.chunks_mut(n).enumerate() {
+                let av = arow[p0 + pi];
+                if av == 0.0 {
+                    continue;
+                }
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    });
+}
+
+/// `out = a · bᵀ` for row-major `a` (m×n), `b` (k×n), `out` (m×k) — the
+/// input-gradient shape `dx = dy·Wᵀ`. Each output element is one dot
+/// product of two contiguous rows.
+pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * n, "gemm_nt: a length");
+    assert_eq!(b.len(), k * n, "gemm_nt: b length");
+    assert_eq!(out.len(), m * k, "gemm_nt: out length");
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * n..(j + 1) * n];
+            let mut s = 0.0f32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                s += x * y;
+            }
+            *o = s;
+        }
+    }
+}
+
+/// [`gemm_nt`] with the m rows split across the pool (bit-identical).
+pub fn gemm_nt_par(
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    let blocks = row_blocks(pool, m, m.saturating_mul(n).saturating_mul(k));
+    if blocks <= 1 {
+        return gemm_nt(a, b, m, n, k, out);
+    }
+    assert_eq!(a.len(), m * n, "gemm_nt_par: a length");
+    assert_eq!(out.len(), m * k, "gemm_nt_par: out length");
+    let rows_per = (m + blocks - 1) / blocks;
+    pool.par_chunks_mut(out, rows_per * k, |bi, oc| {
+        let r0 = bi * rows_per;
+        let rows = oc.len() / k;
+        gemm_nt(&a[r0 * n..(r0 + rows) * n], b, rows, n, k, oc);
+    });
+}
+
+/// Lower a stride-1 NHWC convolution input to a patch matrix: `x` is
+/// (bsz, h, w, c) flat; `out` becomes (bsz·oh·ow, kh·kw·c) with patch
+/// elements in (ky, kx, channel) order — exactly the row-major layout of
+/// a flattened HWIO filter, so `conv = im2col × w_flat`. Out-of-range
+/// taps (padding) contribute zeros. `pt`/`pl` are the top/left pads;
+/// `oh = h + pt + pb − kh + 1` is the caller's (validated) geometry.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[f32],
+    bsz: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    pt: usize,
+    pl: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(x.len(), bsz * h * w * c, "im2col: input length");
+    let patch = kh * kw * c;
+    out.clear();
+    out.resize(bsz * oh * ow * patch, 0.0);
+    for b in 0..bsz {
+        let xb = &x[b * h * w * c..(b + 1) * h * w * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row =
+                    &mut out[((b * oh + oy) * ow + ox) * patch..][..patch];
+                let mut idx = 0;
+                for ky in 0..kh {
+                    let iy = (oy + ky) as isize - pt as isize;
+                    for kx in 0..kw {
+                        let ix = (ox + kx) as isize - pl as isize;
+                        if iy >= 0
+                            && (iy as usize) < h
+                            && ix >= 0
+                            && (ix as usize) < w
+                        {
+                            let src = (iy as usize * w + ix as usize) * c;
+                            row[idx..idx + c]
+                                .copy_from_slice(&xb[src..src + c]);
+                        }
+                        idx += c;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Adjoint of [`im2col`]: scatter-add a patch-matrix cotangent back to
+/// the (bsz, h, w, c) input layout — `⟨im2col(x), u⟩ = ⟨x, col2im(u)⟩`
+/// (property-tested). Overwrites `out`.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im(
+    cols: &[f32],
+    bsz: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    pt: usize,
+    pl: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut Vec<f32>,
+) {
+    let patch = kh * kw * c;
+    assert_eq!(cols.len(), bsz * oh * ow * patch, "col2im: cols length");
+    out.clear();
+    out.resize(bsz * h * w * c, 0.0);
+    for b in 0..bsz {
+        let ob = &mut out[b * h * w * c..(b + 1) * h * w * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = &cols[((b * oh + oy) * ow + ox) * patch..][..patch];
+                let mut idx = 0;
+                for ky in 0..kh {
+                    let iy = (oy + ky) as isize - pt as isize;
+                    for kx in 0..kw {
+                        let ix = (ox + kx) as isize - pl as isize;
+                        if iy >= 0
+                            && (iy as usize) < h
+                            && ix >= 0
+                            && (ix as usize) < w
+                        {
+                            let dst = (iy as usize * w + ix as usize) * c;
+                            for ch in 0..c {
+                                ob[dst + ch] += row[idx + ch];
+                            }
+                        }
+                        idx += c;
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -332,5 +611,159 @@ mod tests {
         let a = Tensor::new(vec![1, 3], vec![0., 2., 0.]);
         let b = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
         assert_eq!(a.matmul(&b).data(), &[6., 8.]);
+    }
+
+    fn seq(n: usize, f: impl Fn(usize) -> f32) -> Vec<f32> {
+        (0..n).map(f).collect()
+    }
+
+    #[test]
+    fn gemm_matches_tensor_matmul() {
+        let (m, k, n) = (7, 5, 9);
+        let a = seq(m * k, |i| ((i * 37) % 11) as f32 - 5.0);
+        let b = seq(k * n, |i| ((i * 17) % 7) as f32 * 0.5 - 1.0);
+        let want = Tensor::new(vec![m, k], a.clone())
+            .matmul(&Tensor::new(vec![k, n], b.clone()));
+        let mut out = vec![0.0f32; m * n];
+        gemm(&a, &b, m, k, n, &mut out);
+        assert_eq!(out, want.data());
+    }
+
+    #[test]
+    fn gemm_par_variants_bit_identical_to_serial() {
+        let (m, k, n) = (64, 33, 21);
+        let a = seq(m * k, |i| ((i as f32) * 0.37).sin());
+        let b = seq(k * n, |i| ((i as f32) * 0.11).cos());
+        let pool = ThreadPool::new(4);
+
+        let mut s = vec![0.0f32; m * n];
+        gemm(&a, &b, m, k, n, &mut s);
+        let mut p = vec![1.0f32; m * n];
+        gemm_par(&pool, &a, &b, m, k, n, &mut p);
+        assert_eq!(s, p, "gemm_par");
+
+        let mut s = vec![0.0f32; k * n];
+        gemm_tn(&a, &seq(m * n, |i| (i as f32).sqrt()), m, k, n, &mut s);
+        let mut p = vec![1.0f32; k * n];
+        gemm_tn_par(&pool, &a, &seq(m * n, |i| (i as f32).sqrt()), m, k, n, &mut p);
+        assert_eq!(s, p, "gemm_tn_par");
+
+        let g = seq(m * n, |i| ((i as f32) * 0.2).sin());
+        let w = seq(k * n, |i| ((i as f32) * 0.3).cos());
+        let mut s = vec![0.0f32; m * k];
+        gemm_nt(&g, &w, m, n, k, &mut s);
+        let mut p = vec![1.0f32; m * k];
+        gemm_nt_par(&pool, &g, &w, m, n, k, &mut p);
+        assert_eq!(s, p, "gemm_nt_par");
+    }
+
+    #[test]
+    fn gemm_tn_is_transpose_of_gemm() {
+        // aᵀ·b computed via gemm on an explicitly transposed a.
+        let (m, k, n) = (6, 4, 5);
+        let a = seq(m * k, |i| (i as f32) * 0.3 - 2.0);
+        let b = seq(m * n, |i| (i as f32) * 0.1 - 1.0);
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for p in 0..k {
+                at[p * m + i] = a[i * k + p];
+            }
+        }
+        let mut want = vec![0.0f32; k * n];
+        gemm(&at, &b, k, m, n, &mut want);
+        let mut got = vec![0.0f32; k * n];
+        gemm_tn(&a, &b, m, k, n, &mut got);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gemm_nt_is_dot_of_rows() {
+        let (m, n, k) = (3, 4, 2);
+        let a = seq(m * n, |i| i as f32);
+        let b = seq(k * n, |i| (i as f32) + 1.0);
+        let mut out = vec![0.0f32; m * k];
+        gemm_nt(&a, &b, m, n, k, &mut out);
+        for i in 0..m {
+            for j in 0..k {
+                let want: f32 = (0..n)
+                    .map(|o| a[i * n + o] * b[j * n + o])
+                    .sum();
+                assert_eq!(out[i * k + j], want);
+            }
+        }
+    }
+
+    /// Reference conv: direct 6-nested-loop NHWC × HWIO convolution.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_naive(
+        x: &[f32], bsz: usize, h: usize, w: usize, c: usize,
+        wt: &[f32], kh: usize, kw: usize, cout: usize,
+        pt: usize, pl: usize, oh: usize, ow: usize,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; bsz * oh * ow * cout];
+        for b in 0..bsz {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for o in 0..cout {
+                        let mut s = 0.0f32;
+                        for ky in 0..kh {
+                            let iy = (oy + ky) as isize - pt as isize;
+                            if iy < 0 || iy as usize >= h { continue; }
+                            for kx in 0..kw {
+                                let ix = (ox + kx) as isize - pl as isize;
+                                if ix < 0 || ix as usize >= w { continue; }
+                                for ch in 0..c {
+                                    let xv = x[((b * h + iy as usize) * w
+                                        + ix as usize) * c + ch];
+                                    let wv = wt[((ky * kw + kx) * c + ch)
+                                        * cout + o];
+                                    s += xv * wv;
+                                }
+                            }
+                        }
+                        out[((b * oh + oy) * ow + ox) * cout + o] = s;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn im2col_gemm_matches_naive_conv() {
+        // SAME (3×3, pad 1) and VALID (5×5, pad 0) geometries.
+        for (kh, pt, same) in [(3usize, 1usize, true), (5, 0, false)] {
+            let (bsz, h, w, c, cout) = (2usize, 8usize, 8usize, 3usize, 4usize);
+            let (oh, ow) = if same { (h, w) } else { (h - kh + 1, w - kh + 1) };
+            let x = seq(bsz * h * w * c, |i| ((i as f32) * 0.7).sin());
+            let wt = seq(kh * kh * c * cout, |i| ((i as f32) * 0.13).cos() * 0.3);
+            let mut cols = Vec::new();
+            im2col(&x, bsz, h, w, c, kh, kh, pt, pt, oh, ow, &mut cols);
+            let mut out = vec![0.0f32; bsz * oh * ow * cout];
+            gemm(&cols, &wt, bsz * oh * ow, kh * kh * c, cout, &mut out);
+            let want = conv_naive(&x, bsz, h, w, c, &wt, kh, kh, cout, pt, pt, oh, ow);
+            for (a, b) in out.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "kh={kh}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // ⟨im2col(x), u⟩ == ⟨x, col2im(u)⟩ pins the backward pass to the
+        // forward exactly (any indexing mismatch breaks the identity).
+        let (bsz, h, w, c, kh, kw, pt, pl) = (2usize, 6, 5, 2, 3, 3, 1, 1);
+        let (oh, ow) = (h, w); // SAME
+        let x = seq(bsz * h * w * c, |i| ((i as f32) * 0.31).sin());
+        let u = seq(bsz * oh * ow * kh * kw * c, |i| ((i as f32) * 0.17).cos());
+        let mut cols = Vec::new();
+        im2col(&x, bsz, h, w, c, kh, kw, pt, pl, oh, ow, &mut cols);
+        let mut back = Vec::new();
+        col2im(&u, bsz, h, w, c, kh, kw, pt, pl, oh, ow, &mut back);
+        let lhs: f64 = cols.iter().zip(&u).map(|(&a, &b)| (a as f64) * b as f64).sum();
+        let rhs: f64 = x.iter().zip(&back).map(|(&a, &b)| (a as f64) * b as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
     }
 }

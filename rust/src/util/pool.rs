@@ -532,6 +532,39 @@ impl ThreadPool {
         self.run_scoped(tasks);
     }
 
+    /// Run `f(chunk_index, chunk)` over `dst.chunks_mut(chunk_len)`
+    /// across the pool — the generic sibling of
+    /// [`ThreadPool::par_chunk_zip`] for callers whose source data is
+    /// captured by `f` instead of split alongside `dst` (row-blocked
+    /// GEMM: each output chunk reads a *different* slice of the
+    /// inputs). Chunks are disjoint and `f` must fully overwrite its
+    /// chunk, so results cannot depend on execution order. The caller
+    /// picks `chunk_len` (e.g. rows-per-block × row width, so chunk
+    /// boundaries stay row-aligned) — typically derived from
+    /// [`ThreadPool::plan_split`], which also enforces the nested-
+    /// fan-out contract.
+    pub fn par_chunks_mut<T, F>(&self, dst: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk_len > 0, "par_chunks_mut: chunk_len must be positive");
+        if dst.is_empty() {
+            return;
+        }
+        if dst.len() <= chunk_len {
+            f(0, dst);
+            return;
+        }
+        let f = &f;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = dst
+            .chunks_mut(chunk_len)
+            .enumerate()
+            .map(|(b, ch)| boxed(move || f(b, ch)))
+            .collect();
+        self.run_scoped(tasks);
+    }
+
     /// Elementwise `dst[i] = f(src[i])` split into contiguous chunks.
     /// Bit-identical to the serial loop: `f` is pure per element, chunk
     /// boundaries never change any element's result, and no reduction
@@ -794,6 +827,30 @@ mod tests {
             |_, _, _| inner.plan_split(1_000_000),
         );
         assert_eq!(plans, vec![1, 1, 1], "foreign-pool split must be inline");
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_all_chunks_in_index_order() {
+        let pool = ThreadPool::new(4);
+        let mut dst = vec![0u32; 1000];
+        pool.par_chunks_mut(&mut dst, 99, |b, ch| {
+            for x in ch.iter_mut() {
+                *x = b as u32 + 1;
+            }
+        });
+        // every element written with its chunk's index
+        for (i, &x) in dst.iter().enumerate() {
+            assert_eq!(x, (i / 99) as u32 + 1, "element {i}");
+        }
+        // single chunk and empty slices run inline / not at all
+        let mut one = vec![0u8; 5];
+        pool.par_chunks_mut(&mut one, 10, |b, ch| {
+            assert_eq!(b, 0);
+            ch.fill(7);
+        });
+        assert_eq!(one, vec![7u8; 5]);
+        let mut empty: Vec<u8> = Vec::new();
+        pool.par_chunks_mut(&mut empty, 4, |_, _| panic!("called on empty"));
     }
 
     #[test]

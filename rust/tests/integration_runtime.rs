@@ -1,15 +1,19 @@
-//! Integration tests over the real PJRT runtime + AOT artifacts.
+//! Integration tests over the execution backends.
 //!
-//! These compile and execute the actual HLO artifacts (the Pallas kernels
-//! and the MLP training graph) and cross-validate them against the
-//! host-side rust implementations — the end-to-end correctness signal of
-//! the three-layer architecture. Requires `make artifacts`; every test
-//! skips cleanly when artifacts are absent so `cargo test` works on a
-//! fresh checkout.
+//! The PJRT half compiles and executes the actual HLO artifacts (the
+//! Pallas kernels and the MLP training graph) and cross-validates them
+//! against the host-side rust implementations; it requires
+//! `make artifacts` and skips cleanly when artifacts are absent. The
+//! native half runs the same behavioural contracts (loss decreases,
+//! masks freeze, ρ pulls toward Z, eval/infer agree, init is
+//! deterministic) on the pure-Rust backend, so the runtime seam is
+//! exercised on every checkout — including this offline one.
 
+use admm_nn::backend::native::{model_entry, NativeBackend};
+use admm_nn::backend::{Hyper, ModelExec, TrainState};
 use admm_nn::data::{self, Dataset, Split};
 use admm_nn::projection;
-use admm_nn::runtime::{Hyper, Runtime, TrainState};
+use admm_nn::runtime::Runtime;
 use admm_nn::util::Rng;
 
 fn runtime() -> Option<Runtime> {
@@ -27,6 +31,134 @@ fn manifest_covers_all_models() {
         assert!(rt.manifest().models.contains_key(m), "missing {m}");
     }
 }
+
+// ---------------------------------------------------------------------
+// native backend — always runs
+// ---------------------------------------------------------------------
+
+#[test]
+fn native_entries_cover_trainable_proxies() {
+    for m in ["mlp", "lenet5", "alexnet_proxy", "vgg_proxy"] {
+        let e = model_entry(m, 64, 256).expect(m);
+        assert!(e.n_weights() > 0, "{m}");
+        NativeBackend::from_entry(m, e).expect(m);
+    }
+}
+
+#[test]
+fn native_train_step_decreases_loss_and_respects_masks() {
+    let sess = NativeBackend::open_with_batches("mlp", 32, 64).unwrap();
+    let ds = data::for_input_shape(&sess.entry().input_shape);
+    let mut st = TrainState::init(sess.entry(), 0);
+
+    // prune half of fc1 and freeze the mask
+    let wi = TrainState::weight_indices(sess.entry());
+    let w0 = &st.params[wi[0]];
+    let pruned = projection::prune_topk(w0.data(), w0.len() / 2);
+    st.masks[0] = admm_nn::tensor::Tensor::new(
+        w0.shape().to_vec(),
+        projection::mask_of(&pruned),
+    );
+    st.params[wi[0]] =
+        admm_nn::tensor::Tensor::new(w0.shape().to_vec(), pruned);
+    sess.invalidate_slow();
+
+    let hyper = Hyper::default();
+    let batch = ds.batch(Split::Train, 0, 32);
+    let first = sess.train_step(&mut st, &hyper, &batch).unwrap();
+    let mut last = first;
+    for i in 1..15 {
+        let b = ds.batch(Split::Train, i, 32);
+        last = sess.train_step(&mut st, &hyper, &b).unwrap();
+    }
+    assert!(
+        last.loss < first.loss,
+        "loss did not decrease: {} -> {}",
+        first.loss,
+        last.loss
+    );
+    // masked positions stayed exactly zero through 15 ADAM steps
+    let w = &st.params[wi[0]];
+    let m = &st.masks[0];
+    for (x, mask) in w.data().iter().zip(m.data()) {
+        if *mask == 0.0 {
+            assert_eq!(*x, 0.0);
+        }
+    }
+}
+
+#[test]
+fn native_admm_penalty_pulls_toward_z() {
+    let sess = NativeBackend::open_with_batches("mlp", 32, 64).unwrap();
+    let ds = data::for_input_shape(&sess.entry().input_shape);
+    let hyper = Hyper::default();
+
+    // with huge rho and Z=0, weight norm must shrink faster than with rho=0
+    let norm_after = |rho: f32| -> f64 {
+        let mut st = TrainState::init(sess.entry(), 0);
+        for r in st.rhos.iter_mut() {
+            *r = rho;
+        }
+        sess.invalidate_slow();
+        for i in 0..10 {
+            let b = ds.batch(Split::Train, i, 32);
+            sess.train_step(&mut st, &hyper, &b).unwrap();
+        }
+        let wi = TrainState::weight_indices(sess.entry());
+        wi.iter().map(|&pi| st.params[pi].sq_norm()).sum()
+    };
+    let with = norm_after(5.0);
+    let without = norm_after(0.0);
+    assert!(with < without * 0.95, "rho pull missing: {with} vs {without}");
+}
+
+#[test]
+fn native_eval_and_infer_agree() {
+    let sess = NativeBackend::open_with_batches("mlp", 32, 128).unwrap();
+    let ds = data::for_input_shape(&sess.entry().input_shape);
+    let st = TrainState::init(sess.entry(), 7);
+
+    // batch-64 infer logits must produce the same #correct as evaluate
+    let eval_b = sess.entry().eval_batch;
+    let batch = ds.batch(Split::Test, 0, eval_b);
+    let eval = sess.evaluate(&st, ds.as_ref(), 1).unwrap();
+
+    let mut correct = 0u64;
+    let b64 = 64;
+    for chunk in 0..(eval_b / b64) {
+        let xs = &batch.x[chunk * b64 * 784..(chunk + 1) * b64 * 784];
+        let logits = sess.infer(&st, xs, b64).unwrap();
+        for i in 0..b64 {
+            let row = &logits[i * 10..(i + 1) * 10];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as i32;
+            if pred == batch.y[chunk * b64 + i] {
+                correct += 1;
+            }
+        }
+    }
+    assert_eq!(correct as f64, eval.correct, "eval/infer disagree");
+}
+
+#[test]
+fn native_train_state_init_is_deterministic() {
+    let entry = model_entry("mlp", 64, 256).unwrap();
+    let a = TrainState::init(&entry, 42);
+    let b = TrainState::init(&entry, 42);
+    let c = TrainState::init(&entry, 43);
+    for (x, y) in a.params.iter().zip(&b.params) {
+        assert_eq!(x.data(), y.data());
+    }
+    assert_ne!(a.params[0].data(), c.params[0].data());
+}
+
+// ---------------------------------------------------------------------
+// PJRT artifacts — skip without `make artifacts`
+// ---------------------------------------------------------------------
 
 #[test]
 fn prune_artifact_matches_host_projection() {
