@@ -8,7 +8,10 @@
 #                       proves the whole workflow actually executes
 #   make bench        — hot-path microbenchmarks with machine-readable
 #                       output (writes BENCH_hot_paths.json into the
-#                       repo root)
+#                       repo root; includes the serving-engine cases)
+#   make bench-serving— just the serving-engine throughput cases
+#                       (batched vs single-request dispatch at queue
+#                       depths 1/8/64), written to BENCH_serving.json
 #   make bench-report — run the benchmarks, then diff the fresh
 #                       BENCH_hot_paths.json against the committed
 #                       BENCH_baseline.json, printing per-path speedup
@@ -16,7 +19,7 @@
 #                       baseline and commits it (the trajectory anchor);
 #                       later runs never touch the committed file.
 
-.PHONY: verify bench bench-report
+.PHONY: verify bench bench-serving bench-report
 
 verify:
 	cargo build --release && cargo test -q
@@ -27,6 +30,9 @@ verify:
 # the JSON output to the repo root where bench-report expects it.
 bench:
 	BENCH_JSON_DIR=$(CURDIR) cargo bench --bench hot_paths -- --json
+
+bench-serving:
+	BENCH_JSON_DIR=$(CURDIR) BENCH_ONLY=serving cargo bench --bench hot_paths -- --json
 
 bench-report: bench
 	@cp BENCH_baseline.json .bench_baseline.before 2>/dev/null || true

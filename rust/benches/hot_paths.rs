@@ -88,6 +88,15 @@ where
 }
 
 fn main() {
+    // `make bench-serving` runs just the serving section into its own
+    // BENCH_serving.json (the full run keeps the serving cases inside
+    // BENCH_hot_paths.json, where bench-report diffs them).
+    if std::env::var("BENCH_ONLY").ok().as_deref() == Some("serving") {
+        let mut suite = BenchSuite::new("serving");
+        serving_benches(&mut suite);
+        suite.finish();
+        return;
+    }
     let mut suite = BenchSuite::new("hot_paths");
     println!("== L3 hot paths ==");
     let mut rng = Rng::new(42);
@@ -392,7 +401,7 @@ fn main() {
                 3,
                 15,
                 || {
-                    black_box(sp.infer(&batch.x, 64).unwrap().len());
+                    black_box(sp.infer_with(pool, &batch.x, 64).unwrap().len());
                 },
             );
             suite.speedup(
@@ -408,5 +417,87 @@ fn main() {
         }
     }
 
+    serving_benches(&mut suite);
+
     suite.finish();
+}
+
+/// Serving-engine throughput: micro-batched dispatch vs single-request
+/// dispatch (`max_batch = 1`) through the same `ServingEngine` API, at
+/// queue depths {1, 8, 64}. Depth 1 cannot coalesce — the batched
+/// engine still holds its 200µs batching window, so expect <1x there
+/// (that row prices the window, not a regression); the win grows with
+/// depth, and at 64 the batched engine runs one fanned-out sparse pass
+/// where single-request dispatch pays 64 scheduler round trips and 64
+/// narrow passes.
+fn serving_benches(suite: &mut BenchSuite) {
+    use admm_nn::backend::native::NativeBackend;
+    use admm_nn::backend::sparse_infer::{prune_quantize_package, SparseInfer};
+    use admm_nn::backend::TrainState;
+    use admm_nn::data::{self, Dataset, Split};
+    use admm_nn::serving::{
+        EngineConfig, InferRequest, ModelRegistry, ServingEngine,
+    };
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    println!("\n== serving engine (batched vs single-request dispatch) ==");
+    let nb = NativeBackend::open("mlp").expect("native backend");
+    let mut st = TrainState::init(nb.entry(), 13);
+    let model = prune_quantize_package(nb.entry(), "mlp", &mut st, 0.05, 4, 8);
+    let sp: Arc<SparseInfer> =
+        Arc::new(SparseInfer::new(&model, nb.entry()).expect("sparse form"));
+    let ds = data::for_input_shape(&nb.entry().input_shape);
+    let dim = sp.input_dim();
+    let batch = ds.batch(Split::Test, 0, 64);
+    let rows: Vec<Vec<f32>> = (0..64)
+        .map(|i| batch.x[i * dim..(i + 1) * dim].to_vec())
+        .collect();
+
+    let engine_with = |mb: usize| {
+        let mut reg = ModelRegistry::new();
+        reg.register_named("mlp".into(), sp.clone()).unwrap();
+        ServingEngine::new(reg, EngineConfig {
+            max_batch: mb,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 512,
+            pool: None,
+        })
+        .unwrap()
+    };
+    let single = engine_with(1);
+    let batched = engine_with(64);
+
+    for depth in [1usize, 8, 64] {
+        let run = |engine: &ServingEngine| {
+            let tickets: Vec<_> = (0..depth)
+                .map(|i| {
+                    engine
+                        .submit(InferRequest::new("mlp", rows[i].clone()))
+                        .expect("submit")
+                })
+                .collect();
+            let mut n = 0usize;
+            for t in tickets {
+                n += engine.wait(t).expect("wait").len();
+            }
+            black_box(n);
+        };
+        let s = suite.bench(
+            &format!("serving single-request dispatch depth={depth}"),
+            3,
+            15,
+            || run(&single),
+        );
+        let b = suite.bench(
+            &format!("serving batched dispatch depth={depth}"),
+            3,
+            15,
+            || run(&batched),
+        );
+        suite.speedup(&format!("serving micro-batching depth={depth}"), &s, &b);
+    }
+    for (name, stats) in batched.stats_all() {
+        println!("    batched engine [{name}]: {}", stats.summary());
+    }
 }

@@ -25,6 +25,12 @@
 //!   materialized on the fly), for measuring sparse-vs-dense throughput
 //!   against the [`crate::hwmodel`] predictions.
 //!
+//! Concurrent request-level serving does not talk to these types
+//! directly: [`crate::serving`] wraps both inference paths behind its
+//! `InferBackend` trait and schedules micro-batched passes over shared
+//! `Arc`'d models — new call sites should go through
+//! [`crate::serving::ServingEngine`].
+//!
 //! The two trainable backends are **not** bit-identical to each other
 //! (different kernels, different reduction orders); each is internally
 //! deterministic, and cross-backend checks are tolerance-based. The

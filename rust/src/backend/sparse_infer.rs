@@ -18,6 +18,16 @@
 //! Every CSR is [`Csr::validate`]d at construction (the Csr twin of the
 //! RelIndex load gate), so a corrupt checkpoint fails loud here instead
 //! of indexing out of bounds mid-inference.
+//!
+//! All five proxies serve through this path — the residual plan ops
+//! (skip save/add, strided projection shortcuts, global average pool)
+//! reuse the native backend's op interpreter semantics. Rows of a batch
+//! are computed independently with a fixed per-row accumulation order,
+//! so batched logits are **bit-identical** to single-example calls at
+//! any pool width; [`crate::serving::ServingEngine`] builds its
+//! micro-batching contract on exactly that invariant. Direct calls go
+//! through [`SparseInfer::infer_with`]; concurrent multi-model serving
+//! belongs behind the engine.
 
 use anyhow::anyhow;
 
@@ -25,6 +35,7 @@ use super::native::{self, Op};
 use super::TrainState;
 use crate::coordinator::checkpoint::{CompressedLayer, CompressedModel};
 use crate::runtime::manifest::ModelEntry;
+use crate::serving::ServingError;
 use crate::sparsity::Csr;
 use crate::tensor::{self, Tensor};
 use crate::util::ThreadPool;
@@ -190,16 +201,17 @@ impl SparseInfer {
 
     /// `out = x · W` where `x` is (rows_x × k) dense and `W` the layer's
     /// (k × n) CSR of level codes scaled by q on the fly. Row blocks of
-    /// `x` fan out across the pool; within a row, accumulation walks the
+    /// `x` fan out across `pool`; within a row, accumulation walks the
     /// CSR rows in ascending input-feature order, mirroring the dense
     /// GEMM's k-order (so sparse and dense agree to rounding, not just
-    /// to reordering tolerance).
-    fn spmm(&self, li: usize, x: &[f32], rows_x: usize, out: &mut [f32]) {
+    /// to reordering tolerance). Rows are computed independently, so a
+    /// row's result is bit-identical at any batch size and pool width —
+    /// the invariant the serving engine's micro-batching relies on.
+    fn spmm(&self, pool: &ThreadPool, li: usize, x: &[f32], rows_x: usize, out: &mut [f32]) {
         let layer = &self.layers[li];
         let (k, n) = (layer.csr.rows, layer.csr.cols);
         debug_assert_eq!(x.len(), rows_x * k);
         debug_assert_eq!(out.len(), rows_x * n);
-        let pool = ThreadPool::global();
         let blocks = pool
             .plan_split(rows_x.saturating_mul(layer.csr.nnz().max(1)))
             .min(rows_x.max(1));
@@ -226,23 +238,64 @@ impl SparseInfer {
         });
     }
 
-    /// Batch-`b` inference from the stored representation; returns flat
-    /// logits (b × n_classes, row-major).
-    pub fn infer(&self, x: &[f32], bsz: usize) -> crate::Result<Vec<f32>> {
-        let in_elems: usize = self.input_shape.iter().product();
-        if x.len() != bsz * in_elems {
-            return Err(anyhow!(
-                "input has {} values, model {} wants {bsz}×{in_elems}",
-                x.len(),
-                self.name
-            ));
+    /// Flat input features one example occupies.
+    pub fn input_dim(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Output classes per example (logits row width).
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    /// Validate a flat input buffer against the model's input dimension:
+    /// `bsz == 0` and length mismatches are rejected with a typed
+    /// [`ServingError`] before any compute runs (the seed's `infer`
+    /// silently accepted `bsz == 0` and produced an empty logits vec).
+    pub fn check_batch(&self, x_len: usize, bsz: usize) -> Result<(), ServingError> {
+        if bsz == 0 {
+            return Err(ServingError::EmptyBatch);
         }
+        let want = bsz.saturating_mul(self.input_dim());
+        if x_len != want {
+            return Err(ServingError::InputSizeMismatch {
+                model: self.name.clone(),
+                got: x_len,
+                want,
+            });
+        }
+        Ok(())
+    }
+
+    /// Batch-`b` inference from the stored representation on the global
+    /// pool. Thin legacy shim — go through
+    /// [`crate::serving::ServingEngine`] (shared models, micro-batching,
+    /// backpressure) or [`SparseInfer::infer_with`] instead.
+    #[deprecated(note = "serve through serving::ServingEngine, or use infer_with")]
+    pub fn infer(&self, x: &[f32], bsz: usize) -> crate::Result<Vec<f32>> {
+        self.infer_with(ThreadPool::global(), x, bsz)
+    }
+
+    /// Batch-`b` inference from the stored representation, fanning row
+    /// blocks across `pool`; returns flat logits (b × n_classes,
+    /// row-major). Each row of the result is bit-identical to a
+    /// single-example call at any pool width (rows are independent and
+    /// per-row accumulation order is fixed).
+    pub fn infer_with(
+        &self,
+        pool: &ThreadPool,
+        x: &[f32],
+        bsz: usize,
+    ) -> crate::Result<Vec<f32>> {
+        self.check_batch(x.len(), bsz)?;
         let (mut h, mut w, mut c) = match self.input_shape[..] {
             [d] => (1usize, 1usize, d),
             [ih, iw, ic] => (ih, iw, ic),
             ref other => return Err(anyhow!("unsupported input shape {other:?}")),
         };
         let mut cur: Vec<f32> = x.to_vec();
+        // Saved residual activations: (data, h, w, c) per open edge.
+        let mut skips: Vec<(Vec<f32>, usize, usize, usize)> = Vec::new();
         for op in &self.ops {
             match *op {
                 Op::Flatten => {
@@ -260,7 +313,7 @@ impl SparseInfer {
                         ));
                     }
                     let mut y = vec![0.0f32; bsz * dout];
-                    self.spmm(li, &cur, bsz, &mut y);
+                    self.spmm(pool, li, &cur, bsz, &mut y);
                     if relu {
                         for v in y.iter_mut() {
                             if *v < 0.0 {
@@ -271,32 +324,37 @@ impl SparseInfer {
                     cur = y;
                     (h, w, c) = (1, 1, dout);
                 }
-                Op::Conv { li, same, relu } => {
-                    let g = native::conv_geom(h, w, c, &self.wshapes[li], same)?;
-                    let patch = g.kh * g.kw * g.c;
-                    let rows = bsz * g.oh * g.ow;
-                    let mut cols = Vec::new();
-                    tensor::im2col(
-                        &cur, bsz, g.h, g.w, g.c, g.kh, g.kw, g.pt, g.pl,
-                        g.oh, g.ow, &mut cols,
-                    );
-                    debug_assert_eq!(patch, self.layers[li].csr.rows);
-                    let mut y = vec![0.0f32; rows * g.cout];
-                    self.spmm(li, &cols, rows, &mut y);
-                    if relu {
-                        for v in y.iter_mut() {
-                            if *v < 0.0 {
-                                *v = 0.0;
-                            }
-                        }
-                    }
+                Op::Conv { li, same, relu, stride } => {
+                    let (y, oh, ow, cout) =
+                        self.conv_spmm(pool, li, &cur, bsz, h, w, c, same, stride, relu)?;
                     cur = y;
-                    (h, w, c) = (g.oh, g.ow, g.cout);
+                    (h, w, c) = (oh, ow, cout);
                 }
                 Op::MaxPool2 => {
                     let (y, _) = native::maxpool2(&cur, bsz, h, w, c);
                     cur = y;
                     (h, w) = (h / 2, w / 2);
+                }
+                Op::SaveSkip => {
+                    skips.push((cur.clone(), h, w, c));
+                }
+                Op::SkipConv { li, stride } => {
+                    let (sx, sh, sw, scn) = skips
+                        .pop()
+                        .ok_or_else(|| anyhow!("SkipConv with no saved skip"))?;
+                    let (y, oh, ow, cout) =
+                        self.conv_spmm(pool, li, &sx, bsz, sh, sw, scn, true, stride, false)?;
+                    skips.push((y, oh, ow, cout));
+                }
+                Op::AddSkip => {
+                    let skip = skips
+                        .pop()
+                        .ok_or_else(|| anyhow!("AddSkip with no saved skip"))?;
+                    native::residual_join(&mut cur, skip, h, w, c)?;
+                }
+                Op::GlobalAvgPool => {
+                    cur = native::global_avg_pool(&cur, bsz, h, w, c);
+                    (h, w) = (1, 1);
                 }
             }
         }
@@ -308,6 +366,44 @@ impl SparseInfer {
             ));
         }
         Ok(cur)
+    }
+
+    /// One conv application through the sparse GEMM (shared by the main
+    /// path and the projection shortcut): im2col at the geometry's
+    /// stride, spmm against the layer's CSR, optional ReLU.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_spmm(
+        &self,
+        pool: &ThreadPool,
+        li: usize,
+        x: &[f32],
+        bsz: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        same: bool,
+        stride: usize,
+        relu: bool,
+    ) -> crate::Result<(Vec<f32>, usize, usize, usize)> {
+        let g = native::conv_geom(h, w, c, &self.wshapes[li], same, stride)?;
+        let patch = g.kh * g.kw * g.c;
+        let rows = bsz * g.oh * g.ow;
+        let mut cols = Vec::new();
+        tensor::im2col_str(
+            x, bsz, g.h, g.w, g.c, g.kh, g.kw, g.stride, g.pt, g.pl,
+            g.oh, g.ow, &mut cols,
+        );
+        debug_assert_eq!(patch, self.layers[li].csr.rows);
+        let mut y = vec![0.0f32; rows * g.cout];
+        self.spmm(pool, li, &cols, rows, &mut y);
+        if relu {
+            for v in y.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        Ok((y, g.oh, g.ow, g.cout))
     }
 }
 
@@ -331,11 +427,13 @@ mod tests {
 
     /// Sparse inference from the stored codes must agree with dense
     /// masked inference on the decoded weights to ≤1e-4 per logit —
-    /// across a dense-only model and a conv model (every layer shape
-    /// the proxies use).
+    /// across a dense-only model, a conv model, and the residual model
+    /// (every op the proxies use, including skip adds, the strided
+    /// projection shortcut, and the GAP head).
     #[test]
     fn sparse_agrees_with_dense_masked_inference() {
-        for (name, keep) in [("mlp", 0.1), ("lenet5", 0.08)] {
+        let pool = ThreadPool::global();
+        for (name, keep) in [("mlp", 0.1), ("lenet5", 0.08), ("resnet_proxy", 0.3)] {
             let nb = NativeBackend::open_with_batches(name, 8, 8).unwrap();
             let mut st = TrainState::init(nb.entry(), 11);
             let model = packaged(&nb, &mut st, keep, 4);
@@ -345,7 +443,7 @@ mod tests {
             let ds = crate::data::for_input_shape(&nb.entry().input_shape);
             let batch = ds.batch(Split::Test, 1, 8);
             let dense = nb.infer(&st, &batch.x, 8).unwrap();
-            let sparse = sp.infer(&batch.x, 8).unwrap();
+            let sparse = sp.infer_with(pool, &batch.x, 8).unwrap();
             assert_eq!(dense.len(), sparse.len());
             for (i, (a, b)) in dense.iter().zip(&sparse).enumerate() {
                 assert!(
@@ -371,11 +469,65 @@ mod tests {
     }
 
     #[test]
-    fn sparse_infer_checks_input_size() {
+    fn sparse_infer_rejects_bad_batches_with_typed_errors() {
         let nb = NativeBackend::open_with_batches("mlp", 8, 8).unwrap();
         let mut st = TrainState::init(nb.entry(), 2);
         let model = packaged(&nb, &mut st, 0.2, 4);
         let sp = SparseInfer::new(&model, nb.entry()).unwrap();
-        assert!(sp.infer(&[0.0; 7], 1).is_err());
+
+        // typed gate: wrong length and the empty batch both refuse
+        assert_eq!(
+            sp.check_batch(7, 1),
+            Err(ServingError::InputSizeMismatch {
+                model: "mlp".into(),
+                got: 7,
+                want: 784,
+            })
+        );
+        assert_eq!(sp.check_batch(0, 0), Err(ServingError::EmptyBatch));
+        assert_eq!(sp.check_batch(784 * 2, 2), Ok(()));
+
+        // and the inference entry points enforce it
+        let pool = ThreadPool::global();
+        assert!(sp.infer_with(pool, &[0.0; 7], 1).is_err());
+        assert!(sp.infer_with(pool, &[], 0).is_err());
+        // the deprecated shim still routes through the same gate
+        #[allow(deprecated)]
+        {
+            assert!(sp.infer(&[], 0).is_err());
+        }
+    }
+
+    /// Bit-identical batching: each row of a batched sparse pass equals
+    /// the single-example pass for that row, at several pool widths —
+    /// the micro-batching scheduler's core assumption, tested at the
+    /// kernel level.
+    #[test]
+    fn batched_rows_match_single_example_rows_at_any_width() {
+        let nb = NativeBackend::open_with_batches("lenet5", 8, 8).unwrap();
+        let mut st = TrainState::init(nb.entry(), 3);
+        let model = packaged(&nb, &mut st, 0.1, 4);
+        let sp = SparseInfer::new(&model, nb.entry()).unwrap();
+        let ds = crate::data::for_input_shape(&nb.entry().input_shape);
+        let batch = ds.batch(Split::Test, 2, 6);
+        let dim = sp.input_dim();
+        let serial = ThreadPool::new(1);
+        let singles: Vec<Vec<f32>> = (0..6)
+            .map(|i| {
+                sp.infer_with(&serial, &batch.x[i * dim..(i + 1) * dim], 1)
+                    .unwrap()
+            })
+            .collect();
+        for width in [1usize, 2, 4, 8] {
+            let pool = ThreadPool::new(width);
+            let batched = sp.infer_with(&pool, &batch.x, 6).unwrap();
+            for (i, single) in singles.iter().enumerate() {
+                assert_eq!(
+                    &batched[i * 10..(i + 1) * 10],
+                    &single[..],
+                    "width {width} row {i} drifted"
+                );
+            }
+        }
     }
 }

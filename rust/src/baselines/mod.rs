@@ -11,13 +11,19 @@
 //! * [`quant_only`] — quantization without pruning (the binary/ternary
 //!   rows of Table 6): per-layer interval search at fixed bits, snap,
 //!   evaluate. No retraining (matching the table's "quant." baselines).
+//!
+//! [`served_accuracy`] is the serving-path twin of the accuracy probes:
+//! the same classification accuracy measured through the
+//! [`crate::serving::ServingEngine`] request API instead of a direct
+//! `evaluate` call (bit-identical by the engine's batching contract).
 
 use crate::backend::ModelExec;
 use crate::coordinator::trainer::{TrainConfig, Trainer};
-use crate::data::Dataset;
+use crate::data::{Dataset, Split};
 use crate::projection;
 use crate::quantize::search_interval;
 use crate::runtime::TrainState;
+use crate::serving::{InferRequest, ServingEngine};
 use crate::tensor::Tensor;
 
 /// Outcome of a baseline compression run.
@@ -152,6 +158,42 @@ pub fn one_shot_prune(
         overall_prune_ratio: overall(&layer_keep),
         layer_keep,
     })
+}
+
+/// Serving-path accuracy comparator: classify `n_batches` deterministic
+/// test batches *through a [`ServingEngine`]* (one request per batch,
+/// argmax over the returned logits) instead of through
+/// [`ModelExec::evaluate`]. Because engine batching is bit-identical to
+/// direct inference, this must agree exactly with `evaluate` on the
+/// same state — the integration tests pin that, making the engine a
+/// drop-in replacement for every accuracy probe above.
+pub fn served_accuracy(
+    engine: &ServingEngine,
+    model: &str,
+    data: &dyn Dataset,
+    n_batches: u64,
+    batch: usize,
+) -> crate::Result<f64> {
+    let mut correct = 0u64;
+    let mut total = 0u64;
+    for i in 0..n_batches {
+        let b = data.batch(Split::Test, i, batch);
+        let logits = engine.infer_sync(InferRequest::new(model, b.x.clone()))?;
+        let classes = logits.len() / batch;
+        for (row, &label) in logits.chunks(classes).zip(&b.y) {
+            let mut best = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            if best as i32 == label {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(correct as f64 / total.max(1) as f64)
 }
 
 /// Quantize the dense model (no pruning, no retrain) at fixed bits.

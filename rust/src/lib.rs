@@ -17,9 +17,20 @@
 //!   step / evaluate / infer / slow-state invalidation) plus the host
 //!   [`backend::TrainState`] contract; [`backend::native`] implements
 //!   it in pure Rust (im2col conv + GEMM, softmax-CE, fused ADAM+ADMM
-//!   update), and [`backend::sparse_infer`] serves inference directly
-//!   from the stored [`coordinator::CompressedModel`] representation
-//!   (RelIndex → CSR, levels materialized on the fly).
+//!   update — all five proxies, residual edges included), and
+//!   [`backend::sparse_infer`] serves inference directly from the
+//!   stored [`coordinator::CompressedModel`] representation (RelIndex →
+//!   CSR, levels materialized on the fly).
+//! * [`serving`] — the unified serving surface over both inference
+//!   paths: a [`serving::ServingEngine`] owns a
+//!   [`serving::ModelRegistry`] of named [`serving::InferBackend`]s
+//!   (each compressed model decoded once into shared immutable CSR
+//!   behind an `Arc`), takes [`serving::InferRequest`]s via
+//!   `submit`/`poll`/`infer_sync`, micro-batches same-model requests
+//!   into one pass on the thread pool (deterministic ticket→slot order
+//!   → per-request logits bit-identical to serial calls), applies
+//!   bounded-queue backpressure and deadlines, and surfaces per-model
+//!   [`metrics::ServingCounters`].
 //! * [`coordinator`] — the ADMM engine (W/Z/U state, subproblem scheduling,
 //!   dual updates), the joint prune→quantize pipeline (paper Fig. 2), and
 //!   the hardware-aware compression algorithm (paper Fig. 5) — all over
@@ -76,6 +87,7 @@ pub mod projection;
 pub mod quantize;
 pub mod report;
 pub mod runtime;
+pub mod serving;
 pub mod sparsity;
 pub mod tensor;
 pub mod util;

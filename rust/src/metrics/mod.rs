@@ -6,7 +6,9 @@
 //!   precision-scaled datapaths spend energy ∝ operand width).
 //!
 //! This module evaluates both, plus accuracy bookkeeping shared by the
-//! training drivers.
+//! training drivers and the per-model throughput/latency counters
+//! ([`ServingCounters`]) the serving engine maintains per registered
+//! model.
 
 use crate::models::profiles::PruneProfile;
 use crate::models::{LayerKind, NetDesc};
@@ -77,6 +79,79 @@ impl EvalStats {
             return 0.0;
         }
         self.loss_sum / self.samples as f64
+    }
+}
+
+/// Per-model serving counters maintained by
+/// [`crate::serving::ServingEngine`] — the throughput/latency side of
+/// the bookkeeping, next to the accuracy side above. All counts are
+/// cumulative since engine construction; snapshot via
+/// `ServingEngine::stats`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServingCounters {
+    /// Requests accepted into the queue.
+    pub submitted: u64,
+    /// Requests whose logits were delivered.
+    pub completed: u64,
+    /// Requests that reached the backend and failed there.
+    pub failed: u64,
+    /// Requests dropped at dispatch because their deadline had passed.
+    pub expired: u64,
+    /// Batched inference passes executed.
+    pub batches: u64,
+    /// Total examples (rows) inferred across all batches.
+    pub rows: u64,
+    /// Largest number of rows coalesced into one pass.
+    pub max_batch_rows: u64,
+    /// Σ (dispatch − submit) over every dispatched request (completed,
+    /// failed, or expired), seconds.
+    pub queue_s: f64,
+    /// Σ (completion − submit) over completed requests, seconds.
+    pub latency_s: f64,
+    /// Wall-clock spent inside the backend's batched passes, seconds.
+    pub infer_s: f64,
+}
+
+impl ServingCounters {
+    /// Mean end-to-end latency per completed request.
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        self.latency_s / self.completed as f64
+    }
+
+    /// Mean rows coalesced per batched pass — the micro-batching win.
+    pub fn rows_per_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.rows as f64 / self.batches as f64
+    }
+
+    /// Examples per second of backend compute.
+    pub fn rows_per_infer_s(&self) -> f64 {
+        if self.infer_s <= 0.0 {
+            return 0.0;
+        }
+        self.rows as f64 / self.infer_s
+    }
+
+    /// One-line human-readable summary for logs and `serve-bench`.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} submitted, {} completed ({} failed, {} expired) in {} \
+             batches ({:.1} rows/batch); mean latency {:.1}us, backend \
+             {:.0} rows/s",
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.expired,
+            self.batches,
+            self.rows_per_batch(),
+            self.mean_latency_s() * 1e6,
+            self.rows_per_infer_s()
+        )
     }
 }
 
@@ -157,6 +232,29 @@ mod tests {
         assert_eq!(s.samples, 128);
         assert!((s.accuracy() - 90.0 / 128.0).abs() < 1e-12);
         assert!((s.mean_loss() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serving_counters_derived_rates() {
+        let mut c = ServingCounters::default();
+        assert_eq!(c.mean_latency_s(), 0.0);
+        assert_eq!(c.rows_per_batch(), 0.0);
+        assert_eq!(c.rows_per_infer_s(), 0.0);
+        c.submitted = 10;
+        c.completed = 8;
+        c.failed = 1;
+        c.expired = 1;
+        c.batches = 2;
+        c.rows = 16;
+        c.max_batch_rows = 12;
+        c.latency_s = 0.4;
+        c.infer_s = 0.2;
+        assert!((c.mean_latency_s() - 0.05).abs() < 1e-12);
+        assert!((c.rows_per_batch() - 8.0).abs() < 1e-12);
+        assert!((c.rows_per_infer_s() - 80.0).abs() < 1e-12);
+        let s = c.summary();
+        assert!(s.contains("10 submitted"), "{s}");
+        assert!(s.contains("8.0 rows/batch"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,540 @@
+//! The micro-batching scheduler behind [`ServingEngine`].
+//!
+//! One background scheduler thread owns dispatch: it pops the oldest
+//! queued request, coalesces every queued request *for the same model*
+//! (in ticket order) up to [`EngineConfig::max_batch`] rows — waiting at
+//! most [`EngineConfig::max_wait`] from the oldest request's submission
+//! for the batch to fill — then runs one batched [`InferBackend`] pass
+//! and scatters the logits back to the tickets. Requests for other
+//! models keep their queue positions, so a burst for model A cannot
+//! starve a request for model B out of order.
+//!
+//! Determinism: tickets are assigned under the queue lock in submission
+//! order, the batch is packed in ticket order, and backends compute
+//! rows independently — per-request logits are bit-identical to serial
+//! single-request calls regardless of coalescing, pool width, or how
+//! submitters interleave (see `tests/serving_engine.rs`).
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::metrics::ServingCounters;
+use crate::util::ThreadPool;
+
+use super::{InferBackend, ModelRegistry, ServingError};
+
+/// One inference request: which model, a flat row-major input holding
+/// one or more examples, and an optional relative deadline (maximum
+/// time the request may sit in the queue before dispatch).
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    pub model: String,
+    pub input: Vec<f32>,
+    pub deadline: Option<Duration>,
+}
+
+impl InferRequest {
+    /// Single- or multi-example request with no deadline.
+    pub fn new(model: impl Into<String>, input: Vec<f32>) -> Self {
+        InferRequest { model: model.into(), input, deadline: None }
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// Handle to a submitted request; redeem via [`ServingEngine::poll`] or
+/// [`ServingEngine::wait`]. Results are single-consumption.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Ticket(pub u64);
+
+/// Non-blocking completion state of a ticket.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Poll {
+    /// Still queued or mid-dispatch.
+    Pending,
+    /// Flat logits, `rows × n_classes` in the request's row order.
+    Ready(Vec<f32>),
+    /// The request failed (deadline, backend error, unknown ticket).
+    Failed(ServingError),
+}
+
+/// Scheduler knobs. Defaults suit test-scale models; `serve-bench`
+/// sweeps them.
+#[derive(Clone)]
+pub struct EngineConfig {
+    /// Max rows coalesced into one batched pass.
+    pub max_batch: usize,
+    /// How long dispatch may hold the oldest request waiting for its
+    /// batch to fill. Zero dispatches immediately (still coalescing
+    /// whatever is already queued).
+    pub max_wait: Duration,
+    /// Bounded queue capacity in *requests*; submits beyond it fail
+    /// with [`ServingError::QueueFull`].
+    pub queue_cap: usize,
+    /// Compute pool for batched passes; `None` uses the global pool.
+    pub pool: Option<Arc<ThreadPool>>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(500),
+            queue_cap: 256,
+            pool: None,
+        }
+    }
+}
+
+struct Pending {
+    ticket: u64,
+    model: usize,
+    rows: usize,
+    input: Vec<f32>,
+    submitted: Instant,
+    deadline: Option<Instant>,
+}
+
+#[derive(Default)]
+struct QState {
+    queue: VecDeque<Pending>,
+    /// Tickets currently in `queue` — O(1) pending checks for
+    /// `poll`/`wait` instead of a queue scan under the shared lock.
+    queued: HashSet<u64>,
+    /// Tickets extracted from the queue whose batch is mid-flight.
+    in_flight: HashSet<u64>,
+    /// Finished tickets awaiting pickup (single consumption).
+    results: HashMap<u64, Result<Vec<f32>, ServingError>>,
+    /// Completion order of `results` keys — oldest unredeemed results
+    /// are evicted past the retention cap, so fire-and-forget clients
+    /// cannot grow the map without bound.
+    finished_order: VecDeque<u64>,
+    next_ticket: u64,
+    shutdown: bool,
+}
+
+impl QState {
+    fn is_pending(&self, ticket: u64) -> bool {
+        self.queued.contains(&ticket) || self.in_flight.contains(&ticket)
+    }
+}
+
+struct Shared {
+    names: Vec<String>,
+    models: Vec<Arc<dyn InferBackend>>,
+    cfg_max_batch: usize,
+    cfg_max_wait: Duration,
+    cfg_queue_cap: usize,
+    pool: Option<Arc<ThreadPool>>,
+    q: Mutex<QState>,
+    /// Wakes the scheduler (new work / shutdown).
+    work: Condvar,
+    /// Wakes `wait`/`infer_sync` callers (new results).
+    done: Condvar,
+    stats: Vec<Mutex<ServingCounters>>,
+}
+
+impl Shared {
+    fn pool(&self) -> &ThreadPool {
+        self.pool.as_deref().unwrap_or_else(ThreadPool::global)
+    }
+}
+
+/// The unified serving front door — see the module docs in
+/// [`crate::serving`] for the API contract.
+pub struct ServingEngine {
+    shared: Arc<Shared>,
+    scheduler: Option<JoinHandle<()>>,
+}
+
+impl ServingEngine {
+    /// Seal a registry into a running engine (spawns the scheduler
+    /// thread). The registry must not be empty.
+    pub fn new(registry: ModelRegistry, cfg: EngineConfig) -> crate::Result<Self> {
+        if registry.is_empty() {
+            return Err(anyhow::anyhow!("serving engine needs at least one model"));
+        }
+        let (names, models) = registry.into_parts();
+        let stats = (0..models.len())
+            .map(|_| Mutex::new(ServingCounters::default()))
+            .collect();
+        let shared = Arc::new(Shared {
+            names,
+            models,
+            cfg_max_batch: cfg.max_batch.max(1),
+            cfg_max_wait: cfg.max_wait,
+            cfg_queue_cap: cfg.queue_cap.max(1),
+            pool: cfg.pool,
+            q: Mutex::new(QState::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            stats,
+        });
+        let sched_shared = shared.clone();
+        let scheduler = std::thread::Builder::new()
+            .name("admm-nn-serving".into())
+            .spawn(move || scheduler_loop(&sched_shared))
+            .expect("spawning serving scheduler");
+        Ok(ServingEngine { shared, scheduler: Some(scheduler) })
+    }
+
+    /// Names the sealed registry serves, in registration order.
+    pub fn model_names(&self) -> &[String] {
+        &self.shared.names
+    }
+
+    /// Validate and enqueue a request; returns its ticket. Typed
+    /// failures: unknown model, empty/mis-sized input, full queue
+    /// (backpressure), engine shut down.
+    pub fn submit(&self, req: InferRequest) -> Result<Ticket, ServingError> {
+        let sh = &self.shared;
+        let model = sh
+            .names
+            .iter()
+            .position(|n| *n == req.model)
+            .ok_or_else(|| ServingError::UnknownModel(req.model.clone()))?;
+        let dim = sh.models[model].input_dim();
+        if req.input.is_empty() {
+            return Err(ServingError::EmptyBatch);
+        }
+        if dim == 0 || req.input.len() % dim != 0 {
+            // report the next whole multiple of the input dim — the
+            // smallest buffer that would actually be accepted
+            let dim = dim.max(1);
+            return Err(ServingError::InputSizeMismatch {
+                model: req.model.clone(),
+                got: req.input.len(),
+                want: ((req.input.len() + dim - 1) / dim) * dim,
+            });
+        }
+        let rows = req.input.len() / dim;
+        let now = Instant::now();
+        let ticket = {
+            let mut q = sh.q.lock().expect("serving queue poisoned");
+            if q.shutdown {
+                return Err(ServingError::ShutDown);
+            }
+            if q.queue.len() >= sh.cfg_queue_cap {
+                return Err(ServingError::QueueFull { cap: sh.cfg_queue_cap });
+            }
+            let ticket = q.next_ticket;
+            q.next_ticket += 1;
+            q.queue.push_back(Pending {
+                ticket,
+                model,
+                rows,
+                input: req.input,
+                submitted: now,
+                deadline: req.deadline.map(|d| now + d),
+            });
+            q.queued.insert(ticket);
+            // counted while the queue lock is held so a stats snapshot
+            // can never observe completed > submitted (the scheduler
+            // cannot finish this request before the lock drops)
+            sh.stats[model].lock().expect("stats poisoned").submitted += 1;
+            ticket
+        };
+        sh.work.notify_one();
+        Ok(Ticket(ticket))
+    }
+
+    /// Non-blocking completion check. A `Ready`/`Failed` result is
+    /// consumed by the call; polling the same ticket again reports
+    /// [`ServingError::UnknownTicket`].
+    pub fn poll(&self, t: Ticket) -> Poll {
+        let sh = &self.shared;
+        let mut q = sh.q.lock().expect("serving queue poisoned");
+        if let Some(r) = q.results.remove(&t.0) {
+            return match r {
+                Ok(logits) => Poll::Ready(logits),
+                Err(e) => Poll::Failed(e),
+            };
+        }
+        if q.is_pending(t.0) {
+            return Poll::Pending;
+        }
+        Poll::Failed(ServingError::UnknownTicket(t.0))
+    }
+
+    /// Block until the ticket completes; consumes the result.
+    pub fn wait(&self, t: Ticket) -> Result<Vec<f32>, ServingError> {
+        let sh = &self.shared;
+        let mut q = sh.q.lock().expect("serving queue poisoned");
+        loop {
+            if let Some(r) = q.results.remove(&t.0) {
+                return r;
+            }
+            if !q.is_pending(t.0) {
+                return Err(ServingError::UnknownTicket(t.0));
+            }
+            q = sh.done.wait(q).expect("serving queue poisoned");
+        }
+    }
+
+    /// Submit and block for the logits — the drop-in replacement for
+    /// the old direct `infer(x, bsz)` calls.
+    pub fn infer_sync(&self, req: InferRequest) -> Result<Vec<f32>, ServingError> {
+        let t = self.submit(req)?;
+        self.wait(t)
+    }
+
+    /// Snapshot of one model's serving counters.
+    pub fn stats(&self, model: &str) -> Option<ServingCounters> {
+        let i = self.shared.names.iter().position(|n| n == model)?;
+        Some(self.shared.stats[i].lock().expect("stats poisoned").clone())
+    }
+
+    /// Snapshots for every registered model, in registration order.
+    pub fn stats_all(&self) -> Vec<(String, ServingCounters)> {
+        self.shared
+            .names
+            .iter()
+            .cloned()
+            .zip(self.shared.stats.iter().map(|s| {
+                s.lock().expect("stats poisoned").clone()
+            }))
+            .collect()
+    }
+}
+
+impl Drop for ServingEngine {
+    fn drop(&mut self) {
+        {
+            let mut q = self
+                .shared
+                .q
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            q.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// How far before a queued request's deadline the scheduler cuts its
+/// batching hold short, so the dispatch lands while the deadline still
+/// stands instead of expiring the request on an idle engine. Generous
+/// relative to OS wake-up jitter; for deadlines already within the
+/// margin the subtraction lands in the past and dispatch is immediate.
+const DEADLINE_DISPATCH_MARGIN: Duration = Duration::from_millis(5);
+
+/// A batch extracted for dispatch (already removed from the queue).
+struct Extracted {
+    model: usize,
+    reqs: Vec<Pending>,
+}
+
+fn scheduler_loop(sh: &Shared) {
+    loop {
+        let batch = {
+            let mut q = sh.q.lock().expect("serving queue poisoned");
+            loop {
+                if q.queue.is_empty() {
+                    if q.shutdown {
+                        return;
+                    }
+                    q = sh.work.wait(q).expect("serving queue poisoned");
+                    continue;
+                }
+                let head_model = q.queue[0].model;
+                let oldest = q.queue[0].submitted;
+                let mut rows_ready = 0usize;
+                // the hold window is bounded by max_wait from the oldest
+                // request AND by the earliest deadline of ANY queued
+                // request (with a margin so the wake lands *before* the
+                // deadline): a tight deadline must force a flush — of
+                // the head batch, then its own model's — not expire
+                // behind an unrelated hold on an idle engine
+                let mut hold_until = oldest + sh.cfg_max_wait;
+                for p in q.queue.iter() {
+                    if p.model == head_model {
+                        rows_ready += p.rows;
+                    }
+                    if let Some(d) = p.deadline {
+                        let dispatch_by = d
+                            .checked_sub(DEADLINE_DISPATCH_MARGIN)
+                            .unwrap_or_else(Instant::now);
+                        if dispatch_by < hold_until {
+                            hold_until = dispatch_by;
+                        }
+                    }
+                }
+                let window_left =
+                    hold_until.saturating_duration_since(Instant::now());
+                if rows_ready < sh.cfg_max_batch
+                    && !window_left.is_zero()
+                    && !q.shutdown
+                {
+                    // hold for more same-model arrivals, bounded by the
+                    // oldest request's batching window
+                    let (guard, _) = sh
+                        .work
+                        .wait_timeout(q, window_left)
+                        .expect("serving queue poisoned");
+                    q = guard;
+                    continue;
+                }
+                // extract same-model requests in ticket order up to
+                // max_batch rows (the first request always fits). A
+                // same-model request that does NOT fit ends the scan —
+                // later smaller requests must not leapfrog it, so
+                // same-model completion keeps FIFO order.
+                let mut reqs: Vec<Pending> = Vec::new();
+                let mut total_rows = 0usize;
+                let mut i = 0usize;
+                while i < q.queue.len() {
+                    let p = &q.queue[i];
+                    if p.model != head_model {
+                        i += 1;
+                        continue;
+                    }
+                    if total_rows != 0
+                        && total_rows + p.rows > sh.cfg_max_batch
+                    {
+                        break;
+                    }
+                    total_rows += p.rows;
+                    let p = q.queue.remove(i).expect("indexed pending");
+                    q.queued.remove(&p.ticket);
+                    q.in_flight.insert(p.ticket);
+                    reqs.push(p);
+                    if total_rows >= sh.cfg_max_batch {
+                        break;
+                    }
+                }
+                break Extracted { model: head_model, reqs };
+            }
+        };
+        dispatch(sh, batch);
+    }
+}
+
+fn dispatch(sh: &Shared, batch: Extracted) {
+    let backend = &sh.models[batch.model];
+    let dispatch_t = Instant::now();
+    // deadline triage: expired requests are failed without compute
+    let (live, dead): (Vec<Pending>, Vec<Pending>) = batch
+        .reqs
+        .into_iter()
+        .partition(|p| p.deadline.map(|d| d > dispatch_t).unwrap_or(true));
+
+    let mut outcome: Vec<(u64, Result<Vec<f32>, ServingError>)> =
+        Vec::with_capacity(live.len() + dead.len());
+    {
+        let mut st = sh.stats[batch.model].lock().expect("stats poisoned");
+        for p in &dead {
+            st.expired += 1;
+            st.queue_s += dispatch_t.duration_since(p.submitted).as_secs_f64();
+        }
+    }
+    for p in &dead {
+        outcome.push((p.ticket, Err(ServingError::DeadlineExpired)));
+    }
+
+    if !live.is_empty() {
+        let rows: usize = live.iter().map(|p| p.rows).sum();
+        let dim = backend.input_dim();
+        let classes = backend.n_classes();
+        // pack inputs in ticket order — the deterministic request→slot
+        // assignment behind the bit-identical guarantee
+        let mut x = Vec::with_capacity(rows * dim);
+        for p in &live {
+            x.extend_from_slice(&p.input);
+        }
+        // A panicking backend must fail this batch's tickets, not kill
+        // the scheduler thread (which would strand every in_flight
+        // ticket as pending forever and silently stop all serving).
+        let t_infer = Instant::now();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            backend.infer_batch(sh.pool(), &x, rows)
+        }))
+        .unwrap_or_else(|_| Err(anyhow::anyhow!("backend panicked")))
+        .and_then(|l| {
+            // a mis-sized logits buffer must become a typed error, not
+            // a scheduler-thread panic while scattering
+            if l.len() != rows * classes {
+                Err(anyhow::anyhow!(
+                    "backend returned {} logits for {rows}x{classes}",
+                    l.len()
+                ))
+            } else {
+                Ok(l)
+            }
+        });
+        let infer_s = t_infer.elapsed().as_secs_f64();
+        let done_t = Instant::now();
+        {
+            let mut st = sh.stats[batch.model].lock().expect("stats poisoned");
+            st.batches += 1;
+            st.infer_s += infer_s;
+            st.max_batch_rows = st.max_batch_rows.max(rows as u64);
+            for p in &live {
+                st.queue_s +=
+                    dispatch_t.duration_since(p.submitted).as_secs_f64();
+            }
+            match &result {
+                Ok(_) => {
+                    st.rows += rows as u64;
+                    st.completed += live.len() as u64;
+                    for p in &live {
+                        st.latency_s +=
+                            done_t.duration_since(p.submitted).as_secs_f64();
+                    }
+                }
+                Err(_) => st.failed += live.len() as u64,
+            }
+        }
+        match result {
+            Ok(logits) => {
+                debug_assert_eq!(logits.len(), rows * classes);
+                let mut off = 0usize;
+                for p in &live {
+                    let n = p.rows * classes;
+                    outcome.push((p.ticket, Ok(logits[off..off + n].to_vec())));
+                    off += n;
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for p in &live {
+                    outcome
+                        .push((p.ticket, Err(ServingError::Backend(msg.clone()))));
+                }
+            }
+        }
+    }
+
+    let mut q = sh.q.lock().expect("serving queue poisoned");
+    for (ticket, r) in outcome {
+        q.in_flight.remove(&ticket);
+        q.results.insert(ticket, r);
+        q.finished_order.push_back(ticket);
+    }
+    // retention cap: abandoned (never-redeemed) results are evicted
+    // oldest-first; a later poll/wait on an evicted ticket reports
+    // UnknownTicket, same as an already-consumed one. Every result key
+    // is in finished_order (consumed tickets just leave stale order
+    // entries, removed harmlessly here), so bounding the order bounds
+    // the map. The cap is wide enough (4× queue_cap) that a live
+    // waiter — woken by the notify_all below — cannot realistically
+    // lose its result.
+    let cap = sh.cfg_queue_cap.saturating_mul(4).max(64);
+    while q.finished_order.len() > cap {
+        match q.finished_order.pop_front() {
+            Some(old) => {
+                q.results.remove(&old);
+            }
+            None => break,
+        }
+    }
+    drop(q);
+    sh.done.notify_all();
+}

@@ -1,0 +1,306 @@
+//! Unified serving surface: one request/response API over shared
+//! compressed models.
+//!
+//! The paper's end product is a compressed model meant to be *served* —
+//! its hardware-aware half exists because deployment cost, not just
+//! model size, is the target. This module is the host-side serving
+//! story: a [`ServingEngine`] owns a [`ModelRegistry`] of named
+//! [`InferBackend`]s (each [`crate::coordinator::CompressedModel`]
+//! decoded **once** into immutable CSR form behind an `Arc`, shared by
+//! every request), accepts [`InferRequest`]s through a non-blocking
+//! `submit`/`poll` pair (or blocking [`ServingEngine::infer_sync`]),
+//! and drives a micro-batching scheduler that coalesces queued
+//! requests for the same model into one batched sparse pass over the
+//! [`crate::util::ThreadPool`].
+//!
+//! Contracts:
+//! * **Bit-identical batching.** Requests are assigned batch slots in
+//!   ticket (submission) order, and every backend computes batch rows
+//!   independently with a fixed per-row accumulation order — so the
+//!   logits a request receives are bit-identical to a serial
+//!   single-request call, at any pool width and any coalescing. Tested
+//!   in `tests/serving_engine.rs` at widths {1, 2, 4, 8}.
+//! * **Backpressure.** The queue is bounded
+//!   ([`EngineConfig::queue_cap`]); a full queue rejects with the typed
+//!   [`ServingError::QueueFull`] instead of buffering unboundedly.
+//! * **Deadlines.** A request may carry a relative deadline; requests
+//!   still queued when it passes are failed with
+//!   [`ServingError::DeadlineExpired`] — their compute is never run.
+//! * **Metrics.** Per-model [`crate::metrics::ServingCounters`]
+//!   (throughput, coalescing, queue/latency sums) via
+//!   [`ServingEngine::stats`].
+//!
+//! Two backend implementations:
+//! [`crate::backend::sparse_infer::SparseInfer`] (the
+//! stored-model sparse path) and [`DenseInfer`] (a
+//! [`crate::backend::native::NativeBackend`] plus a frozen
+//! [`TrainState`] — the dense `ModelExec` path behind the same trait).
+//! The legacy one-model entry points (`SparseInfer::infer`,
+//! per-example loops in examples and baselines) survive as thin
+//! deprecated shims around this module.
+
+mod engine;
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::backend::native::NativeBackend;
+use crate::backend::sparse_infer::SparseInfer;
+use crate::backend::{ModelExec, TrainState};
+use crate::coordinator::checkpoint::CompressedModel;
+use crate::runtime::manifest::ModelEntry;
+use crate::util::ThreadPool;
+
+pub use engine::{EngineConfig, InferRequest, Poll, ServingEngine, Ticket};
+
+/// Typed serving errors — the scheduler's control-flow outcomes
+/// (backpressure, deadlines, validation) are values callers can match
+/// on, not stringly-typed anyhow chains. Converts into
+/// [`crate::Result`]'s error via `?` like any `std::error::Error`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServingError {
+    /// `bsz == 0` (or an empty input buffer).
+    EmptyBatch,
+    /// Input length disagrees with the model's input dimension. `want`
+    /// is the closest length the rejecting front door would accept:
+    /// `bsz × input_dim` when the batch size is explicit
+    /// (`SparseInfer::check_batch`), the next whole multiple of
+    /// `input_dim` when it is inferred from the buffer (engine submit).
+    InputSizeMismatch { model: String, got: usize, want: usize },
+    /// No model registered under this name.
+    UnknownModel(String),
+    /// A model with this name is already registered.
+    DuplicateModel(String),
+    /// The bounded request queue is full — back off and retry.
+    QueueFull { cap: usize },
+    /// The request's deadline passed while it was still queued.
+    DeadlineExpired,
+    /// The engine is shutting down and accepts no new requests.
+    ShutDown,
+    /// The ticket was never issued, or its result was already taken.
+    UnknownTicket(u64),
+    /// The backend's batched pass failed (rendered message).
+    Backend(String),
+}
+
+impl fmt::Display for ServingError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServingError::EmptyBatch => write!(f, "empty batch (bsz == 0)"),
+            ServingError::InputSizeMismatch { model, got, want } => write!(
+                f,
+                "input has {got} values, model {model} wants {want}"
+            ),
+            ServingError::UnknownModel(m) => {
+                write!(f, "no model {m:?} registered")
+            }
+            ServingError::DuplicateModel(m) => {
+                write!(f, "model {m:?} already registered")
+            }
+            ServingError::QueueFull { cap } => {
+                write!(f, "request queue full (cap {cap})")
+            }
+            ServingError::DeadlineExpired => {
+                write!(f, "deadline expired before dispatch")
+            }
+            ServingError::ShutDown => write!(f, "serving engine shut down"),
+            ServingError::UnknownTicket(t) => {
+                write!(f, "ticket {t} unknown or already consumed")
+            }
+            ServingError::Backend(msg) => write!(f, "backend failure: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServingError {}
+
+/// The one inference surface every caller goes through: batched logits
+/// out of a flat row-major input. Implementations must compute batch
+/// rows independently (row `i` of the output depends only on row `i` of
+/// the input), with a per-row reduction order that does not depend on
+/// `bsz` or the pool width — that is what lets the engine coalesce
+/// requests and still return bit-identical logits.
+pub trait InferBackend: Send + Sync {
+    /// Registry/display name of the model.
+    fn name(&self) -> &str;
+
+    /// Flat input features per example.
+    fn input_dim(&self) -> usize;
+
+    /// Logits per example.
+    fn n_classes(&self) -> usize;
+
+    /// Infer `bsz` examples packed row-major in `x`; returns
+    /// `bsz × n_classes` flat logits. `pool` is the engine's compute
+    /// pool (implementations may ignore it if they manage their own).
+    fn infer_batch(
+        &self,
+        pool: &ThreadPool,
+        x: &[f32],
+        bsz: usize,
+    ) -> crate::Result<Vec<f32>>;
+}
+
+impl InferBackend for SparseInfer {
+    fn name(&self) -> &str {
+        SparseInfer::name(self)
+    }
+
+    fn input_dim(&self) -> usize {
+        SparseInfer::input_dim(self)
+    }
+
+    fn n_classes(&self) -> usize {
+        SparseInfer::n_classes(self)
+    }
+
+    fn infer_batch(
+        &self,
+        pool: &ThreadPool,
+        x: &[f32],
+        bsz: usize,
+    ) -> crate::Result<Vec<f32>> {
+        self.infer_with(pool, x, bsz)
+    }
+}
+
+/// The dense `ModelExec` path behind the serving trait: a native
+/// backend plus a frozen [`TrainState`] snapshot (masks applied, exactly
+/// what [`crate::backend::ModelExec::infer`] sees). Rows of the dense
+/// forward are independent and row-blocked GEMM is bit-identical at any
+/// width, so the engine's batching contract holds here too. The dense
+/// kernels run on the global pool (the native backend's own fan-out),
+/// not the engine pool.
+pub struct DenseInfer {
+    nb: NativeBackend,
+    st: TrainState,
+    input_dim: usize,
+}
+
+impl DenseInfer {
+    pub fn new(nb: NativeBackend, st: TrainState) -> Self {
+        let input_dim: usize = nb.entry().input_shape.iter().product();
+        DenseInfer { nb, st, input_dim }
+    }
+
+    /// Open a proxy model by name and serve the given state.
+    pub fn open(name: &str, st: TrainState) -> crate::Result<Self> {
+        Ok(Self::new(NativeBackend::open(name)?, st))
+    }
+
+    pub fn state(&self) -> &TrainState {
+        &self.st
+    }
+}
+
+impl InferBackend for DenseInfer {
+    fn name(&self) -> &str {
+        self.nb.name()
+    }
+
+    fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    fn n_classes(&self) -> usize {
+        self.nb.entry().n_classes
+    }
+
+    fn infer_batch(
+        &self,
+        _pool: &ThreadPool,
+        x: &[f32],
+        bsz: usize,
+    ) -> crate::Result<Vec<f32>> {
+        if bsz == 0 {
+            return Err(ServingError::EmptyBatch.into());
+        }
+        self.nb.infer(&self.st, x, bsz)
+    }
+}
+
+/// Named, immutable, shareable model set: every model is decoded once
+/// at registration and held behind an `Arc`, so all concurrent batches
+/// read the same CSR buffers. The registry is sealed into a
+/// [`ServingEngine`] at construction — registration is a setup-time
+/// activity, serving never takes a registry-wide lock.
+#[derive(Default)]
+pub struct ModelRegistry {
+    names: Vec<String>,
+    models: Vec<Arc<dyn InferBackend>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a backend under its own name.
+    pub fn register(
+        &mut self,
+        backend: Arc<dyn InferBackend>,
+    ) -> Result<(), ServingError> {
+        let name = backend.name().to_string();
+        self.register_named(name, backend)
+    }
+
+    /// Register a backend under an explicit name (two variants of one
+    /// model — e.g. sparse and dense — can serve side by side).
+    pub fn register_named(
+        &mut self,
+        name: String,
+        backend: Arc<dyn InferBackend>,
+    ) -> Result<(), ServingError> {
+        if self.names.iter().any(|n| *n == name) {
+            return Err(ServingError::DuplicateModel(name));
+        }
+        self.names.push(name);
+        self.models.push(backend);
+        Ok(())
+    }
+
+    /// Decode a stored [`CompressedModel`] into shared CSR serving form
+    /// (validated once, here) and register it under `name`.
+    pub fn register_compressed(
+        &mut self,
+        name: &str,
+        model: &CompressedModel,
+        entry: &ModelEntry,
+    ) -> crate::Result<()> {
+        let sp = SparseInfer::new(model, entry)?;
+        self.register_named(name.to_string(), Arc::new(sp))?;
+        Ok(())
+    }
+
+    /// Register a dense (native `ModelExec`) serving path for a frozen
+    /// training state.
+    pub fn register_dense(
+        &mut self,
+        name: &str,
+        nb: NativeBackend,
+        st: TrainState,
+    ) -> crate::Result<()> {
+        self.register_named(name.to_string(), Arc::new(DenseInfer::new(nb, st)))?;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.names.iter().any(|n| n == name)
+    }
+
+    pub(crate) fn into_parts(self) -> (Vec<String>, Vec<Arc<dyn InferBackend>>) {
+        (self.names, self.models)
+    }
+}

@@ -433,7 +433,31 @@ pub fn im2col(
     ow: usize,
     out: &mut Vec<f32>,
 ) {
+    im2col_str(x, bsz, h, w, c, kh, kw, 1, pt, pl, oh, ow, out)
+}
+
+/// [`im2col`] with a (square) window stride: output tap (oy, ox) reads
+/// input rows `oy·stride + ky − pt`. The residual proxies' downsampling
+/// convolutions (stride 2, XLA SAME padding — which is asymmetric at
+/// even strides; the caller passes the *low* pads) lower through this.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_str(
+    x: &[f32],
+    bsz: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pt: usize,
+    pl: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut Vec<f32>,
+) {
     assert_eq!(x.len(), bsz * h * w * c, "im2col: input length");
+    assert!(stride >= 1, "im2col: zero stride");
     let patch = kh * kw * c;
     out.clear();
     out.resize(bsz * oh * ow * patch, 0.0);
@@ -445,9 +469,9 @@ pub fn im2col(
                     &mut out[((b * oh + oy) * ow + ox) * patch..][..patch];
                 let mut idx = 0;
                 for ky in 0..kh {
-                    let iy = (oy + ky) as isize - pt as isize;
+                    let iy = (oy * stride + ky) as isize - pt as isize;
                     for kx in 0..kw {
-                        let ix = (ox + kx) as isize - pl as isize;
+                        let ix = (ox * stride + kx) as isize - pl as isize;
                         if iy >= 0
                             && (iy as usize) < h
                             && ix >= 0
@@ -483,8 +507,30 @@ pub fn col2im(
     ow: usize,
     out: &mut Vec<f32>,
 ) {
+    col2im_str(cols, bsz, h, w, c, kh, kw, 1, pt, pl, oh, ow, out)
+}
+
+/// Adjoint of [`im2col_str`] — same stride/padding geometry, scatter-add
+/// back to the input layout.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im_str(
+    cols: &[f32],
+    bsz: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pt: usize,
+    pl: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut Vec<f32>,
+) {
     let patch = kh * kw * c;
     assert_eq!(cols.len(), bsz * oh * ow * patch, "col2im: cols length");
+    assert!(stride >= 1, "col2im: zero stride");
     out.clear();
     out.resize(bsz * h * w * c, 0.0);
     for b in 0..bsz {
@@ -494,9 +540,9 @@ pub fn col2im(
                 let row = &cols[((b * oh + oy) * ow + ox) * patch..][..patch];
                 let mut idx = 0;
                 for ky in 0..kh {
-                    let iy = (oy + ky) as isize - pt as isize;
+                    let iy = (oy * stride + ky) as isize - pt as isize;
                     for kx in 0..kw {
-                        let ix = (ox + kx) as isize - pl as isize;
+                        let ix = (ox * stride + kx) as isize - pl as isize;
                         if iy >= 0
                             && (iy as usize) < h
                             && ix >= 0
@@ -762,6 +808,38 @@ mod tests {
         im2col(&x, bsz, h, w, c, kh, kw, pt, pl, oh, ow, &mut cols);
         let mut back = Vec::new();
         col2im(&u, bsz, h, w, c, kh, kw, pt, pl, oh, ow, &mut back);
+        let lhs: f64 = cols.iter().zip(&u).map(|(&a, &b)| (a as f64) * b as f64).sum();
+        let rhs: f64 = x.iter().zip(&back).map(|(&a, &b)| (a as f64) * b as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn strided_im2col_geometry_and_adjoint() {
+        // Stride-2 SAME on an even input (XLA geometry: oh = ⌈h/2⌉,
+        // total pad = (oh−1)·2 + kh − h, low pad = total/2): spot-check
+        // the patch layout against direct indexing, then pin the strided
+        // backward with the adjoint identity.
+        let (bsz, h, w, c, kh, kw, stride) = (2usize, 8, 8, 3, 3, 3, 2);
+        let (oh, ow) = (4usize, 4usize);
+        let (pt, pl) = (0usize, 0usize); // total pad 1 → low 0, high 1
+        let x = seq(bsz * h * w * c, |i| ((i as f32) * 0.23).sin());
+        let mut cols = Vec::new();
+        im2col_str(&x, bsz, h, w, c, kh, kw, stride, pt, pl, oh, ow, &mut cols);
+        assert_eq!(cols.len(), bsz * oh * ow * kh * kw * c);
+        // patch (b=1, oy=2, ox=1), tap (ky=1, kx=2, ch=0) reads
+        // input (iy, ix) = (2·2+1, 1·2+2) = (5, 4)
+        let patch = kh * kw * c;
+        let got = cols[((1 * oh + 2) * ow + 1) * patch + (1 * kw + 2) * c];
+        let want = x[1 * h * w * c + (5 * w + 4) * c];
+        assert_eq!(got, want);
+        // out-of-range bottom-right taps are zero: patch (oy=3, ox=3),
+        // tap (ky=2, kx=2) would read (8, 8) — padded
+        let z = cols[((0 * oh + 3) * ow + 3) * patch + (2 * kw + 2) * c];
+        assert_eq!(z, 0.0);
+
+        let u = seq(cols.len(), |i| ((i as f32) * 0.41).cos());
+        let mut back = Vec::new();
+        col2im_str(&u, bsz, h, w, c, kh, kw, stride, pt, pl, oh, ow, &mut back);
         let lhs: f64 = cols.iter().zip(&u).map(|(&a, &b)| (a as f64) * b as f64).sum();
         let rhs: f64 = x.iter().zip(&back).map(|(&a, &b)| (a as f64) * b as f64).sum();
         assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");

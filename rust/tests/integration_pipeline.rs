@@ -21,6 +21,8 @@ use admm_nn::coordinator::{
     TrainConfig, Trainer,
 };
 use admm_nn::data::{self, Batch, Dataset, Split};
+use admm_nn::serving::{EngineConfig, InferRequest, ModelRegistry, ServingEngine};
+use admm_nn::util::ThreadPool;
 
 /// The test workhorse: the MLP proxy with a small eval batch.
 fn exec() -> NativeBackend {
@@ -72,15 +74,24 @@ fn joint_pipeline_enforces_structure() {
     // accuracy survives compression meaningfully above chance (10 classes)
     assert!(rep.final_acc > 0.5, "final acc {}", rep.final_acc);
 
-    // the acceptance gate: serving from the *stored* representation
-    // agrees with dense masked inference on the decoded weights
+    // the acceptance gate: serving from the *stored* representation —
+    // through the ServingEngine request API, the path production
+    // callers use — agrees with dense masked inference on the decoded
+    // weights, and engine batching is bitwise the direct sparse call
     let sp = SparseInfer::new(&rep.model, sess.entry()).unwrap();
+    let batch = ds.batch(Split::Test, 3, 64);
+    let direct = sp.infer_with(ThreadPool::global(), &batch.x, 64).unwrap();
+    let mut reg = ModelRegistry::new();
+    reg.register_compressed("mlp", &rep.model, sess.entry()).unwrap();
+    let engine = ServingEngine::new(reg, EngineConfig::default()).unwrap();
+    let sparse = engine
+        .infer_sync(InferRequest::new("mlp", batch.x.clone()))
+        .unwrap();
+    assert_eq!(sparse, direct, "engine drifted from the direct sparse call");
     let restored = rep.model.restore_params(sess.entry()).unwrap();
     let mut vst = st.clone();
     vst.params = restored;
-    let batch = ds.batch(Split::Test, 3, 64);
     let dense = sess.infer(&vst, &batch.x, 64).unwrap();
-    let sparse = sp.infer(&batch.x, 64).unwrap();
     for (i, (a, b)) in dense.iter().zip(&sparse).enumerate() {
         assert!(
             (a - b).abs() <= 1e-4,
@@ -315,8 +326,40 @@ fn conv_pipeline_compresses_lenet_end_to_end() {
     vst.params = restored;
     let batch = ds.batch(Split::Test, 0, 8);
     let dense = sess.infer(&vst, &batch.x, 8).unwrap();
-    let sparse = sp.infer(&batch.x, 8).unwrap();
+    let sparse = sp.infer_with(ThreadPool::global(), &batch.x, 8).unwrap();
     for (i, (a, b)) in dense.iter().zip(&sparse).enumerate() {
         assert!((a - b).abs() <= 1e-4, "logit {i}: {a} vs {b}");
     }
+}
+
+#[test]
+fn baseline_accuracy_served_through_engine_matches_evaluate() {
+    // the dense ModelExec path behind the serving trait: accuracy
+    // measured through engine requests must equal ModelExec::evaluate
+    // exactly (the engine's bit-identical batching contract)
+    let sess = exec();
+    let ds = data::for_input_shape(&sess.entry().input_shape);
+    let mut st = TrainState::init(sess.entry(), 6);
+    let mut trainer = Trainer::new(&sess, ds.as_ref());
+    trainer
+        .run(&mut st, &TrainConfig { steps: 60, ..Default::default() })
+        .unwrap();
+    let quant = baselines::quant_only(&sess, ds.as_ref(), &mut st, 4, 2).unwrap();
+
+    let mut reg = ModelRegistry::new();
+    reg.register_dense("mlp", exec(), st.clone()).unwrap();
+    let engine = ServingEngine::new(reg, EngineConfig::default()).unwrap();
+    let served = baselines::served_accuracy(
+        &engine,
+        "mlp",
+        ds.as_ref(),
+        2,
+        sess.entry().eval_batch,
+    )
+    .unwrap();
+    assert!(
+        (served - quant.accuracy).abs() < 1e-12,
+        "served {served} vs evaluate {}",
+        quant.accuracy
+    );
 }

@@ -38,7 +38,7 @@ fn manifest_covers_all_models() {
 
 #[test]
 fn native_entries_cover_trainable_proxies() {
-    for m in ["mlp", "lenet5", "alexnet_proxy", "vgg_proxy"] {
+    for m in ["mlp", "lenet5", "alexnet_proxy", "vgg_proxy", "resnet_proxy"] {
         let e = model_entry(m, 64, 256).expect(m);
         assert!(e.n_weights() > 0, "{m}");
         NativeBackend::from_entry(m, e).expect(m);

@@ -1,0 +1,378 @@
+//! Integration tests of the serving subsystem: the micro-batching
+//! scheduler's bit-identical guarantee under real concurrency, the
+//! bounded-queue backpressure path, deadline expiry, and the typed
+//! rejection surface.
+//!
+//! The headline test is the acceptance gate of the serving redesign:
+//! N submitter threads pushing interleaved requests for two registered
+//! models through one engine, at pool widths {1, 2, 4, 8}, must each
+//! receive logits **bit-identical** to a serial single-request
+//! `SparseInfer` call on a width-1 pool.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use admm_nn::backend::native::NativeBackend;
+use admm_nn::backend::sparse_infer::{prune_quantize_package, SparseInfer};
+use admm_nn::backend::TrainState;
+use admm_nn::data::{self, Dataset, Split};
+use admm_nn::serving::{
+    EngineConfig, InferBackend, InferRequest, ModelRegistry, Poll,
+    ServingEngine, ServingError,
+};
+use admm_nn::util::ThreadPool;
+
+/// Package a proxy model without training (structure is what matters).
+fn packaged(name: &str, keep: f64, seed: u64) -> (NativeBackend, SparseInfer) {
+    let nb = NativeBackend::open_with_batches(name, 8, 8).expect("backend");
+    let mut st = TrainState::init(nb.entry(), seed);
+    let model = prune_quantize_package(nb.entry(), name, &mut st, keep, 4, 8);
+    let sp = SparseInfer::new(&model, nb.entry()).expect("sparse form");
+    (nb, sp)
+}
+
+/// A deliberately slow identity backend for scheduler-path tests
+/// (backpressure, deadlines, poll states) — echoes its input as
+/// "logits" after a fixed delay.
+struct SlowEcho {
+    dim: usize,
+    delay: Duration,
+}
+
+impl InferBackend for SlowEcho {
+    fn name(&self) -> &str {
+        "slow-echo"
+    }
+
+    fn input_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_classes(&self) -> usize {
+        self.dim
+    }
+
+    fn infer_batch(
+        &self,
+        _pool: &ThreadPool,
+        x: &[f32],
+        _bsz: usize,
+    ) -> admm_nn::Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        Ok(x.to_vec())
+    }
+}
+
+fn slow_engine(delay_ms: u64, queue_cap: usize) -> ServingEngine {
+    let mut reg = ModelRegistry::new();
+    reg.register(Arc::new(SlowEcho {
+        dim: 4,
+        delay: Duration::from_millis(delay_ms),
+    }))
+    .unwrap();
+    ServingEngine::new(reg, EngineConfig {
+        max_batch: 1,
+        max_wait: Duration::ZERO,
+        queue_cap,
+        pool: None,
+    })
+    .unwrap()
+}
+
+/// The acceptance gate: concurrent submitters, two models, one shared
+/// engine, pool widths {1, 2, 4, 8} — per-request logits bit-identical
+/// to serial single-request inference.
+#[test]
+fn concurrent_interleaved_requests_are_bit_identical_to_serial() {
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 8;
+
+    let (mlp_nb, mlp_sp) = packaged("mlp", 0.15, 21);
+    let (lenet_nb, lenet_sp) = packaged("lenet5", 0.1, 22);
+    let mlp_ds = data::for_input_shape(&mlp_nb.entry().input_shape);
+    let lenet_ds = data::for_input_shape(&lenet_nb.entry().input_shape);
+    let mlp_pool_x = mlp_ds.batch(Split::Test, 0, 32).x;
+    let lenet_pool_x = lenet_ds.batch(Split::Test, 0, 32).x;
+    let sps = [&mlp_sp, &lenet_sp];
+    let xs = [&mlp_pool_x, &lenet_pool_x];
+    let names = ["mlp", "lenet5"];
+
+    // (model, input, rows) per request, interleaving models and mixing
+    // single- and multi-row requests
+    let req_of = |t: usize, i: usize| -> (usize, Vec<f32>, usize) {
+        let m = (t + i) % 2;
+        let dim = sps[m].input_dim();
+        let rows = 1 + (i % 3).min(1) * 2; // 1 or 3 examples
+        let start = ((t * PER_THREAD + i) * 5) % (32 - rows);
+        (m, xs[m][start * dim..(start + rows) * dim].to_vec(), rows)
+    };
+
+    // serial references on a width-1 pool, one call per request
+    let serial = ThreadPool::new(1);
+    let mut want: Vec<Vec<Vec<f32>>> = Vec::new();
+    for t in 0..THREADS {
+        let mut row = Vec::new();
+        for i in 0..PER_THREAD {
+            let (m, x, rows) = req_of(t, i);
+            row.push(sps[m].infer_with(&serial, &x, rows).unwrap());
+        }
+        want.push(row);
+    }
+
+    for width in [1usize, 2, 4, 8] {
+        let mut reg = ModelRegistry::new();
+        reg.register_named("mlp".into(), Arc::new(packaged("mlp", 0.15, 21).1))
+            .unwrap();
+        reg.register_named(
+            "lenet5".into(),
+            Arc::new(packaged("lenet5", 0.1, 22).1),
+        )
+        .unwrap();
+        let engine = ServingEngine::new(reg, EngineConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+            pool: Some(Arc::new(ThreadPool::new(width))),
+        })
+        .unwrap();
+
+        let got: Vec<Vec<Vec<f32>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..THREADS)
+                .map(|t| {
+                    let engine = &engine;
+                    let req_of = &req_of;
+                    s.spawn(move || {
+                        (0..PER_THREAD)
+                            .map(|i| {
+                                let (m, x, _) = req_of(t, i);
+                                engine
+                                    .infer_sync(InferRequest::new(names[m], x))
+                                    .expect("infer_sync")
+                            })
+                            .collect::<Vec<Vec<f32>>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        for t in 0..THREADS {
+            for i in 0..PER_THREAD {
+                assert_eq!(
+                    got[t][i], want[t][i],
+                    "width {width}: thread {t} request {i} logits drifted"
+                );
+            }
+        }
+
+        // counters: everything submitted completed, across both models
+        let total: u64 = engine
+            .stats_all()
+            .iter()
+            .map(|(_, s)| s.completed)
+            .sum();
+        assert_eq!(total, (THREADS * PER_THREAD) as u64);
+        for (name, s) in engine.stats_all() {
+            assert_eq!(s.submitted, s.completed, "{name} lost requests");
+            assert_eq!(s.failed + s.expired, 0, "{name} had failures");
+            assert!(s.batches >= 1 && s.batches <= s.completed, "{name}");
+        }
+    }
+}
+
+#[test]
+fn bounded_queue_applies_backpressure() {
+    let engine = slow_engine(40, 2);
+    let mut accepted = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..5 {
+        let input = vec![i as f32; 4];
+        match engine.submit(InferRequest::new("slow-echo", input.clone())) {
+            Ok(t) => accepted.push((t, input)),
+            Err(e) => {
+                assert_eq!(e, ServingError::QueueFull { cap: 2 }, "request {i}");
+                rejected += 1;
+            }
+        }
+    }
+    assert!(rejected >= 1, "queue never filled");
+    assert!(accepted.len() >= 2, "almost everything rejected");
+    // accepted requests all complete, in order, with their own payloads
+    for (t, input) in accepted {
+        assert_eq!(engine.wait(t).unwrap(), input);
+    }
+    let s = engine.stats("slow-echo").unwrap();
+    assert_eq!(s.submitted, s.completed);
+    assert_eq!(s.failed + s.expired, 0);
+}
+
+#[test]
+fn queued_requests_past_their_deadline_are_expired_not_run() {
+    let engine = slow_engine(40, 16);
+    // r1 occupies the backend for ~40ms; r2's 1ms deadline passes while
+    // it is still queued → it must fail typed, without compute
+    let r1 = engine
+        .submit(InferRequest::new("slow-echo", vec![1.0; 4]))
+        .unwrap();
+    let r2 = engine
+        .submit(
+            InferRequest::new("slow-echo", vec![2.0; 4])
+                .with_deadline(Duration::from_millis(1)),
+        )
+        .unwrap();
+    assert_eq!(engine.wait(r1).unwrap(), vec![1.0; 4]);
+    assert_eq!(engine.wait(r2), Err(ServingError::DeadlineExpired));
+    let s = engine.stats("slow-echo").unwrap();
+    assert_eq!(s.expired, 1);
+    assert_eq!(s.completed, 1);
+}
+
+#[test]
+fn short_deadline_on_an_idle_engine_dispatches_early_not_expires() {
+    // max_wait far longer than the deadline: the scheduler must cut its
+    // batching hold short and run the request while the deadline still
+    // stands, instead of holding the full window and expiring it.
+    let mut reg = ModelRegistry::new();
+    reg.register(Arc::new(SlowEcho {
+        dim: 4,
+        delay: Duration::from_millis(1),
+    }))
+    .unwrap();
+    let engine = ServingEngine::new(reg, EngineConfig {
+        max_batch: 64,
+        max_wait: Duration::from_secs(10),
+        queue_cap: 16,
+        pool: None,
+    })
+    .unwrap();
+    let t0 = std::time::Instant::now();
+    let logits = engine
+        .infer_sync(
+            InferRequest::new("slow-echo", vec![4.0; 4])
+                .with_deadline(Duration::from_millis(250)),
+        )
+        .expect("deadline-capped dispatch must run, not expire");
+    assert_eq!(logits, vec![4.0; 4]);
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "request sat out the full max_wait window"
+    );
+    let s = engine.stats("slow-echo").unwrap();
+    assert_eq!((s.completed, s.expired), (1, 0));
+}
+
+/// A panicking backend must fail its batch with a typed error and leave
+/// the scheduler alive for later requests — not strand every waiter.
+struct PanicOnOdd {
+    dim: usize,
+}
+
+impl InferBackend for PanicOnOdd {
+    fn name(&self) -> &str {
+        "panic-on-odd"
+    }
+
+    fn input_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_classes(&self) -> usize {
+        self.dim
+    }
+
+    fn infer_batch(
+        &self,
+        _pool: &ThreadPool,
+        x: &[f32],
+        _bsz: usize,
+    ) -> admm_nn::Result<Vec<f32>> {
+        if x[0] % 2.0 != 0.0 {
+            panic!("odd payload");
+        }
+        Ok(x.to_vec())
+    }
+}
+
+#[test]
+fn backend_panic_fails_the_batch_but_not_the_engine() {
+    let mut reg = ModelRegistry::new();
+    reg.register(Arc::new(PanicOnOdd { dim: 2 })).unwrap();
+    let engine = ServingEngine::new(reg, EngineConfig {
+        max_batch: 1,
+        max_wait: Duration::ZERO,
+        queue_cap: 16,
+        pool: None,
+    })
+    .unwrap();
+    let bad = engine
+        .infer_sync(InferRequest::new("panic-on-odd", vec![1.0, 0.0]))
+        .unwrap_err();
+    assert!(
+        matches!(&bad, ServingError::Backend(m) if m.contains("panicked")),
+        "{bad:?}"
+    );
+    // the scheduler survived: a well-formed request still completes
+    let ok = engine
+        .infer_sync(InferRequest::new("panic-on-odd", vec![2.0, 0.0]))
+        .unwrap();
+    assert_eq!(ok, vec![2.0, 0.0]);
+    let s = engine.stats("panic-on-odd").unwrap();
+    assert_eq!((s.completed, s.failed), (1, 1));
+}
+
+#[test]
+fn poll_lifecycle_pending_ready_consumed() {
+    let engine = slow_engine(30, 16);
+    let t = engine
+        .submit(InferRequest::new("slow-echo", vec![3.0; 4]))
+        .unwrap();
+    // immediately after submit: queued or mid-flight, never a result
+    assert_eq!(engine.poll(t), Poll::Pending);
+    assert_eq!(engine.wait(t).unwrap(), vec![3.0; 4]);
+    // results are single-consumption
+    assert_eq!(engine.poll(t), Poll::Failed(ServingError::UnknownTicket(t.0)));
+    // a ticket that was never issued
+    let bogus = admm_nn::serving::Ticket(9999);
+    assert_eq!(
+        engine.poll(bogus),
+        Poll::Failed(ServingError::UnknownTicket(9999))
+    );
+}
+
+#[test]
+fn typed_rejections_at_the_front_door() {
+    let (nb, sp) = packaged("mlp", 0.2, 5);
+    let dim = sp.input_dim();
+    let mut reg = ModelRegistry::new();
+    reg.register_named("mlp".into(), Arc::new(sp)).unwrap();
+    // duplicate names are refused at registration
+    let (_, sp2) = packaged("mlp", 0.2, 5);
+    assert_eq!(
+        reg.register_named("mlp".into(), Arc::new(sp2)),
+        Err(ServingError::DuplicateModel("mlp".into()))
+    );
+    let engine = ServingEngine::new(reg, EngineConfig::default()).unwrap();
+
+    assert_eq!(
+        engine.submit(InferRequest::new("nope", vec![0.0; dim])),
+        Err(ServingError::UnknownModel("nope".into()))
+    );
+    assert_eq!(
+        engine.submit(InferRequest::new("mlp", Vec::new())),
+        Err(ServingError::EmptyBatch)
+    );
+    let bad = engine.submit(InferRequest::new("mlp", vec![0.0; dim + 1]));
+    assert!(
+        matches!(bad, Err(ServingError::InputSizeMismatch { .. })),
+        "{bad:?}"
+    );
+    // a well-formed request still flows
+    let ds = data::for_input_shape(&nb.entry().input_shape);
+    let x = ds.batch(Split::Test, 0, 1).x;
+    let logits = engine.infer_sync(InferRequest::new("mlp", x)).unwrap();
+    assert_eq!(logits.len(), 10);
+
+    // an empty registry cannot become an engine
+    assert!(ServingEngine::new(ModelRegistry::new(), EngineConfig::default())
+        .is_err());
+}
