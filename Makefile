@@ -12,6 +12,9 @@
 #   make bench-serving— just the serving-engine throughput cases
 #                       (batched vs single-request dispatch at queue
 #                       depths 1/8/64), written to BENCH_serving.json
+#   make bench-gemm   — just the packed-GEMM cases (proxy-shape
+#                       kernels, fused epilogue, serving throughput at
+#                       queue depth 64), written to BENCH_gemm.json
 #   make bench-report — run the benchmarks, then diff the fresh
 #                       BENCH_hot_paths.json against the committed
 #                       BENCH_baseline.json, printing per-path speedup
@@ -19,10 +22,18 @@
 #                       baseline and commits it (the trajectory anchor);
 #                       later runs never touch the committed file.
 
-.PHONY: verify bench bench-serving bench-report
+.PHONY: verify bench bench-serving bench-gemm bench-report
+
+# Clippy's pedantic style lints (arg-count, index-loop shape) conflict
+# with the kernel code's explicit-index idiom; everything else is -D.
+CLIPPY_LINTS = -D warnings \
+	-A clippy::too_many_arguments \
+	-A clippy::needless_range_loop \
+	-A clippy::manual_div_ceil
 
 verify:
 	cargo build --release && cargo test -q
+	cargo clippy --all-targets -- $(CLIPPY_LINTS)
 	cargo test --release -q -p admm_nn --test integration_pipeline
 	cargo run --release -p admm_nn --example quickstart
 
@@ -33,6 +44,9 @@ bench:
 
 bench-serving:
 	BENCH_JSON_DIR=$(CURDIR) BENCH_ONLY=serving cargo bench --bench hot_paths -- --json
+
+bench-gemm:
+	BENCH_JSON_DIR=$(CURDIR) BENCH_ONLY=gemm cargo bench --bench hot_paths -- --json
 
 bench-report: bench
 	@cp BENCH_baseline.json .bench_baseline.before 2>/dev/null || true

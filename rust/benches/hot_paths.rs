@@ -97,6 +97,15 @@ fn main() {
         suite.finish();
         return;
     }
+    // `make bench-gemm` runs just the packed-GEMM section into its own
+    // BENCH_gemm.json (proxy-shape kernels + serving throughput at
+    // queue depth 64).
+    if std::env::var("BENCH_ONLY").ok().as_deref() == Some("gemm") {
+        let mut suite = BenchSuite::new("gemm");
+        gemm_benches(&mut suite);
+        suite.finish();
+        return;
+    }
     let mut suite = BenchSuite::new("hot_paths");
     println!("== L3 hot paths ==");
     let mut rng = Rng::new(42);
@@ -417,9 +426,163 @@ fn main() {
         }
     }
 
+    gemm_benches(&mut suite);
     serving_benches(&mut suite);
 
     suite.finish();
+}
+
+/// Packed cache-blocked GEMM vs the naive reference at the proxy-model
+/// hot shapes, serial and fanned out on the global pool, plus the fused
+/// bias+ReLU epilogue vs the unfused two-pass form and a batched
+/// serving-throughput case at queue depth 64. The three (m, k, n)
+/// cases are the shapes the train/serving loops actually run: the
+/// lenet5 conv2 im2col GEMM, the alexnet_proxy fc1 dense layer, and
+/// the resnet_proxy strided 1×1 projection shortcut.
+fn gemm_benches(suite: &mut BenchSuite) {
+    use admm_nn::tensor::{self, Epilogue};
+
+    println!("\n== packed GEMM (naive ref vs cache-blocked microkernel) ==");
+    let mut rng = Rng::new(7);
+    let pool = ThreadPool::global();
+    let cases: [(&str, usize, usize, usize); 3] = [
+        ("lenet5 conv2 im2col", 4096, 500, 50),
+        ("alexnet_proxy fc1", 64, 768, 384),
+        ("resnet_proxy 1x1 shortcut", 16384, 16, 32),
+    ];
+    for (label, m, k, n) in cases {
+        let a = rng.normal_vec(m * k, 0.1);
+        let b = rng.normal_vec(k * n, 0.1);
+        let mut out = vec![0.0f32; m * n];
+        let naive = suite.bench(
+            &format!("gemm {label} {m}x{k}x{n} (naive ref)"),
+            1,
+            5,
+            || {
+                tensor::gemm_ref(black_box(&a), black_box(&b), m, k, n, &mut out);
+                black_box(out[0]);
+            },
+        );
+        let packed = suite.bench(
+            &format!("gemm {label} {m}x{k}x{n} (packed)"),
+            1,
+            5,
+            || {
+                tensor::gemm(black_box(&a), black_box(&b), m, k, n, &mut out);
+                black_box(out[0]);
+            },
+        );
+        let packed_par = suite.bench(
+            &format!("gemm {label} {m}x{k}x{n} (packed+par)"),
+            1,
+            5,
+            || {
+                tensor::gemm_par(pool, black_box(&a), black_box(&b), m, k, n, &mut out);
+                black_box(out[0]);
+            },
+        );
+        suite.speedup(&format!("gemm {label} packed vs naive"), &naive, &packed);
+        suite.speedup(&format!("gemm {label} pool fan-out"), &packed, &packed_par);
+    }
+
+    // fused bias+ReLU epilogue vs the two-pass form the backends used
+    // to run (GEMM, then separate bias and clamp sweeps over out)
+    {
+        let (m, k, n) = (4096usize, 500usize, 50usize);
+        let a = rng.normal_vec(m * k, 0.1);
+        let b = rng.normal_vec(k * n, 0.1);
+        let bias = rng.normal_vec(n, 0.1);
+        let mut out = vec![0.0f32; m * n];
+        let two_pass = suite.bench(
+            &format!("gemm+bias+relu {m}x{k}x{n} (two-pass)"),
+            1,
+            5,
+            || {
+                tensor::gemm(black_box(&a), black_box(&b), m, k, n, &mut out);
+                for row in out.chunks_mut(n) {
+                    for (v, &bv) in row.iter_mut().zip(&bias) {
+                        *v += bv;
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+                black_box(out[0]);
+            },
+        );
+        let fused = suite.bench(
+            &format!("gemm+bias+relu {m}x{k}x{n} (fused epilogue)"),
+            1,
+            5,
+            || {
+                tensor::gemm_epi(
+                    black_box(&a),
+                    black_box(&b),
+                    m,
+                    k,
+                    n,
+                    Epilogue::BiasRelu(&bias),
+                    &mut out,
+                );
+                black_box(out[0]);
+            },
+        );
+        suite.speedup(&format!("gemm epilogue fusion {m}x{k}x{n}"), &two_pass, &fused);
+    }
+
+    // serving throughput at queue depth 64: 64 queued single-row
+    // requests coalesced into one batched sparse pass (the workspace
+    // arena and packed kernels sit under this path)
+    {
+        use admm_nn::backend::native::NativeBackend;
+        use admm_nn::backend::sparse_infer::{prune_quantize_package, SparseInfer};
+        use admm_nn::backend::TrainState;
+        use admm_nn::data::{self, Dataset, Split};
+        use admm_nn::serving::{
+            EngineConfig, InferRequest, ModelRegistry, ServingEngine,
+        };
+        use std::sync::Arc;
+        use std::time::Duration;
+
+        let nb = NativeBackend::open("mlp").expect("native backend");
+        let mut st = TrainState::init(nb.entry(), 13);
+        let model = prune_quantize_package(nb.entry(), "mlp", &mut st, 0.05, 4, 8);
+        let sp: Arc<SparseInfer> =
+            Arc::new(SparseInfer::new(&model, nb.entry()).expect("sparse form"));
+        let ds = data::for_input_shape(&nb.entry().input_shape);
+        let dim = sp.input_dim();
+        let batch = ds.batch(Split::Test, 0, 64);
+        let rows: Vec<Vec<f32>> = (0..64)
+            .map(|i| batch.x[i * dim..(i + 1) * dim].to_vec())
+            .collect();
+        let mut reg = ModelRegistry::new();
+        reg.register_named("mlp".into(), sp.clone()).unwrap();
+        let engine = ServingEngine::new(reg, EngineConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 512,
+            pool: None,
+        })
+        .unwrap();
+        suite.bench("serving batched dispatch depth=64 (gemm suite)", 3, 15, || {
+            let tickets: Vec<_> = rows
+                .iter()
+                .map(|r| {
+                    engine
+                        .submit(InferRequest::new("mlp", r.clone()))
+                        .expect("submit")
+                })
+                .collect();
+            let mut total = 0usize;
+            for t in tickets {
+                total += engine.wait(t).expect("wait").len();
+            }
+            black_box(total);
+        });
+        for (name, stats) in engine.stats_all() {
+            println!("    gemm-suite engine [{name}]: {}", stats.summary());
+        }
+    }
 }
 
 /// Serving-engine throughput: micro-batched dispatch vs single-request

@@ -15,13 +15,25 @@
 //! ```
 //!
 //! which is the documented argument-for-argument contract of the AOT
-//! train artifact (`runtime::session`). The heavy GEMMs fan out across
+//! train artifact (`runtime::session`). The heavy GEMMs run through the
+//! packed cache-blocked kernels of [`crate::tensor`], fanned out across
 //! the global [`ThreadPool`] in row blocks (bit-identical to serial at
-//! any width — see [`crate::tensor`]); everything is deterministic for
-//! a fixed seed, so tests and the pipeline behave identically across
-//! machines. Numerical agreement with the PJRT backend is
+//! any width) with the bias-add / ReLU epilogue fused into the GEMM
+//! write-out ([`crate::tensor::Epilogue`]); everything is deterministic
+//! for a fixed seed, so tests and the pipeline behave identically
+//! across machines. Numerical agreement with the PJRT backend is
 //! tolerance-level, not bit-exact (different kernels and reduction
 //! orders).
+//!
+//! Steady-state train steps and inference batches allocate nothing on
+//! the hot path: every working buffer (im2col patch matrices, masked
+//! weights, activations, the backward tape, gradients, argmax maps)
+//! comes from a persistent [`BufPool`] scratch arena owned by the
+//! backend ([`Scratch`], behind one `Mutex` locked once per entry
+//! point). Buffers are taken and returned in a deterministic order each
+//! step, so capacities converge after warmup and
+//! [`NativeBackend::scratch_grow_count`] goes flat — the
+//! workspace-reuse instrumentation tests pin exactly that.
 //!
 //! Supported models: all five proxies. `mlp`, `lenet5`,
 //! `alexnet_proxy`, and `vgg_proxy` are straight-line conv/pool/dense
@@ -31,6 +43,7 @@
 //! head), all gradcheck-tested through the full train-step loss.
 
 use std::collections::HashMap;
+use std::sync::Mutex;
 
 use anyhow::anyhow;
 
@@ -38,8 +51,8 @@ use super::{Hyper, ModelExec, StepStats, TrainState};
 use crate::data::{Batch, Dataset, Split};
 use crate::metrics::EvalStats;
 use crate::runtime::manifest::{ModelEntry, ParamEntry};
-use crate::tensor::{self, Tensor};
-use crate::util::ThreadPool;
+use crate::tensor::{self, Epilogue, Tensor};
+use crate::util::{BufPool, ThreadPool};
 
 // ADAM constants — fixed by python/compile/model.py for every artifact.
 const ADAM_B1: f32 = 0.9;
@@ -131,7 +144,8 @@ pub(crate) fn conv_geom(
 /// 2×2 stride-2 VALID max-pool over an NHWC activation; returns the
 /// pooled activation and, per output element, the flat input index of
 /// its max (first occurrence wins ties, in (ky, kx) scan order) for the
-/// backward routing.
+/// backward routing. Allocating convenience wrapper over
+/// [`maxpool2_into`] (tests and one-shot callers).
 pub(crate) fn maxpool2(
     x: &[f32],
     bsz: usize,
@@ -142,6 +156,24 @@ pub(crate) fn maxpool2(
     let (oh, ow) = (h / 2, w / 2);
     let mut out = vec![0.0f32; bsz * oh * ow * c];
     let mut arg = vec![0u32; bsz * oh * ow * c];
+    maxpool2_into(x, bsz, h, w, c, &mut out, &mut arg);
+    (out, arg)
+}
+
+/// [`maxpool2`] into caller-provided buffers (the hot paths hand in
+/// arena scratch). Fully overwrites `out` and `arg`.
+pub(crate) fn maxpool2_into(
+    x: &[f32],
+    bsz: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    out: &mut [f32],
+    arg: &mut [u32],
+) {
+    let (oh, ow) = (h / 2, w / 2);
+    debug_assert_eq!(out.len(), bsz * oh * ow * c);
+    debug_assert_eq!(arg.len(), bsz * oh * ow * c);
     for b in 0..bsz {
         let base = b * h * w * c;
         for oy in 0..oh {
@@ -167,13 +199,13 @@ pub(crate) fn maxpool2(
             }
         }
     }
-    (out, arg)
 }
 
 /// Global average pool over NHWC spatial dims: (bsz, h, w, c) →
 /// (bsz, c), mean accumulated in f32 in (y, x) scan order — the sparse
 /// serving path reuses this exact routine, so dense and sparse GAP
-/// outputs agree bit-for-bit given identical inputs.
+/// outputs agree bit-for-bit given identical inputs. Allocating wrapper
+/// over [`global_avg_pool_into`].
 pub(crate) fn global_avg_pool(
     x: &[f32],
     bsz: usize,
@@ -181,9 +213,25 @@ pub(crate) fn global_avg_pool(
     w: usize,
     c: usize,
 ) -> Vec<f32> {
-    debug_assert_eq!(x.len(), bsz * h * w * c);
-    let inv = 1.0f32 / (h * w) as f32;
     let mut out = vec![0.0f32; bsz * c];
+    global_avg_pool_into(x, bsz, h, w, c, &mut out);
+    out
+}
+
+/// [`global_avg_pool`] into a caller-provided buffer (arena scratch on
+/// the hot paths). Fully overwrites `out`.
+pub(crate) fn global_avg_pool_into(
+    x: &[f32],
+    bsz: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), bsz * h * w * c);
+    debug_assert_eq!(out.len(), bsz * c);
+    let inv = 1.0f32 / (h * w) as f32;
+    out.fill(0.0);
     for b in 0..bsz {
         let xb = &x[b * h * w * c..(b + 1) * h * w * c];
         let ob = &mut out[b * c..(b + 1) * c];
@@ -196,27 +244,29 @@ pub(crate) fn global_avg_pool(
             *v *= inv;
         }
     }
-    out
 }
 
 /// Residual join `cur = relu(cur + skip)` with the shape gate — shared
 /// by the dense backend and the sparse serving interpreter (like
 /// [`maxpool2`]/[`global_avg_pool`]) so the two paths' join semantics
-/// cannot silently diverge.
+/// cannot silently diverge. `sdims` is the saved skip activation's
+/// (h, w, c); the caller keeps ownership of the skip buffer (so it can
+/// go back to the scratch arena).
 pub(crate) fn residual_join(
     cur: &mut [f32],
-    skip: (Vec<f32>, usize, usize, usize),
+    sx: &[f32],
+    sdims: (usize, usize, usize),
     h: usize,
     w: usize,
     c: usize,
 ) -> crate::Result<()> {
-    let (sx, sh, sw, scn) = skip;
+    let (sh, sw, scn) = sdims;
     if (sh, sw, scn) != (h, w, c) {
         return Err(anyhow!(
             "residual shapes disagree: skip {sh}x{sw}x{scn} vs main {h}x{w}x{c}"
         ));
     }
-    for (v, &s) in cur.iter_mut().zip(&sx) {
+    for (v, &s) in cur.iter_mut().zip(sx) {
         *v += s;
         if *v < 0.0 {
             *v = 0.0;
@@ -525,6 +575,18 @@ enum Rec {
     Gap { h: usize, w: usize, c: usize },
 }
 
+/// Persistent per-backend scratch: free-list arenas for every working
+/// buffer of the forward/backward/step hot paths. One `f32` pool and
+/// one `u32` pool (argmax maps) suffice — each entry point takes and
+/// returns buffers in a deterministic order, so slot capacities
+/// converge after a couple of steps and steady-state calls allocate
+/// nothing.
+#[derive(Default)]
+pub(crate) struct Scratch {
+    pub f: BufPool<f32>,
+    pub u: BufPool<u32>,
+}
+
 /// The pure-Rust [`ModelExec`] implementation.
 pub struct NativeBackend {
     name: String,
@@ -532,6 +594,9 @@ pub struct NativeBackend {
     ops: Vec<Op>,
     /// Weight order li → (weight param index, bias param index).
     widx: Vec<(usize, usize)>,
+    /// Hot-path workspaces; locked once per entry point (`train_step`,
+    /// `evaluate`, `infer`), never nested.
+    scratch: Mutex<Scratch>,
 }
 
 impl NativeBackend {
@@ -577,25 +642,51 @@ impl NativeBackend {
                 widx.push((i, bias));
             }
         }
-        Ok(NativeBackend { name: name.to_string(), entry, ops, widx })
+        Ok(NativeBackend {
+            name: name.to_string(),
+            entry,
+            ops,
+            widx,
+            scratch: Mutex::new(Scratch::default()),
+        })
     }
 
-    /// Masked weight W⊙M for weight layer `li`.
-    fn masked_weight(&self, params: &[Tensor], masks: &[Tensor], li: usize) -> Vec<f32> {
+    /// Workspace growth events so far (both element types) — the
+    /// zero-alloc instrumentation hook: flat across steady-state steps.
+    pub fn scratch_grow_count(&self) -> usize {
+        let sc = self.scratch.lock().unwrap();
+        sc.f.grow_count() + sc.u.grow_count()
+    }
+
+    /// Masked weight W⊙M for weight layer `li`, taken from the scratch
+    /// arena (return it with `sc.f.put` when done).
+    fn masked_weight(
+        &self,
+        sc: &mut Scratch,
+        params: &[Tensor],
+        masks: &[Tensor],
+        li: usize,
+    ) -> Vec<f32> {
         let (wi, _) = self.widx[li];
         let w = params[wi].data();
         let m = masks[li].data();
         debug_assert_eq!(w.len(), m.len(), "mask/weight length mismatch");
-        w.iter().zip(m).map(|(&a, &b)| a * b).collect()
+        let mut wm = sc.f.take_uninit(w.len());
+        for ((o, &a), &b) in wm.iter_mut().zip(w).zip(m) {
+            *o = a * b;
+        }
+        wm
     }
 
     /// One conv application of weight layer `li` on `x` — shared by the
-    /// main path and the projection shortcut: im2col at `stride`,
-    /// masked GEMM, bias, optional ReLU. Returns `(y, geom, cols)`
-    /// (`cols` feeds the backward tape).
+    /// main path and the projection shortcut: im2col at `stride`, then
+    /// one masked GEMM with the bias(+ReLU) epilogue fused into its
+    /// write-out. Returns `(y, geom, cols)` (`cols` feeds the backward
+    /// tape; both come from the scratch arena).
     #[allow(clippy::too_many_arguments)]
     fn conv_forward(
         &self,
+        sc: &mut Scratch,
         pool: &ThreadPool,
         params: &[Tensor],
         masks: &[Tensor],
@@ -613,23 +704,17 @@ impl NativeBackend {
         let g = conv_geom(h, w, c, params[wi].shape(), same, stride)?;
         let patch = g.kh * g.kw * g.c;
         let rows = bsz * g.oh * g.ow;
-        let mut cols = Vec::new();
+        let mut cols = sc.f.take_uninit(0);
         tensor::im2col_str(
             x, bsz, g.h, g.w, g.c, g.kh, g.kw, g.stride, g.pt, g.pl,
             g.oh, g.ow, &mut cols,
         );
-        let wm = self.masked_weight(params, masks, li);
-        let mut y = vec![0.0f32; rows * g.cout];
-        tensor::gemm_par(pool, &cols, &wm, rows, patch, g.cout, &mut y);
+        let wm = self.masked_weight(sc, params, masks, li);
+        let mut y = sc.f.take_uninit(rows * g.cout);
         let bias = params[bi].data();
-        for row in y.chunks_mut(g.cout) {
-            for (v, &bv) in row.iter_mut().zip(bias) {
-                *v += bv;
-                if relu && *v < 0.0 {
-                    *v = 0.0;
-                }
-            }
-        }
+        let epi = if relu { Epilogue::BiasRelu(bias) } else { Epilogue::Bias(bias) };
+        tensor::gemm_par_epi(pool, &cols, &wm, rows, patch, g.cout, epi, &mut y);
+        sc.f.put(wm);
         Ok((y, g, cols))
     }
 
@@ -639,6 +724,7 @@ impl NativeBackend {
     #[allow(clippy::too_many_arguments)]
     fn conv_backward(
         &self,
+        sc: &mut Scratch,
         pool: &ThreadPool,
         params: &[Tensor],
         masks: &[Tensor],
@@ -664,20 +750,25 @@ impl NativeBackend {
         if !need_dx {
             return None;
         }
-        let wm = self.masked_weight(params, masks, li);
-        let mut dcols = vec![0.0f32; rows * patch];
+        let wm = self.masked_weight(sc, params, masks, li);
+        let mut dcols = sc.f.take_uninit(rows * patch);
         tensor::gemm_nt_par(pool, dy, &wm, rows, geom.cout, patch, &mut dcols);
-        let mut dx = Vec::new();
+        sc.f.put(wm);
+        let mut dx = sc.f.take_uninit(0);
         tensor::col2im_str(
             &dcols, bsz, geom.h, geom.w, geom.c, geom.kh, geom.kw,
             geom.stride, geom.pt, geom.pl, geom.oh, geom.ow, &mut dx,
         );
+        sc.f.put(dcols);
         Some(dx)
     }
 
-    /// Run the plan. `record` keeps the per-op tape for backward.
+    /// Run the plan. `record` keeps the per-op tape for backward. All
+    /// working buffers (and everything the returned tape owns) come
+    /// from `sc`; [`NativeBackend::recycle_tape`] returns them.
     fn forward(
         &self,
+        sc: &mut Scratch,
         params: &[Tensor],
         masks: &[Tensor],
         x: &[f32],
@@ -701,7 +792,8 @@ impl NativeBackend {
             [ih, iw, ic] => (ih, iw, ic),
             ref other => return Err(anyhow!("unsupported input shape {other:?}")),
         };
-        let mut cur: Vec<f32> = x.to_vec();
+        let mut cur = sc.f.take_uninit(x.len());
+        cur.copy_from_slice(x);
         let mut tape: Vec<Rec> = Vec::new();
         // Saved residual activations: (data, h, w, c) per open edge.
         let mut skips: Vec<(Vec<f32>, usize, usize, usize)> = Vec::new();
@@ -725,59 +817,61 @@ impl NativeBackend {
                             h * w * c
                         ));
                     }
-                    let wm = self.masked_weight(params, masks, li);
-                    let mut y = vec![0.0f32; bsz * dout];
-                    tensor::gemm_par(pool, &cur, &wm, bsz, din, dout, &mut y);
+                    let wm = self.masked_weight(sc, params, masks, li);
+                    let mut y = sc.f.take_uninit(bsz * dout);
                     let bias = params[bi].data();
-                    for row in y.chunks_mut(dout) {
-                        for (v, &bv) in row.iter_mut().zip(bias) {
-                            *v += bv;
-                            if relu && *v < 0.0 {
-                                *v = 0.0;
-                            }
-                        }
-                    }
+                    let epi = if relu {
+                        Epilogue::BiasRelu(bias)
+                    } else {
+                        Epilogue::Bias(bias)
+                    };
+                    tensor::gemm_par_epi(pool, &cur, &wm, bsz, din, dout, epi, &mut y);
+                    sc.f.put(wm);
                     let x_in = std::mem::replace(&mut cur, y);
                     (h, w, c) = (1, 1, dout);
                     if record {
-                        tape.push(Rec::Dense {
-                            li,
-                            relu,
-                            din,
-                            dout,
-                            x: x_in,
-                            y: cur.clone(),
-                        });
+                        let mut yc = sc.f.take_uninit(cur.len());
+                        yc.copy_from_slice(&cur);
+                        tape.push(Rec::Dense { li, relu, din, dout, x: x_in, y: yc });
+                    } else {
+                        sc.f.put(x_in);
                     }
                 }
                 Op::Conv { li, same, relu, stride } => {
                     let (y, g, cols) = self.conv_forward(
-                        pool, params, masks, li, &cur, bsz, h, w, c, same,
+                        sc, pool, params, masks, li, &cur, bsz, h, w, c, same,
                         stride, relu,
                     )?;
-                    cur = y;
+                    let x_in = std::mem::replace(&mut cur, y);
+                    sc.f.put(x_in);
                     (h, w, c) = (g.oh, g.ow, g.cout);
                     if record {
-                        tape.push(Rec::Conv {
-                            li,
-                            relu,
-                            geom: g,
-                            cols,
-                            y: cur.clone(),
-                        });
+                        let mut yc = sc.f.take_uninit(cur.len());
+                        yc.copy_from_slice(&cur);
+                        tape.push(Rec::Conv { li, relu, geom: g, cols, y: yc });
+                    } else {
+                        sc.f.put(cols);
                     }
                 }
                 Op::MaxPool2 => {
                     let in_len = cur.len();
-                    let (y, argmax) = maxpool2(&cur, bsz, h, w, c);
-                    cur = y;
-                    (h, w) = (h / 2, w / 2);
+                    let (oh, ow) = (h / 2, w / 2);
+                    let mut y = sc.f.take_uninit(bsz * oh * ow * c);
+                    let mut argmax = sc.u.take_uninit(bsz * oh * ow * c);
+                    maxpool2_into(&cur, bsz, h, w, c, &mut y, &mut argmax);
+                    let x_in = std::mem::replace(&mut cur, y);
+                    sc.f.put(x_in);
+                    (h, w) = (oh, ow);
                     if record {
                         tape.push(Rec::Pool { in_len, argmax });
+                    } else {
+                        sc.u.put(argmax);
                     }
                 }
                 Op::SaveSkip => {
-                    skips.push((cur.clone(), h, w, c));
+                    let mut saved = sc.f.take_uninit(cur.len());
+                    saved.copy_from_slice(&cur);
+                    skips.push((saved, h, w, c));
                     if record {
                         tape.push(Rec::SaveSkip);
                     }
@@ -787,26 +881,34 @@ impl NativeBackend {
                         .pop()
                         .ok_or_else(|| anyhow!("SkipConv with no saved skip"))?;
                     let (y, g, cols) = self.conv_forward(
-                        pool, params, masks, li, &sx, bsz, sh, sw, scn, true,
+                        sc, pool, params, masks, li, &sx, bsz, sh, sw, scn, true,
                         stride, false,
                     )?;
+                    sc.f.put(sx);
                     skips.push((y, g.oh, g.ow, g.cout));
                     if record {
                         tape.push(Rec::SkipConv { li, geom: g, cols });
+                    } else {
+                        sc.f.put(cols);
                     }
                 }
                 Op::AddSkip => {
-                    let skip = skips
+                    let (sx, sh, sw, scn) = skips
                         .pop()
                         .ok_or_else(|| anyhow!("AddSkip with no saved skip"))?;
-                    residual_join(&mut cur, skip, h, w, c)?;
+                    residual_join(&mut cur, &sx, (sh, sw, scn), h, w, c)?;
+                    sc.f.put(sx);
                     if record {
-                        tape.push(Rec::AddSkip { y: cur.clone() });
+                        let mut yc = sc.f.take_uninit(cur.len());
+                        yc.copy_from_slice(&cur);
+                        tape.push(Rec::AddSkip { y: yc });
                     }
                 }
                 Op::GlobalAvgPool => {
-                    let y = global_avg_pool(&cur, bsz, h, w, c);
-                    cur = y;
+                    let mut y = sc.f.take_uninit(bsz * c);
+                    global_avg_pool_into(&cur, bsz, h, w, c, &mut y);
+                    let x_in = std::mem::replace(&mut cur, y);
+                    sc.f.put(x_in);
                     if record {
                         tape.push(Rec::Gap { h, w, c });
                     }
@@ -878,8 +980,11 @@ impl NativeBackend {
 
     /// Backward through the tape; returns per-param gradients of the
     /// *data* loss (ADMM penalty / L1 / mask are applied by the caller).
+    /// Gradient buffers come from `sc` — return them with `sc.f.put`
+    /// when consumed.
     fn backward(
         &self,
+        sc: &mut Scratch,
         params: &[Tensor],
         masks: &[Tensor],
         tape: &[Rec],
@@ -891,7 +996,7 @@ impl NativeBackend {
             .entry
             .params
             .iter()
-            .map(|p| vec![0.0f32; p.numel()])
+            .map(|p| sc.f.take(p.numel()))
             .collect();
         let mut g = dlogits;
         // Gradients queued for the skip branch of each open residual
@@ -921,10 +1026,11 @@ impl NativeBackend {
                     }
                     tensor::gemm_tn_par(pool, x, &g, rows, *din, *dout, &mut grads[wi]);
                     if need_dx {
-                        let wm = self.masked_weight(params, masks, *li);
-                        let mut dx = vec![0.0f32; rows * din];
+                        let wm = self.masked_weight(sc, params, masks, *li);
+                        let mut dx = sc.f.take_uninit(rows * din);
                         tensor::gemm_nt_par(pool, &g, &wm, rows, *dout, *din, &mut dx);
-                        g = dx;
+                        sc.f.put(wm);
+                        sc.f.put(std::mem::replace(&mut g, dx));
                     }
                 }
                 Rec::Conv { li, relu, geom, cols, y } => {
@@ -936,18 +1042,18 @@ impl NativeBackend {
                         }
                     }
                     if let Some(dx) = self.conv_backward(
-                        pool, params, masks, &mut grads, *li, geom, cols, &g,
-                        bsz, need_dx,
+                        sc, pool, params, masks, &mut grads, *li, geom, cols,
+                        &g, bsz, need_dx,
                     ) {
-                        g = dx;
+                        sc.f.put(std::mem::replace(&mut g, dx));
                     }
                 }
                 Rec::Pool { in_len, argmax } => {
-                    let mut dx = vec![0.0f32; *in_len];
+                    let mut dx = sc.f.take(*in_len);
                     for (&am, &gv) in argmax.iter().zip(&g) {
                         dx[am as usize] += gv;
                     }
-                    g = dx;
+                    sc.f.put(std::mem::replace(&mut g, dx));
                 }
                 Rec::AddSkip { y } => {
                     // shared ReLU gate of the join, then the same
@@ -957,7 +1063,9 @@ impl NativeBackend {
                             *gv = 0.0;
                         }
                     }
-                    skip_grads.push(g.clone());
+                    let mut gc = sc.f.take_uninit(g.len());
+                    gc.copy_from_slice(&g);
+                    skip_grads.push(gc);
                 }
                 Rec::SkipConv { li, geom, cols } => {
                     let sg = skip_grads
@@ -967,10 +1075,11 @@ impl NativeBackend {
                     // stem at minimum), so its dx is always needed
                     let dx = self
                         .conv_backward(
-                            pool, params, masks, &mut grads, *li, geom, cols,
-                            &sg, bsz, true,
+                            sc, pool, params, masks, &mut grads, *li, geom,
+                            cols, &sg, bsz, true,
                         )
                         .expect("dx requested");
+                    sc.f.put(sg);
                     skip_grads.push(dx);
                 }
                 Rec::SaveSkip => {
@@ -981,11 +1090,12 @@ impl NativeBackend {
                     for (gv, &sv) in g.iter_mut().zip(&sg) {
                         *gv += sv;
                     }
+                    sc.f.put(sg);
                 }
                 Rec::Gap { h, w, c } => {
                     let (h, w, c) = (*h, *w, *c);
                     let inv = 1.0f32 / (h * w) as f32;
-                    let mut dx = vec![0.0f32; bsz * h * w * c];
+                    let mut dx = sc.f.take_uninit(bsz * h * w * c);
                     for b in 0..bsz {
                         let gb = &g[b * c..(b + 1) * c];
                         let ob = &mut dx[b * h * w * c..(b + 1) * h * w * c];
@@ -997,12 +1107,33 @@ impl NativeBackend {
                             }
                         }
                     }
-                    g = dx;
+                    sc.f.put(std::mem::replace(&mut g, dx));
                 }
             }
         }
         debug_assert!(skip_grads.is_empty(), "unconsumed skip gradients");
+        sc.f.put(g);
         grads
+    }
+
+    /// Return every buffer a forward tape owns to the scratch arena.
+    fn recycle_tape(&self, sc: &mut Scratch, tape: Vec<Rec>) {
+        for rec in tape {
+            match rec {
+                Rec::Flatten | Rec::SaveSkip | Rec::Gap { .. } => {}
+                Rec::Dense { x, y, .. } => {
+                    sc.f.put(x);
+                    sc.f.put(y);
+                }
+                Rec::Conv { cols, y, .. } => {
+                    sc.f.put(cols);
+                    sc.f.put(y);
+                }
+                Rec::Pool { argmax, .. } => sc.u.put(argmax),
+                Rec::SkipConv { cols, .. } => sc.f.put(cols),
+                Rec::AddSkip { y } => sc.f.put(y),
+            }
+        }
     }
 }
 
@@ -1025,12 +1156,15 @@ impl ModelExec for NativeBackend {
         debug_assert_eq!(bsz, self.entry.train_batch);
         let classes = self.entry.n_classes;
 
+        let sc = &mut *self.scratch.lock().unwrap();
         let (logits, tape) =
-            self.forward(&st.params, &st.masks, &batch.x, bsz, true)?;
-        let mut dlogits = Vec::new();
+            self.forward(sc, &st.params, &st.masks, &batch.x, bsz, true)?;
+        let mut dlogits = sc.f.take_uninit(0);
         let (data_loss, correct) =
             Self::ce_stats(&logits, &batch.y, bsz, classes, Some(&mut dlogits));
-        let mut grads = self.backward(&st.params, &st.masks, &tape, dlogits, bsz);
+        let mut grads = self.backward(sc, &st.params, &st.masks, &tape, dlogits, bsz);
+        self.recycle_tape(sc, tape);
+        sc.f.put(logits);
 
         // ADMM penalty + L1 subgradient + hard masks on the weight grads.
         let mut penalty = 0.0f64;
@@ -1088,6 +1222,9 @@ impl ModelExec for NativeBackend {
                 }
             }
         }
+        for g in grads.drain(..) {
+            sc.f.put(g);
+        }
         st.step += 1.0;
         Ok(StepStats {
             loss: (data_loss + penalty) as f32,
@@ -1104,18 +1241,23 @@ impl ModelExec for NativeBackend {
         let b = self.entry.eval_batch;
         let classes = self.entry.n_classes;
         let mut stats = EvalStats::default();
+        let sc = &mut *self.scratch.lock().unwrap();
         for i in 0..n_batches {
             let batch = data.batch(Split::Test, i, b);
             let (logits, _) =
-                self.forward(&st.params, &st.masks, &batch.x, b, false)?;
+                self.forward(sc, &st.params, &st.masks, &batch.x, b, false)?;
             let (loss, correct) = Self::ce_stats(&logits, &batch.y, b, classes, None);
+            sc.f.put(logits);
             stats.push(loss, correct, b);
         }
         Ok(stats)
     }
 
     fn infer(&self, st: &TrainState, x: &[f32], b: usize) -> crate::Result<Vec<f32>> {
-        let (logits, _) = self.forward(&st.params, &st.masks, x, b, false)?;
+        // The returned logits escape to the caller (API contract), so
+        // they leave the arena; every internal buffer stays pooled.
+        let sc = &mut *self.scratch.lock().unwrap();
+        let (logits, _) = self.forward(sc, &st.params, &st.masks, x, b, false)?;
         Ok(logits)
     }
 
@@ -1216,11 +1358,13 @@ mod tests {
         let hyper = Hyper { lr: 1e-3, l1_lambda: 1e-3 };
 
         let loss_of = |st: &TrainState| -> f64 {
+            let sc = &mut *nb.scratch.lock().unwrap();
             let (logits, _) = nb
-                .forward(&st.params, &st.masks, &batch.x, bsz, false)
+                .forward(sc, &st.params, &st.masks, &batch.x, bsz, false)
                 .unwrap();
             let (data_loss, _) =
                 NativeBackend::ce_stats(&logits, &batch.y, bsz, 10, None);
+            sc.f.put(logits);
             let mut loss = data_loss;
             for (li, &(wi, _)) in nb.widx.iter().enumerate() {
                 let w = st.params[wi].data();
@@ -1238,12 +1382,17 @@ mod tests {
         };
 
         // analytic gradients exactly as train_step assembles them
-        let (logits, tape) = nb
-            .forward(&st.params, &st.masks, &batch.x, bsz, true)
-            .unwrap();
-        let mut dlogits = Vec::new();
-        NativeBackend::ce_stats(&logits, &batch.y, bsz, 10, Some(&mut dlogits));
-        let mut grads = nb.backward(&st.params, &st.masks, &tape, dlogits, bsz);
+        let mut grads = {
+            let sc = &mut *nb.scratch.lock().unwrap();
+            let (logits, tape) = nb
+                .forward(sc, &st.params, &st.masks, &batch.x, bsz, true)
+                .unwrap();
+            let mut dlogits = Vec::new();
+            NativeBackend::ce_stats(&logits, &batch.y, bsz, 10, Some(&mut dlogits));
+            let grads = nb.backward(sc, &st.params, &st.masks, &tape, dlogits, bsz);
+            nb.recycle_tape(sc, tape);
+            grads
+        };
         for (li, &(wi, _)) in nb.widx.iter().enumerate() {
             let w = st.params[wi].data().to_vec();
             let z = st.zs[li].data().to_vec();

@@ -22,16 +22,22 @@
 //! All five proxies serve through this path — the residual plan ops
 //! (skip save/add, strided projection shortcuts, global average pool)
 //! reuse the native backend's op interpreter semantics. Rows of a batch
-//! are computed independently with a fixed per-row accumulation order,
-//! so batched logits are **bit-identical** to single-example calls at
-//! any pool width; [`crate::serving::ServingEngine`] builds its
-//! micro-batching contract on exactly that invariant. Direct calls go
-//! through [`SparseInfer::infer_with`]; concurrent multi-model serving
-//! belongs behind the engine.
+//! are computed independently with a fixed per-row accumulation order
+//! (the ReLU is fused into the per-row write-out, which keeps that
+//! order intact), so batched logits are **bit-identical** to
+//! single-example calls at any pool width;
+//! [`crate::serving::ServingEngine`] builds its micro-batching contract
+//! on exactly that invariant. Working buffers (im2col columns,
+//! activations) live in a persistent scratch arena so the steady-state
+//! serving batch allocates nothing but its returned logits. Direct
+//! calls go through [`SparseInfer::infer_with`]; concurrent multi-model
+//! serving belongs behind the engine.
+
+use std::sync::Mutex;
 
 use anyhow::anyhow;
 
-use super::native::{self, Op};
+use super::native::{self, Op, Scratch};
 use super::TrainState;
 use crate::coordinator::checkpoint::{CompressedLayer, CompressedModel};
 use crate::runtime::manifest::ModelEntry;
@@ -107,6 +113,13 @@ pub struct SparseInfer {
     layers: Vec<SparseLayer>,
     /// HWIO shapes of the original weight tensors (conv geometry).
     wshapes: Vec<Vec<usize>>,
+    /// Reusable working buffers (im2col columns, activations, argmax
+    /// maps): the steady-state serving batch draws everything from here
+    /// instead of allocating. Guarded by `try_lock` with a call-local
+    /// fallback, so concurrent direct `infer_with` callers never
+    /// serialize on scratch — they just pay the allocations the arena
+    /// would have saved.
+    scratch: Mutex<Scratch>,
 }
 
 impl SparseInfer {
@@ -187,7 +200,16 @@ impl SparseInfer {
             ops,
             layers,
             wshapes,
+            scratch: Mutex::new(Scratch::default()),
         })
+    }
+
+    /// Workspace growth events since construction — flat after warmup
+    /// when the steady state reuses every buffer (the zero-alloc
+    /// instrumentation hook; see `tests/workspace_alloc.rs`).
+    pub fn scratch_grow_count(&self) -> usize {
+        let sc = self.scratch.lock().unwrap();
+        sc.f.grow_count() + sc.u.grow_count()
     }
 
     pub fn name(&self) -> &str {
@@ -204,10 +226,22 @@ impl SparseInfer {
     /// `x` fan out across `pool`; within a row, accumulation walks the
     /// CSR rows in ascending input-feature order, mirroring the dense
     /// GEMM's k-order (so sparse and dense agree to rounding, not just
-    /// to reordering tolerance). Rows are computed independently, so a
-    /// row's result is bit-identical at any batch size and pool width —
-    /// the invariant the serving engine's micro-batching relies on.
-    fn spmm(&self, pool: &ThreadPool, li: usize, x: &[f32], rows_x: usize, out: &mut [f32]) {
+    /// to reordering tolerance). With `relu`, the clamp runs in the same
+    /// per-row write-out instead of a second pass over `out` — it is
+    /// elementwise after the row's accumulation completes, so results
+    /// are bit-identical to the unfused form. Rows are computed
+    /// independently, so a row's result is bit-identical at any batch
+    /// size and pool width — the invariant the serving engine's
+    /// micro-batching relies on.
+    fn spmm(
+        &self,
+        pool: &ThreadPool,
+        li: usize,
+        x: &[f32],
+        rows_x: usize,
+        relu: bool,
+        out: &mut [f32],
+    ) {
         let layer = &self.layers[li];
         let (k, n) = (layer.csr.rows, layer.csr.cols);
         debug_assert_eq!(x.len(), rows_x * k);
@@ -232,6 +266,13 @@ impl SparseInfer {
                     for i in s..e {
                         orow[csr.col_idx[i] as usize] +=
                             xv * (q * csr.codes[i] as f32);
+                    }
+                }
+                if relu {
+                    for v in orow.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
                     }
                 }
             }
@@ -293,7 +334,20 @@ impl SparseInfer {
             [ih, iw, ic] => (ih, iw, ic),
             ref other => return Err(anyhow!("unsupported input shape {other:?}")),
         };
-        let mut cur: Vec<f32> = x.to_vec();
+        // Scratch arena: the common case (one caller, or calls routed
+        // through the serving engine's scheduler thread) reuses the
+        // model's persistent buffers; a concurrent caller that loses the
+        // try_lock race runs on a throwaway local arena instead of
+        // blocking. Error paths below drop buffers instead of recycling
+        // them — they are cold by construction.
+        let mut local = Scratch::default();
+        let mut guard = self.scratch.try_lock();
+        let sc: &mut Scratch = match guard {
+            Ok(ref mut g) => &mut **g,
+            Err(_) => &mut local,
+        };
+        let mut cur = sc.f.take_uninit(x.len());
+        cur.copy_from_slice(x);
         // Saved residual activations: (data, h, w, c) per open edge.
         let mut skips: Vec<(Vec<f32>, usize, usize, usize)> = Vec::new();
         for op in &self.ops {
@@ -312,48 +366,51 @@ impl SparseInfer {
                             h * w * c
                         ));
                     }
-                    let mut y = vec![0.0f32; bsz * dout];
-                    self.spmm(pool, li, &cur, bsz, &mut y);
-                    if relu {
-                        for v in y.iter_mut() {
-                            if *v < 0.0 {
-                                *v = 0.0;
-                            }
-                        }
-                    }
-                    cur = y;
+                    let mut y = sc.f.take_uninit(bsz * dout);
+                    self.spmm(pool, li, &cur, bsz, relu, &mut y);
+                    sc.f.put(std::mem::replace(&mut cur, y));
                     (h, w, c) = (1, 1, dout);
                 }
                 Op::Conv { li, same, relu, stride } => {
-                    let (y, oh, ow, cout) =
-                        self.conv_spmm(pool, li, &cur, bsz, h, w, c, same, stride, relu)?;
-                    cur = y;
+                    let (y, oh, ow, cout) = self
+                        .conv_spmm(pool, sc, li, &cur, bsz, h, w, c, same, stride, relu)?;
+                    sc.f.put(std::mem::replace(&mut cur, y));
                     (h, w, c) = (oh, ow, cout);
                 }
                 Op::MaxPool2 => {
-                    let (y, _) = native::maxpool2(&cur, bsz, h, w, c);
-                    cur = y;
-                    (h, w) = (h / 2, w / 2);
+                    let (oh, ow) = (h / 2, w / 2);
+                    let mut y = sc.f.take_uninit(bsz * oh * ow * c);
+                    let mut arg = sc.u.take_uninit(bsz * oh * ow * c);
+                    native::maxpool2_into(&cur, bsz, h, w, c, &mut y, &mut arg);
+                    sc.u.put(arg);
+                    sc.f.put(std::mem::replace(&mut cur, y));
+                    (h, w) = (oh, ow);
                 }
                 Op::SaveSkip => {
-                    skips.push((cur.clone(), h, w, c));
+                    let mut s = sc.f.take_uninit(cur.len());
+                    s.copy_from_slice(&cur);
+                    skips.push((s, h, w, c));
                 }
                 Op::SkipConv { li, stride } => {
                     let (sx, sh, sw, scn) = skips
                         .pop()
                         .ok_or_else(|| anyhow!("SkipConv with no saved skip"))?;
-                    let (y, oh, ow, cout) =
-                        self.conv_spmm(pool, li, &sx, bsz, sh, sw, scn, true, stride, false)?;
+                    let (y, oh, ow, cout) = self
+                        .conv_spmm(pool, sc, li, &sx, bsz, sh, sw, scn, true, stride, false)?;
+                    sc.f.put(sx);
                     skips.push((y, oh, ow, cout));
                 }
                 Op::AddSkip => {
-                    let skip = skips
+                    let (sx, sh, sw, scn) = skips
                         .pop()
                         .ok_or_else(|| anyhow!("AddSkip with no saved skip"))?;
-                    native::residual_join(&mut cur, skip, h, w, c)?;
+                    native::residual_join(&mut cur, &sx, (sh, sw, scn), h, w, c)?;
+                    sc.f.put(sx);
                 }
                 Op::GlobalAvgPool => {
-                    cur = native::global_avg_pool(&cur, bsz, h, w, c);
+                    let mut y = sc.f.take_uninit(bsz * c);
+                    native::global_avg_pool_into(&cur, bsz, h, w, c, &mut y);
+                    sc.f.put(std::mem::replace(&mut cur, y));
                     (h, w) = (1, 1);
                 }
             }
@@ -365,16 +422,24 @@ impl SparseInfer {
                 self.n_classes
             ));
         }
-        Ok(cur)
+        // The logits escape to the caller, so hand back a plain Vec and
+        // recycle the arena buffer — the result allocation is the API
+        // contract; the workspace stays closed.
+        let out = cur[..].to_vec();
+        sc.f.put(cur);
+        Ok(out)
     }
 
     /// One conv application through the sparse GEMM (shared by the main
     /// path and the projection shortcut): im2col at the geometry's
-    /// stride, spmm against the layer's CSR, optional ReLU.
+    /// stride into arena scratch, spmm against the layer's CSR with the
+    /// ReLU fused into the per-row write-out. The returned activation
+    /// comes from `sc` — the caller recycles it when done.
     #[allow(clippy::too_many_arguments)]
     fn conv_spmm(
         &self,
         pool: &ThreadPool,
+        sc: &mut Scratch,
         li: usize,
         x: &[f32],
         bsz: usize,
@@ -388,21 +453,15 @@ impl SparseInfer {
         let g = native::conv_geom(h, w, c, &self.wshapes[li], same, stride)?;
         let patch = g.kh * g.kw * g.c;
         let rows = bsz * g.oh * g.ow;
-        let mut cols = Vec::new();
+        let mut cols = sc.f.take_uninit(0);
         tensor::im2col_str(
             x, bsz, g.h, g.w, g.c, g.kh, g.kw, g.stride, g.pt, g.pl,
             g.oh, g.ow, &mut cols,
         );
         debug_assert_eq!(patch, self.layers[li].csr.rows);
-        let mut y = vec![0.0f32; rows * g.cout];
-        self.spmm(pool, li, &cols, rows, &mut y);
-        if relu {
-            for v in y.iter_mut() {
-                if *v < 0.0 {
-                    *v = 0.0;
-                }
-            }
-        }
+        let mut y = sc.f.take_uninit(rows * g.cout);
+        self.spmm(pool, li, &cols, rows, relu, &mut y);
+        sc.f.put(cols);
         Ok((y, g.oh, g.ow, g.cout))
     }
 }

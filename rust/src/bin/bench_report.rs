@@ -77,13 +77,20 @@ fn main() {
     };
 
     if base_results.is_empty() {
+        // No diff table: comparing against the empty placeholder would
+        // print every path as "new" and read like a real trajectory.
+        println!("== baseline unseeded — no trajectory ==");
+        println!(
+            "{base_path} has no results (committed placeholder); nothing to \
+             diff against yet."
+        );
         if let Err(e) = std::fs::copy(&fresh_path, &base_path) {
             eprintln!("could not seed baseline {base_path}: {e}");
             std::process::exit(2);
         }
         println!(
-            "baseline {base_path} was empty — seeded from {fresh_path} \
-             ({} paths); commit it to track the trajectory",
+            "seeded {base_path} from {fresh_path} ({} paths); commit it to \
+             start tracking the trajectory",
             fresh_results.len()
         );
         return;

@@ -16,8 +16,10 @@
 //! * [`backend`] — the execution seam: [`backend::ModelExec`] (train
 //!   step / evaluate / infer / slow-state invalidation) plus the host
 //!   [`backend::TrainState`] contract; [`backend::native`] implements
-//!   it in pure Rust (im2col conv + GEMM, softmax-CE, fused ADAM+ADMM
-//!   update — all five proxies, residual edges included), and
+//!   it in pure Rust (im2col conv + packed cache-blocked GEMM with a
+//!   fused bias+ReLU epilogue, softmax-CE, fused ADAM+ADMM update —
+//!   all five proxies, residual edges included, working buffers drawn
+//!   from a persistent scratch arena), and
 //!   [`backend::sparse_infer`] serves inference directly from the
 //!   stored [`coordinator::CompressedModel`] representation (RelIndex →
 //!   CSR, levels materialized on the fly).
@@ -65,16 +67,20 @@
 //!   size-aware [`util::ThreadPool`] (std-only) that fans per-layer
 //!   Z-updates and quantizer searches across cores with bit-identical
 //!   results (workers park when idle; dominant layers additionally
-//!   split elementwise work across idle lanes), and the bench harness
-//!   with optional machine-readable JSON output
+//!   split elementwise work across idle lanes), the free-list
+//!   [`util::BufPool`] scratch arena behind the zero-alloc hot paths,
+//!   and the bench harness with optional machine-readable JSON output
 //!   ([`util::bench::BenchSuite`]).
 //!
 //! Python never runs at coordination time: the native backend needs no
 //! artifacts at all, and after `make artifacts` the PJRT path is
-//! self-contained too. Host-side projection/selection paths are
-//! bit-identical at any pool width (property-tested); PJRT-vs-native
-//! agreement is tolerance-checked (different kernels, different
-//! reduction orders), as is sparse-vs-dense inference (≤1e-4/logit).
+//! self-contained too. Host-side projection/selection paths and the
+//! packed GEMM family are bit-identical at any pool width
+//! (property-tested; a GEMM row's reduction order is a fixed function
+//! of the inner dimension, never of how rows were split);
+//! PJRT-vs-native agreement is tolerance-checked (different kernels,
+//! different reduction orders), as are sparse-vs-dense inference
+//! (≤1e-4/logit) and packed-vs-naive GEMM (`tensor::gemm_ref`).
 
 pub mod backend;
 pub mod baselines;

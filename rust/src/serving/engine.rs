@@ -132,6 +132,11 @@ struct Shared {
     cfg_queue_cap: usize,
     pool: Option<Arc<ThreadPool>>,
     q: Mutex<QState>,
+    /// Persistent input pack buffer for batched dispatch. Only the
+    /// scheduler thread touches it (the lock is uncontended — it
+    /// exists to keep `Shared: Sync`), so the steady-state batch packs
+    /// into recycled capacity instead of allocating per dispatch.
+    batch_x: Mutex<Vec<f32>>,
     /// Wakes the scheduler (new work / shutdown).
     work: Condvar,
     /// Wakes `wait`/`infer_sync` callers (new results).
@@ -171,6 +176,7 @@ impl ServingEngine {
             cfg_queue_cap: cfg.queue_cap.max(1),
             pool: cfg.pool,
             q: Mutex::new(QState::default()),
+            batch_x: Mutex::new(Vec::new()),
             work: Condvar::new(),
             done: Condvar::new(),
             stats,
@@ -444,8 +450,11 @@ fn dispatch(sh: &Shared, batch: Extracted) {
         let dim = backend.input_dim();
         let classes = backend.n_classes();
         // pack inputs in ticket order — the deterministic request→slot
-        // assignment behind the bit-identical guarantee
-        let mut x = Vec::with_capacity(rows * dim);
+        // assignment behind the bit-identical guarantee — into the
+        // persistent buffer (no per-dispatch allocation at steady state)
+        let mut x = sh.batch_x.lock().expect("batch buffer poisoned");
+        x.clear();
+        x.reserve(rows * dim);
         for p in &live {
             x.extend_from_slice(&p.input);
         }

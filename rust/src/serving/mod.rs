@@ -167,10 +167,13 @@ impl InferBackend for SparseInfer {
 /// The dense `ModelExec` path behind the serving trait: a native
 /// backend plus a frozen [`TrainState`] snapshot (masks applied, exactly
 /// what [`crate::backend::ModelExec::infer`] sees). Rows of the dense
-/// forward are independent and row-blocked GEMM is bit-identical at any
-/// width, so the engine's batching contract holds here too. The dense
-/// kernels run on the global pool (the native backend's own fan-out),
-/// not the engine pool.
+/// forward are independent, and the packed GEMM's per-row reduction
+/// order is a fixed function of the inner dimension alone (KC blocking
+/// over k, never over batch rows — see the `tensor` module docs), so a
+/// row's logits are bit-identical at any batch size and pool width and
+/// the engine's batching contract holds here too. The dense kernels run
+/// on the global pool (the native backend's own fan-out), not the
+/// engine pool.
 pub struct DenseInfer {
     nb: NativeBackend,
     st: TrainState,

@@ -9,11 +9,50 @@
 //! kernels here — the [`gemm`]/[`gemm_tn`]/[`gemm_nt`] family (each with
 //! a `_par` row-blocked variant over the [`ThreadPool`]) and the
 //! [`im2col`]/[`col2im`] patch transforms that turn stride-1
-//! convolutions into GEMMs. Parallel variants are bit-identical to the
-//! serial kernels: rows are independent and every dot product
-//! accumulates in the same order regardless of the block partition.
+//! convolutions into GEMMs.
+//!
+//! # Blocking and packing
+//!
+//! The GEMM family is a packed-panel, cache-blocked kernel in the BLIS
+//! style. The driver walks a three-level cache loop nest — `jc` over
+//! output columns ([`NC`] at a time), `pc` over the reduction dimension
+//! ([`KC`]), `ic` over output rows ([`MC`]) — packing the current
+//! `KC×NC` slab of B into column-panels of [`NR`] and the `MC×KC` slab
+//! of A into row-panels of [`MR`] before entering a fixed [`MR`]`×`[`NR`]
+//! register microkernel (4×8 `f32` accumulators: eight XMM registers on
+//! the baseline x86-64 target, which the autovectorizer turns into
+//! mul/add or FMA lanes). Transposed operands ([`gemm_tn`], [`gemm_nt`])
+//! are handled *in the packing step* — the packers read through a
+//! strided [`MatRef`] view, so the microkernel only ever sees contiguous
+//! panels and there are no strided inner loops. Edge panels are
+//! zero-padded to full `MR`/`NR` width (the microkernel is branch-free;
+//! write-out clips to the valid rows/columns). Pack buffers are
+//! per-thread and persistent (thread-local, sized once to `MC·KC` and
+//! `KC·NC`), so steady-state calls allocate nothing —
+//! [`pack_grow_count`] counts buffer growths for workspace-reuse
+//! instrumentation. An optional [`Epilogue`] (bias add, bias+ReLU) is
+//! fused into the write-out of the final `pc` block, replacing the
+//! separate bias/activation passes the backends used to run.
+//!
+//! # Determinism contract
+//!
+//! Every output element accumulates its k products in a fixed order
+//! that depends only on `k`: ascending `p` within each `KC` block
+//! (inside an `f32` register accumulator), blocks combined in ascending
+//! `pc` order. Row/column blocking (`MC`/`NC`/`MR`/`NR`) and the `_par`
+//! row split never change the reduction order, so the `_par` variants
+//! are **bit-identical** to the serial kernels at any pool width, and a
+//! row's result is independent of how many other rows sit in the batch
+//! — which is what the serving engine's batched-equals-serial contract
+//! rests on. Against the *naive* reference kernels ([`gemm_ref`],
+//! [`gemm_tn_ref`], [`gemm_nt_ref`] — the seed's row-blocked triple
+//! loops, kept for cross-checks and benchmarks) results are
+//! tolerance-checked, not bit-compared: the references skip exact-zero
+//! multiplicands, which can differ on signed zeros.
 
+use std::cell::RefCell;
 use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::util::ThreadPool;
 
@@ -247,27 +286,297 @@ impl Tensor {
 
 // -- dense kernels (the native backend's compute substrate) ----------------
 
-/// `out = a · b` for row-major `a` (m×k), `b` (k×n), `out` (m×n).
-/// Overwrites `out`. Skips exact-zero `a` entries (sparse activations /
-/// masked weights cost nothing), like [`Tensor::matmul`].
-pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    assert_eq!(a.len(), m * k, "gemm: a length");
-    assert_eq!(b.len(), k * n, "gemm: b length");
-    assert_eq!(out.len(), m * n, "gemm: out length");
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        orow.fill(0.0);
-        for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
+/// Microkernel tile rows (A row-panel width).
+pub const MR: usize = 4;
+/// Microkernel tile columns (B column-panel width). `MR×NR` `f32`
+/// accumulators fit in eight XMM registers on baseline x86-64, leaving
+/// half the register file for panel loads.
+pub const NR: usize = 8;
+/// Row cache block: an `MC×KC` packed A slab is 64 KiB (comfortably L2).
+pub const MC: usize = 64;
+/// Reduction cache block: one `KC×NR` B panel is 8 KiB (L1-resident).
+pub const KC: usize = 256;
+/// Column cache block: a `KC×NC` packed B slab is 256 KiB.
+pub const NC: usize = 256;
+
+/// Fused write-out applied by the packed GEMM driver on the final
+/// reduction block: nothing, a per-column bias add, or bias + ReLU.
+/// The arithmetic is the exact `f32` op sequence of the unfused
+/// two-pass path (`gemm`, then `+bias`, then `max(0)`), so fusing never
+/// changes results — only the number of passes over the output.
+#[derive(Clone, Copy, Debug)]
+pub enum Epilogue<'a> {
+    /// Plain GEMM write-out.
+    None,
+    /// `out[i][j] += bias[j]` (bias indexed by global output column).
+    Bias(&'a [f32]),
+    /// `out[i][j] = max(out[i][j] + bias[j], 0)`.
+    BiasRelu(&'a [f32]),
+}
+
+impl Epilogue<'_> {
+    fn check(&self, n: usize) {
+        match self {
+            Epilogue::None => {}
+            Epilogue::Bias(b) | Epilogue::BiasRelu(b) => {
+                assert_eq!(b.len(), n, "epilogue bias length");
             }
         }
     }
+}
+
+/// Strided read-only matrix view: `at(i, j) = data[i·rs + j·cs]`. The
+/// packers read operands through this, which is how the transposed
+/// layouts ([`gemm_tn`], [`gemm_nt`]) reuse one blocked driver: a
+/// transpose is just a stride swap at pack time.
+#[derive(Clone, Copy)]
+struct MatRef<'a> {
+    data: &'a [f32],
+    rs: usize,
+    cs: usize,
+}
+
+impl MatRef<'_> {
+    #[inline(always)]
+    fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.rs + j * self.cs]
+    }
+}
+
+/// Counts pack-buffer growths across all threads since process start
+/// (each thread grows its two thread-local buffers once, on first GEMM).
+static PACK_GROWS: AtomicUsize = AtomicUsize::new(0);
+
+/// Total pack-workspace growth events so far. Steady-state workload
+/// loops (train steps, serving batches) must leave this flat after
+/// warmup — asserted by the workspace-reuse instrumentation tests.
+pub fn pack_grow_count() -> usize {
+    PACK_GROWS.load(Ordering::Relaxed)
+}
+
+thread_local! {
+    /// Per-thread persistent (apack, bpack) workspaces. Pool workers are
+    /// long-lived, so these are per-worker workspaces that survive
+    /// across train steps / serving batches. The blocked driver is not
+    /// reentrant on one thread (it never calls itself), so the
+    /// `RefCell` borrow is exclusive for the whole driver call.
+    static PACK_BUFS: RefCell<(Vec<f32>, Vec<f32>)> =
+        RefCell::new((Vec::new(), Vec::new()));
+}
+
+fn ensure_len(buf: &mut Vec<f32>, need: usize) {
+    if buf.len() < need {
+        if need > buf.capacity() {
+            PACK_GROWS.fetch_add(1, Ordering::Relaxed);
+        }
+        buf.resize(need, 0.0);
+    }
+}
+
+/// Pack the `mc×kc` slab of `a` at (`i0`, `p0`) into row-panels of
+/// [`MR`]: panel `pi` holds rows `i0+pi·MR..`, laid out
+/// `buf[pi·MR·kc + p·MR + r]` so the microkernel streams it
+/// contiguously. Short edge panels are zero-padded to full `MR`.
+fn pack_a(a: MatRef, i0: usize, mc: usize, p0: usize, kc: usize, buf: &mut [f32]) {
+    let mut off = 0;
+    let mut i = 0;
+    while i < mc {
+        let mr = MR.min(mc - i);
+        for p in 0..kc {
+            let dst = &mut buf[off + p * MR..off + (p + 1) * MR];
+            for (r, d) in dst.iter_mut().enumerate() {
+                *d = if r < mr { a.at(i0 + i + r, p0 + p) } else { 0.0 };
+            }
+        }
+        off += MR * kc;
+        i += MR;
+    }
+}
+
+/// Pack the `kc×nc` slab of `b` at (`p0`, `j0`) into column-panels of
+/// [`NR`]: panel `pj` holds columns `j0+pj·NR..`, laid out
+/// `buf[pj·NR·kc + p·NR + c]`. Contiguous-row operands (`cs == 1`) take
+/// a `copy_from_slice` fast path; short edge panels are zero-padded.
+fn pack_b(b: MatRef, p0: usize, kc: usize, j0: usize, nc: usize, buf: &mut [f32]) {
+    let mut off = 0;
+    let mut j = 0;
+    while j < nc {
+        let nr = NR.min(nc - j);
+        if b.cs == 1 && nr == NR {
+            for p in 0..kc {
+                let src = (p0 + p) * b.rs + j0 + j;
+                buf[off + p * NR..off + (p + 1) * NR]
+                    .copy_from_slice(&b.data[src..src + NR]);
+            }
+        } else {
+            for p in 0..kc {
+                let dst = &mut buf[off + p * NR..off + (p + 1) * NR];
+                for (c, d) in dst.iter_mut().enumerate() {
+                    *d = if c < nr { b.at(p0 + p, j0 + j + c) } else { 0.0 };
+                }
+            }
+        }
+        off += NR * kc;
+        j += NR;
+    }
+}
+
+/// The register microkernel: one `MR×NR` accumulator tile over a packed
+/// A row-panel and B column-panel. Branch-free (panels are padded), and
+/// the fixed-size slice views let the compiler keep `acc` in registers
+/// and vectorize the `NR`-wide inner updates.
+#[inline(always)]
+fn microkernel(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    debug_assert!(ap.len() >= kc * MR);
+    debug_assert!(bp.len() >= kc * NR);
+    for p in 0..kc {
+        let av: &[f32; MR] = ap[p * MR..(p + 1) * MR].try_into().unwrap();
+        let bv: &[f32; NR] = bp[p * NR..(p + 1) * NR].try_into().unwrap();
+        for (accr, &a) in acc.iter_mut().zip(av) {
+            for (o, &b) in accr.iter_mut().zip(bv) {
+                *o += a * b;
+            }
+        }
+    }
+}
+
+/// Spill one accumulator tile to `out` at (`row0`, `col0`), clipped to
+/// the valid `mr×nr` region. The first reduction block overwrites,
+/// later blocks accumulate; the last block applies the epilogue.
+#[allow(clippy::too_many_arguments)]
+fn write_out(
+    acc: &[[f32; NR]; MR],
+    out: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    mr: usize,
+    nr: usize,
+    first: bool,
+    last: bool,
+    epi: Epilogue,
+) {
+    for (i, accr) in acc.iter().enumerate().take(mr) {
+        let orow = &mut out[(row0 + i) * n + col0..][..nr];
+        if first {
+            orow.copy_from_slice(&accr[..nr]);
+        } else {
+            for (o, &v) in orow.iter_mut().zip(&accr[..nr]) {
+                *o += v;
+            }
+        }
+        if last {
+            match epi {
+                Epilogue::None => {}
+                Epilogue::Bias(bias) => {
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        *o += bias[col0 + j];
+                    }
+                }
+                Epilogue::BiasRelu(bias) => {
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        *o = (*o + bias[col0 + j]).max(0.0);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The packed cache-blocked driver behind the whole GEMM family:
+/// `out = A·B` (+ epilogue) for an `m×k` view `a` and `k×n` view `b`,
+/// overwriting the row-major `m×n` slice `out`. See the module docs for
+/// the loop nest and the determinism contract.
+fn gemm_blocked(a: MatRef, b: MatRef, m: usize, k: usize, n: usize, epi: Epilogue, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), m * n, "gemm_blocked: out length");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // The blocked nest never reaches write-out with an empty
+        // reduction; preserve overwrite semantics (and the epilogue).
+        for orow in out.chunks_mut(n) {
+            match epi {
+                Epilogue::None => orow.fill(0.0),
+                Epilogue::Bias(bias) => orow.copy_from_slice(bias),
+                Epilogue::BiasRelu(bias) => {
+                    for (o, &bv) in orow.iter_mut().zip(bias) {
+                        *o = bv.max(0.0);
+                    }
+                }
+            }
+        }
+        return;
+    }
+    PACK_BUFS.with(|bufs| {
+        let mut bufs = bufs.borrow_mut();
+        let (apack, bpack) = &mut *bufs;
+        ensure_len(apack, MC * KC);
+        ensure_len(bpack, KC * NC);
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            for pc in (0..k).step_by(KC) {
+                let kc = KC.min(k - pc);
+                let first = pc == 0;
+                let last = pc + kc == k;
+                pack_b(b, pc, kc, jc, nc, bpack);
+                for ic in (0..m).step_by(MC) {
+                    let mc = MC.min(m - ic);
+                    pack_a(a, ic, mc, pc, kc, apack);
+                    let mut jr = 0;
+                    while jr < nc {
+                        let nr = NR.min(nc - jr);
+                        let bp = &bpack[(jr / NR) * NR * kc..][..NR * kc];
+                        let mut ir = 0;
+                        while ir < mc {
+                            let mr = MR.min(mc - ir);
+                            let ap = &apack[(ir / MR) * MR * kc..][..MR * kc];
+                            let mut acc = [[0.0f32; NR]; MR];
+                            microkernel(kc, ap, bp, &mut acc);
+                            write_out(
+                                &acc, out, n, ic + ir, jc + jr, mr, nr,
+                                first, last, epi,
+                            );
+                            ir += MR;
+                        }
+                        jr += NR;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `out = a · b` for row-major `a` (m×k), `b` (k×n), `out` (m×n).
+/// Overwrites `out`. Packed cache-blocked kernel — see the module docs.
+pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    gemm_epi(a, b, m, k, n, Epilogue::None, out)
+}
+
+/// [`gemm`] with a fused [`Epilogue`] (bias / bias+ReLU) applied in the
+/// final write-out pass instead of as separate sweeps over `out`.
+pub fn gemm_epi(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "gemm: a length");
+    assert_eq!(b.len(), k * n, "gemm: b length");
+    assert_eq!(out.len(), m * n, "gemm: out length");
+    epi.check(n);
+    gemm_blocked(
+        MatRef { data: a, rs: k, cs: 1 },
+        MatRef { data: b, rs: n, cs: 1 },
+        m,
+        k,
+        n,
+        epi,
+        out,
+    );
 }
 
 /// How many row blocks a kernel of `rows` rows costing `cost` total
@@ -291,46 +600,71 @@ pub fn gemm_par(
     n: usize,
     out: &mut [f32],
 ) {
+    gemm_par_epi(pool, a, b, m, k, n, Epilogue::None, out)
+}
+
+/// [`gemm_epi`] with the m rows split across the pool. The epilogue is
+/// per-column, so the row split leaves it untouched; bit-identical to
+/// the serial fused kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_par_epi(
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
     let blocks = row_blocks(pool, m, m.saturating_mul(k).saturating_mul(n));
     if blocks <= 1 {
-        return gemm(a, b, m, k, n, out);
+        return gemm_epi(a, b, m, k, n, epi, out);
     }
     assert_eq!(a.len(), m * k, "gemm_par: a length");
+    assert_eq!(b.len(), k * n, "gemm_par: b length");
     assert_eq!(out.len(), m * n, "gemm_par: out length");
+    epi.check(n);
     let rows_per = (m + blocks - 1) / blocks;
     pool.par_chunks_mut(out, rows_per * n, |bi, oc| {
         let r0 = bi * rows_per;
         let rows = oc.len() / n;
-        gemm(&a[r0 * k..(r0 + rows) * k], b, rows, k, n, oc);
+        gemm_blocked(
+            MatRef { data: &a[r0 * k..(r0 + rows) * k], rs: k, cs: 1 },
+            MatRef { data: b, rs: n, cs: 1 },
+            rows,
+            k,
+            n,
+            epi,
+            oc,
+        );
     });
 }
 
 /// `out = aᵀ · b` for row-major `a` (m×k), `b` (m×n), `out` (k×n) — the
-/// weight-gradient shape `dW = xᵀ·dy`. Overwrites `out`; accumulation
-/// over the m dimension runs in ascending row order.
+/// weight-gradient shape `dW = xᵀ·dy`. Overwrites `out`. The transpose
+/// is absorbed by the A-packer (stride swap), not a strided inner loop;
+/// accumulation over the m dimension runs in ascending order per `KC`
+/// block.
 pub fn gemm_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * k, "gemm_tn: a length");
     assert_eq!(b.len(), m * n, "gemm_tn: b length");
     assert_eq!(out.len(), k * n, "gemm_tn: out length");
-    out.fill(0.0);
-    for bi in 0..m {
-        let arow = &a[bi * k..(bi + 1) * k];
-        let brow = &b[bi * n..(bi + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[p * n..(p + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
+    // Logical A' is k×m with A'[i, p] = a[p·k + i] → rs = 1, cs = k.
+    gemm_blocked(
+        MatRef { data: a, rs: 1, cs: k },
+        MatRef { data: b, rs: n, cs: 1 },
+        k,
+        m,
+        n,
+        Epilogue::None,
+        out,
+    );
 }
 
 /// [`gemm_tn`] with the k *output* rows split across the pool. Each
-/// block accumulates its rows over the full m range in the same
-/// ascending order as the serial kernel — bit-identical results.
+/// block reduces over the full m range in the same order as the serial
+/// kernel — bit-identical results.
 pub fn gemm_tn_par(
     pool: &ThreadPool,
     a: &[f32],
@@ -341,7 +675,7 @@ pub fn gemm_tn_par(
     out: &mut [f32],
 ) {
     let blocks = row_blocks(pool, k, m.saturating_mul(k).saturating_mul(n));
-    if blocks <= 1 {
+    if blocks <= 1 || m == 0 {
         return gemm_tn(a, b, m, k, n, out);
     }
     assert_eq!(a.len(), m * k, "gemm_tn_par: a length");
@@ -350,42 +684,38 @@ pub fn gemm_tn_par(
     let rows_per = (k + blocks - 1) / blocks;
     pool.par_chunks_mut(out, rows_per * n, |bi, oc| {
         let p0 = bi * rows_per;
-        oc.fill(0.0);
-        for b2 in 0..m {
-            let arow = &a[b2 * k..(b2 + 1) * k];
-            let brow = &b[b2 * n..(b2 + 1) * n];
-            for (pi, orow) in oc.chunks_mut(n).enumerate() {
-                let av = arow[p0 + pi];
-                if av == 0.0 {
-                    continue;
-                }
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
-        }
+        let rows = oc.len() / n;
+        // Rows p0.. of the logical k×m transpose start at a[p0] with
+        // the same (rs=1, cs=k) strides.
+        gemm_blocked(
+            MatRef { data: &a[p0..], rs: 1, cs: k },
+            MatRef { data: b, rs: n, cs: 1 },
+            rows,
+            m,
+            n,
+            Epilogue::None,
+            oc,
+        );
     });
 }
 
 /// `out = a · bᵀ` for row-major `a` (m×n), `b` (k×n), `out` (m×k) — the
-/// input-gradient shape `dx = dy·Wᵀ`. Each output element is one dot
-/// product of two contiguous rows.
+/// input-gradient shape `dx = dy·Wᵀ`. Overwrites `out`. The transpose
+/// is absorbed by the B-packer (stride swap).
 pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * n, "gemm_nt: a length");
     assert_eq!(b.len(), k * n, "gemm_nt: b length");
     assert_eq!(out.len(), m * k, "gemm_nt: out length");
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        let orow = &mut out[i * k..(i + 1) * k];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let brow = &b[j * n..(j + 1) * n];
-            let mut s = 0.0f32;
-            for (&x, &y) in arow.iter().zip(brow) {
-                s += x * y;
-            }
-            *o = s;
-        }
-    }
+    // Logical B' is n×k with B'[p, j] = b[j·n + p] → rs = 1, cs = n.
+    gemm_blocked(
+        MatRef { data: a, rs: n, cs: 1 },
+        MatRef { data: b, rs: 1, cs: n },
+        m,
+        n,
+        k,
+        Epilogue::None,
+        out,
+    );
 }
 
 /// [`gemm_nt`] with the m rows split across the pool (bit-identical).
@@ -403,13 +733,87 @@ pub fn gemm_nt_par(
         return gemm_nt(a, b, m, n, k, out);
     }
     assert_eq!(a.len(), m * n, "gemm_nt_par: a length");
+    assert_eq!(b.len(), k * n, "gemm_nt_par: b length");
     assert_eq!(out.len(), m * k, "gemm_nt_par: out length");
     let rows_per = (m + blocks - 1) / blocks;
     pool.par_chunks_mut(out, rows_per * k, |bi, oc| {
         let r0 = bi * rows_per;
         let rows = oc.len() / k;
-        gemm_nt(&a[r0 * n..(r0 + rows) * n], b, rows, n, k, oc);
+        gemm_blocked(
+            MatRef { data: &a[r0 * n..(r0 + rows) * n], rs: n, cs: 1 },
+            MatRef { data: b, rs: 1, cs: n },
+            rows,
+            n,
+            k,
+            Epilogue::None,
+            oc,
+        );
     });
+}
+
+// -- naive reference kernels ------------------------------------------------
+
+/// The seed's row-blocked triple-loop GEMM, kept as the tolerance
+/// reference for the packed kernel (and the "before" side of the
+/// benches). Skips exact-zero `a` entries like [`Tensor::matmul`].
+pub fn gemm_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "gemm_ref: a length");
+    assert_eq!(b.len(), k * n, "gemm_ref: b length");
+    assert_eq!(out.len(), m * n, "gemm_ref: out length");
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        orow.fill(0.0);
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Naive `aᵀ·b` reference (see [`gemm_ref`]).
+pub fn gemm_tn_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "gemm_tn_ref: a length");
+    assert_eq!(b.len(), m * n, "gemm_tn_ref: b length");
+    assert_eq!(out.len(), k * n, "gemm_tn_ref: out length");
+    out.fill(0.0);
+    for bi in 0..m {
+        let arow = &a[bi * k..(bi + 1) * k];
+        let brow = &b[bi * n..(bi + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Naive `a·bᵀ` reference (see [`gemm_ref`]).
+pub fn gemm_nt_ref(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * n, "gemm_nt_ref: a length");
+    assert_eq!(b.len(), k * n, "gemm_nt_ref: b length");
+    assert_eq!(out.len(), m * k, "gemm_nt_ref: out length");
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * n..(j + 1) * n];
+            let mut s = 0.0f32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                s += x * y;
+            }
+            *o = s;
+        }
+    }
 }
 
 /// Lower a stride-1 NHWC convolution input to a patch matrix: `x` is
@@ -739,6 +1143,108 @@ mod tests {
                 assert_eq!(out[i * k + j], want);
             }
         }
+    }
+
+    fn close(got: &[f32], want: &[f32], tag: &str) {
+        assert_eq!(got.len(), want.len(), "{tag}: length");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let tol = 1e-4 * (1.0 + w.abs());
+            assert!((g - w).abs() <= tol, "{tag}[{i}]: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn packed_gemm_matches_ref_across_block_edges() {
+        // Shapes straddling every block boundary (MR, NR, MC, KC, NC),
+        // including degenerate dims; compare all three layouts to the
+        // naive references.
+        for &(m, k, n) in &[
+            (0usize, 3usize, 4usize),
+            (3, 0, 4),
+            (3, 4, 0),
+            (1, 1, 1),
+            (MR - 1, KC + 1, NR - 1),
+            (MR + 1, 5, NR + 1),
+            (MC + 1, 7, NC + 1),
+            (MC, KC, NR),
+            (13, KC - 1, 29),
+        ] {
+            let a = seq(m * k, |i| ((i as f32) * 0.7).sin());
+            let b = seq(k * n, |i| ((i as f32) * 0.3).cos());
+            let mut got = vec![9.0f32; m * n];
+            let mut want = vec![-9.0f32; m * n];
+            gemm(&a, &b, m, k, n, &mut got);
+            gemm_ref(&a, &b, m, k, n, &mut want);
+            close(&got, &want, &format!("gemm {m}x{k}x{n}"));
+
+            let bt = seq(m * n, |i| ((i as f32) * 0.11).sin());
+            let mut got = vec![9.0f32; k * n];
+            let mut want = vec![-9.0f32; k * n];
+            gemm_tn(&a, &bt, m, k, n, &mut got);
+            gemm_tn_ref(&a, &bt, m, k, n, &mut want);
+            close(&got, &want, &format!("gemm_tn {m}x{k}x{n}"));
+
+            let g = seq(m * n, |i| ((i as f32) * 0.23).sin());
+            let w = seq(k * n, |i| ((i as f32) * 0.17).cos());
+            let mut got = vec![9.0f32; m * k];
+            let mut want = vec![-9.0f32; m * k];
+            gemm_nt(&g, &w, m, n, k, &mut got);
+            gemm_nt_ref(&g, &w, m, n, k, &mut want);
+            close(&got, &want, &format!("gemm_nt {m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn fused_epilogue_is_bit_identical_to_two_pass() {
+        // Fusing bias(+ReLU) into the write-out performs the exact same
+        // f32 ops as gemm followed by separate bias / ReLU sweeps.
+        let (m, k, n) = (9, KC + 3, NR + 5);
+        let a = seq(m * k, |i| ((i as f32) * 0.7).sin());
+        let b = seq(k * n, |i| ((i as f32) * 0.3).cos());
+        let bias = seq(n, |i| (i as f32) * 0.05 - 0.2);
+
+        let mut two = vec![0.0f32; m * n];
+        gemm(&a, &b, m, k, n, &mut two);
+        for row in two.chunks_mut(n) {
+            for (o, &bv) in row.iter_mut().zip(&bias) {
+                *o += bv;
+            }
+        }
+        let mut fused = vec![1.0f32; m * n];
+        gemm_epi(&a, &b, m, k, n, Epilogue::Bias(&bias), &mut fused);
+        assert_eq!(two, fused, "bias epilogue");
+
+        for o in two.iter_mut() {
+            *o = o.max(0.0);
+        }
+        let mut fused = vec![1.0f32; m * n];
+        gemm_epi(&a, &b, m, k, n, Epilogue::BiasRelu(&bias), &mut fused);
+        assert_eq!(two, fused, "bias+relu epilogue");
+    }
+
+    #[test]
+    fn zero_k_overwrites_and_applies_epilogue() {
+        let bias = [0.5f32, -1.0];
+        let mut out = vec![7.0f32; 3 * 2];
+        gemm_epi(&[], &[], 3, 0, 2, Epilogue::BiasRelu(&bias), &mut out);
+        assert_eq!(out, vec![0.5, 0.0, 0.5, 0.0, 0.5, 0.0]);
+        let mut out = vec![7.0f32; 3 * 2];
+        gemm(&[], &[], 3, 0, 2, &mut out);
+        assert_eq!(out, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn par_epi_bit_identical_to_serial_epi() {
+        let (m, k, n) = (70, 33, 21);
+        let a = seq(m * k, |i| ((i as f32) * 0.37).sin());
+        let b = seq(k * n, |i| ((i as f32) * 0.11).cos());
+        let bias = seq(n, |i| (i as f32) * 0.01);
+        let pool = ThreadPool::new(4);
+        let mut s = vec![0.0f32; m * n];
+        gemm_epi(&a, &b, m, k, n, Epilogue::BiasRelu(&bias), &mut s);
+        let mut p = vec![1.0f32; m * n];
+        gemm_par_epi(&pool, &a, &b, m, k, n, Epilogue::BiasRelu(&bias), &mut p);
+        assert_eq!(s, p);
     }
 
     /// Reference conv: direct 6-nested-loop NHWC × HWIO convolution.

@@ -1,7 +1,9 @@
 //! Small utilities shared across the crate: deterministic RNG, binary
 //! search, the persistent size-aware thread-pool behind per-layer
-//! parallelism, and human-readable formatting.
+//! parallelism, the free-list scratch arena behind the zero-alloc hot
+//! paths, and human-readable formatting.
 
+pub mod arena;
 pub mod bench;
 pub mod cli;
 pub mod json;
@@ -9,6 +11,7 @@ pub mod pool;
 pub mod rng;
 pub mod search;
 
+pub use arena::BufPool;
 pub use pool::ThreadPool;
 pub use rng::Rng;
 pub use search::{binary_search_max, golden_min};

@@ -1,0 +1,193 @@
+//! Property tests pinning the packed cache-blocked GEMM family against
+//! the naive reference kernels on adversarial shapes, in all three
+//! layouts, serial and `_par` at pool widths {1, 2, 4, 8}.
+//!
+//! Two distinct claims, tested separately:
+//! * packed vs naive is **tolerance-checked** — the packed kernel sums
+//!   k in KC blocks combined in ascending order while the naive loop
+//!   skips zero multiplicands, so results agree to rounding, not bits;
+//! * `_par` vs serial packed is **bit-identical** — a row's reduction
+//!   order is a fixed function of the inner dimension alone, never of
+//!   how rows were split across lanes (the serving engine's
+//!   batched-equals-serial contract rides on this).
+
+use admm_nn::tensor::{self, Epilogue, KC, MC, MR, NC, NR};
+use admm_nn::util::{Rng, ThreadPool};
+
+/// Relative-tolerance agreement for packed-vs-naive comparisons.
+fn close(a: f32, b: f32) -> bool {
+    (a - b).abs() <= 1e-4 * (1.0 + b.abs())
+}
+
+fn assert_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(close(*g, *w), "{what}[{i}]: packed {g} vs ref {w}");
+    }
+}
+
+/// Adversarial dimension values: degenerate (0, 1), straddling the
+/// register microkernel (MR±1, NR±1), and a non-multiple of everything.
+const SMALL_DIMS: [usize; 7] = [0, 1, MR - 1, MR + 1, NR - 1, NR + 1, 13];
+
+/// Shapes straddling the cache-block edges (MC/KC/NC ± 1, exact
+/// multiples) — too big for a full cross product, probed directly.
+const BIG_SHAPES: [(usize, usize, usize); 5] = [
+    (MC + 1, KC + 1, NR + 1),
+    (MR + 1, KC + 1, NC + 1),
+    (MC + 1, 7, NC + 1),
+    (13, KC - 1, 29),
+    (MC, KC, NR),
+];
+
+fn pools() -> Vec<ThreadPool> {
+    [1usize, 2, 4, 8].iter().map(|&w| ThreadPool::new(w)).collect()
+}
+
+/// Run one (d0, d1, d2) shape through every layout: serial packed vs
+/// the naive reference (tolerance), then `_par` at each pool width vs
+/// the serial packed output (bit-identical).
+fn check_shape(rng: &mut Rng, pools: &[ThreadPool], d0: usize, d1: usize, d2: usize) {
+    // gemm: (d0 × d1) · (d1 × d2)
+    let (m, k, n) = (d0, d1, d2);
+    let a = rng.normal_vec(m * k, 0.5);
+    let b = rng.normal_vec(k * n, 0.5);
+    let mut want = vec![0.0f32; m * n];
+    tensor::gemm_ref(&a, &b, m, k, n, &mut want);
+    let mut got = vec![1.0f32; m * n];
+    tensor::gemm(&a, &b, m, k, n, &mut got);
+    assert_close(&got, &want, &format!("gemm {m}x{k}x{n}"));
+    for pool in pools {
+        let mut par = vec![2.0f32; m * n];
+        tensor::gemm_par(pool, &a, &b, m, k, n, &mut par);
+        assert_eq!(
+            par,
+            got,
+            "gemm_par {m}x{k}x{n} width {} drifted from serial",
+            pool.threads()
+        );
+    }
+
+    // gemm_tn: A is (d0 × d1), out = Aᵀ · B is (d1 × d2), B (d0 × d2)
+    let (m, k, n) = (d0, d1, d2);
+    let a = rng.normal_vec(m * k, 0.5);
+    let b = rng.normal_vec(m * n, 0.5);
+    let mut want = vec![0.0f32; k * n];
+    tensor::gemm_tn_ref(&a, &b, m, k, n, &mut want);
+    let mut got = vec![1.0f32; k * n];
+    tensor::gemm_tn(&a, &b, m, k, n, &mut got);
+    assert_close(&got, &want, &format!("gemm_tn {m}x{k}x{n}"));
+    for pool in pools {
+        let mut par = vec![2.0f32; k * n];
+        tensor::gemm_tn_par(pool, &a, &b, m, k, n, &mut par);
+        assert_eq!(
+            par,
+            got,
+            "gemm_tn_par {m}x{k}x{n} width {} drifted from serial",
+            pool.threads()
+        );
+    }
+
+    // gemm_nt: A (d0 × d1), B (d2 × d1), out = A · Bᵀ is (d0 × d2)
+    let (m, n, k) = (d0, d1, d2);
+    let a = rng.normal_vec(m * n, 0.5);
+    let b = rng.normal_vec(k * n, 0.5);
+    let mut want = vec![0.0f32; m * k];
+    tensor::gemm_nt_ref(&a, &b, m, n, k, &mut want);
+    let mut got = vec![1.0f32; m * k];
+    tensor::gemm_nt(&a, &b, m, n, k, &mut got);
+    assert_close(&got, &want, &format!("gemm_nt {m}x{n}x{k}"));
+    for pool in pools {
+        let mut par = vec![2.0f32; m * k];
+        tensor::gemm_nt_par(pool, &a, &b, m, n, k, &mut par);
+        assert_eq!(
+            par,
+            got,
+            "gemm_nt_par {m}x{n}x{k} width {} drifted from serial",
+            pool.threads()
+        );
+    }
+}
+
+#[test]
+fn packed_gemm_matches_naive_on_adversarial_small_shapes() {
+    let mut rng = Rng::new(0xACC);
+    let pools = pools();
+    for &d0 in &SMALL_DIMS {
+        for &d1 in &SMALL_DIMS {
+            for &d2 in &SMALL_DIMS {
+                check_shape(&mut rng, &pools, d0, d1, d2);
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_gemm_matches_naive_across_cache_block_edges() {
+    let mut rng = Rng::new(0xB10C);
+    let pools = pools();
+    for &(d0, d1, d2) in &BIG_SHAPES {
+        check_shape(&mut rng, &pools, d0, d1, d2);
+    }
+}
+
+/// The fused bias / bias+ReLU epilogue applies the same f32 operations
+/// in the same order as the unfused two-pass form (GEMM, then separate
+/// bias and clamp sweeps), so the results are bit-identical — and the
+/// `_par` fused path matches the serial fused path exactly.
+#[test]
+fn fused_epilogue_equals_unfused_two_pass() {
+    let mut rng = Rng::new(0xE91);
+    let pools = pools();
+    for (m, k, n) in [
+        (1usize, 1usize, 1usize),
+        (MR + 1, 13, NR + 1),
+        (MC + 1, KC + 1, NR - 1),
+        (7, 0, 5),
+    ] {
+        let a = rng.normal_vec(m * k, 0.5);
+        let b = rng.normal_vec(k * n, 0.5);
+        let bias = rng.normal_vec(n, 0.5);
+
+        let mut two_pass = vec![0.0f32; m * n];
+        tensor::gemm(&a, &b, m, k, n, &mut two_pass);
+        let mut bias_only = two_pass.clone();
+        for row in bias_only.chunks_mut(n) {
+            for (v, &bv) in row.iter_mut().zip(&bias) {
+                *v += bv;
+            }
+        }
+        let mut bias_relu = bias_only.clone();
+        for v in bias_relu.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+
+        let mut fused = vec![9.0f32; m * n];
+        tensor::gemm_epi(&a, &b, m, k, n, Epilogue::Bias(&bias), &mut fused);
+        assert_eq!(fused, bias_only, "Bias epilogue {m}x{k}x{n}");
+        tensor::gemm_epi(&a, &b, m, k, n, Epilogue::BiasRelu(&bias), &mut fused);
+        assert_eq!(fused, bias_relu, "BiasRelu epilogue {m}x{k}x{n}");
+
+        for pool in &pools {
+            let mut par = vec![8.0f32; m * n];
+            tensor::gemm_par_epi(
+                pool,
+                &a,
+                &b,
+                m,
+                k,
+                n,
+                Epilogue::BiasRelu(&bias),
+                &mut par,
+            );
+            assert_eq!(
+                par,
+                bias_relu,
+                "par BiasRelu {m}x{k}x{n} width {}",
+                pool.threads()
+            );
+        }
+    }
+}
