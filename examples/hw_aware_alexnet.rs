@@ -6,6 +6,11 @@
 //! synthesized per-layer / overall speedup report.
 //!
 //! Run: `cargo run --release --example hw_aware_alexnet [-- --fast]`
+// Crate-root style allowances, matching rust/src/lib.rs (these used to
+// be -A flags on the Makefile's clippy invocation).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
 
 use admm_nn::backend::{native::NativeBackend, ModelExec};
 use admm_nn::coordinator::hw_aware::{hw_aware_compress, HwAwareConfig};

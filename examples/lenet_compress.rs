@@ -17,6 +17,11 @@
 //! Runtime budget: ~15-25 min CPU. Override with --fast for a smoke run.
 //!
 //! Run: `cargo run --release --example lenet_compress [-- --fast]`
+// Crate-root style allowances, matching rust/src/lib.rs (these used to
+// be -A flags on the Makefile's clippy invocation).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
 
 use std::time::Instant;
 

@@ -7,6 +7,11 @@
 //! ratio moves.
 //!
 //! Run: `cargo run --release --example onchip_analysis`
+// Crate-root style allowances, matching rust/src/lib.rs (these used to
+// be -A flags on the Makefile's clippy invocation).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
 
 use admm_nn::hwmodel::HwConfig;
 use admm_nn::models;

@@ -15,6 +15,11 @@
 //! Run: `cargo run --release --example quickstart`
 //! (swap `NativeBackend::open` for `Runtime::load("artifacts")` +
 //! `rt.model("mlp")` to drive the same pipeline through PJRT.)
+// Crate-root style allowances, matching rust/src/lib.rs (these used to
+// be -A flags on the Makefile's clippy invocation).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
 
 use admm_nn::backend::native::NativeBackend;
 use admm_nn::backend::sparse_infer::SparseInfer;

@@ -6,6 +6,11 @@
 //! is measurable.
 //!
 //! Requires `make artifacts`. Run: `cargo bench --bench admm_step`
+// Crate-root style allowances, matching rust/src/lib.rs (these used to
+// be -A flags on the Makefile's clippy invocation).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
 
 use admm_nn::coordinator::{TrainConfig, Trainer};
 use admm_nn::data::{self, Split};

@@ -12,6 +12,11 @@
 //! `BENCH_hot_paths.json` with all medians and speedup ratios.
 //!
 //! Run: `cargo bench --bench hot_paths [-- --json]`
+// Crate-root style allowances, matching rust/src/lib.rs (these used to
+// be -A flags on the Makefile's clippy invocation).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;

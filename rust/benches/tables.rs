@@ -3,6 +3,11 @@
 //! generator. `cargo bench --bench tables` is the one-command
 //! reproduction of the analytic half of the evaluation; measured rows
 //! appear automatically once the examples have written `results/*.json`.
+// Crate-root style allowances, matching rust/src/lib.rs (these used to
+// be -A flags on the Makefile's clippy invocation).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
 
 use std::time::Instant;
 

@@ -1,0 +1,357 @@
+//! Comment- and string-aware lexical view of Rust source.
+//!
+//! The rule checkers in [`super::rules`] are substring scanners: they
+//! look for tokens like `unsafe`, `.lock()`, or `Vec::new` and must not
+//! fire on occurrences inside comments, string literals, or char
+//! literals (a doc comment *describing* `unwrap` is not a violation).
+//! [`mask_source`] splits every line into two channels:
+//!
+//! * **code** — the source text with comment bodies and literal
+//!   contents blanked to spaces. Columns are preserved (every source
+//!   char maps to exactly one output char), string/raw-string quotes
+//!   and char-literal quotes are kept, so brace/paren structure and
+//!   token positions survive intact.
+//! * **comment** — the concatenated text of every comment on the line,
+//!   which is where `// SAFETY:` and `// lint:allow(...)` annotations
+//!   live.
+//!
+//! The scanner understands line comments, nested block comments,
+//! string / byte-string / raw-string literals (any `#` count), char
+//! and byte-char literals, and distinguishes lifetimes (`'a`) from
+//! char literals (`'a'`). It is a lexer, not a parser: it never needs
+//! to understand Rust grammar beyond "what is code and what is not".
+
+/// One source line split into code and comment channels.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Source text with non-code content blanked (columns preserved).
+    pub code: String,
+    /// Text of every comment on this line, concatenated.
+    pub comment: String,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum St {
+    Code,
+    LineComment,
+    /// Nested block comment depth.
+    Block(u32),
+    Str,
+    /// Raw string with this many `#`s in its delimiter.
+    RawStr(u32),
+    CharLit,
+}
+
+/// Does a raw-string opener (`r"`, `r#"`, `br##"` …) start at `i`?
+/// Returns `(chars consumed through the opening quote, hash count)`.
+fn raw_open(chars: &[char], i: usize) -> Option<(usize, u32)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((j - i + 1, hashes))
+    } else {
+        None
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Split `src` into per-line code/comment channels (see module docs).
+pub fn mask_source(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut st = St::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            lines.push(Line {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        let next = chars.get(i + 1).copied();
+        match st {
+            St::Code => {
+                // A raw/byte string prefix must not be the tail of an
+                // identifier (`for`, `br0ken`): check the previous
+                // code char on this line.
+                let prev_ident =
+                    code.chars().last().map(is_ident).unwrap_or(false);
+                if c == '/' && next == Some('/') {
+                    st = St::LineComment;
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(1);
+                    code.push_str("  ");
+                    i += 2;
+                } else if (c == 'r' || c == 'b') && !prev_ident {
+                    if let Some((consumed, hashes)) = raw_open(&chars, i) {
+                        for k in 0..consumed {
+                            code.push(chars[i + k]);
+                        }
+                        st = St::RawStr(hashes);
+                        i += consumed;
+                    } else if c == 'b' && next == Some('"') {
+                        // byte string: keep the prefix, enter Str at
+                        // the quote on the next iteration
+                        code.push('b');
+                        i += 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    st = St::Str;
+                    code.push('"');
+                    i += 1;
+                } else if c == '\'' {
+                    // char literal vs lifetime/label: 'x' or '\..' is a
+                    // literal; 'ident (no closing quote right after one
+                    // char) is a lifetime.
+                    let n2 = chars.get(i + 2).copied();
+                    if next == Some('\\')
+                        || (n2 == Some('\'') && next != Some('\''))
+                    {
+                        st = St::CharLit;
+                    }
+                    code.push('\'');
+                    i += 1;
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                comment.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            St::Block(d) => {
+                if c == '*' && next == Some('/') {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(d + 1);
+                    code.push_str("  ");
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    code.push(' ');
+                    i += 1;
+                    // blank the escaped char too, unless it is the
+                    // newline of a line-continuation escape
+                    if i < chars.len() && chars[i] != '\n' {
+                        code.push(' ');
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    st = St::Code;
+                    code.push('"');
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..h as usize {
+                        if chars.get(i + 1 + k) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        st = St::Code;
+                        code.push('"');
+                        for _ in 0..h {
+                            code.push('#');
+                        }
+                        i += 1 + h as usize;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::CharLit => {
+                if c == '\\' {
+                    code.push(' ');
+                    i += 1;
+                    if i < chars.len() && chars[i] != '\n' {
+                        code.push(' ');
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    st = St::Code;
+                    code.push('\'');
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(Line { code, comment });
+    }
+    lines
+}
+
+/// Find `needle` as a whole word in `hay` (ident-boundary on both
+/// sides), returning every match's byte offset.
+pub fn word_positions(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let hb = hay.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = hay[from..].find(needle) {
+        let at = from + rel;
+        let before_ok = at == 0 || !is_ident(hb[at - 1] as char);
+        let end = at + needle.len();
+        let after_ok = end >= hb.len() || !is_ident(hb[end] as char);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + needle.len().max(1);
+    }
+    out
+}
+
+/// Whole-word containment test.
+pub fn has_word(hay: &str, needle: &str) -> bool {
+    !word_positions(hay, needle).is_empty()
+}
+
+/// Is `needle` present as a method call — a whole word preceded
+/// (ignoring whitespace) by `.` and followed (ignoring whitespace) by
+/// `(` or a `::` turbofish?
+pub fn has_method_call(hay: &str, needle: &str) -> bool {
+    let hb = hay.as_bytes();
+    for at in word_positions(hay, needle) {
+        let mut b = at;
+        while b > 0 && (hb[b - 1] as char).is_whitespace() {
+            b -= 1;
+        }
+        if b == 0 || hb[b - 1] != b'.' {
+            continue;
+        }
+        let mut e = at + needle.len();
+        while e < hb.len() && (hb[e] as char).is_whitespace() {
+            e += 1;
+        }
+        if e < hb.len() && (hb[e] == b'(' || hb[e..].starts_with(b"::")) {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        mask_source(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn comments_are_blanked_and_captured() {
+        let m = mask_source("let x = 1; // unwrap() here\ncall();\n");
+        assert!(!m[0].code.contains("unwrap"));
+        assert!(m[0].comment.contains("unwrap() here"));
+        assert_eq!(m[1].code, "call();");
+    }
+
+    #[test]
+    fn nested_block_comments_end_correctly() {
+        let c = codes("a /* x /* y */ z */ b\n");
+        assert_eq!(c[0].replace(' ', ""), "ab");
+    }
+
+    #[test]
+    fn string_contents_are_blanked_but_quotes_kept() {
+        let c = codes("let s = \"vec![unsafe]\"; f();\n");
+        assert!(!c[0].contains("unsafe"));
+        assert!(c[0].contains('"'));
+        assert!(c[0].contains("f();"));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let c = codes("let s = \"a\\\"b\"; g(); // c\n");
+        assert!(c[0].contains("g();"));
+        assert!(!c[0].contains('c'));
+    }
+
+    #[test]
+    fn raw_strings_any_hash_depth() {
+        let c = codes("let s = r#\"panic!(\"x\")\"#; h();\n");
+        assert!(!c[0].contains("panic"));
+        assert!(c[0].contains("h();"));
+        let c = codes("let s = br\"spawn(\"; k();\n");
+        assert!(!c[0].contains("spawn"));
+        assert!(c[0].contains("k();"));
+    }
+
+    #[test]
+    fn lifetimes_are_code_char_literals_are_blanked() {
+        let c = codes("fn f<'a>(x: &'a str) -> char { '{' }\n");
+        // the char literal '{' must not unbalance brace tracking
+        let opens = c[0].matches('{').count();
+        let closes = c[0].matches('}').count();
+        assert_eq!(opens, 1);
+        assert_eq!(closes, 1);
+        assert!(c[0].contains("<'a>"));
+    }
+
+    #[test]
+    fn multiline_strings_stay_masked() {
+        let c = codes("let s = \"line one\nunsafe line two\"; t();\n");
+        assert!(!c[1].contains("unsafe"));
+        assert!(c[1].contains("t();"));
+    }
+
+    #[test]
+    fn word_and_method_matching() {
+        assert!(has_word("unsafe {", "unsafe"));
+        assert!(!has_word("unsafe_fn()", "unsafe"));
+        assert!(has_method_call("x.unwrap()", "unwrap"));
+        assert!(has_method_call("x.collect::<Vec<_>>()", "collect"));
+        assert!(!has_method_call("x.unwrap_or(0)", "unwrap"));
+        assert!(!has_method_call("unwrap()", "unwrap"));
+    }
+}

@@ -1,0 +1,240 @@
+//! `repo-lint`: the repo-invariant static-analysis pass.
+//!
+//! The serving stack rests on contracts the compiler cannot check:
+//! batched logits must be bit-identical to serial ones, steady-state
+//! hot paths must be zero-alloc, load paths must return typed errors
+//! on corrupt checkpoints, and all thread/lock traffic must go through
+//! the audited seams. Until now those invariants lived in convention
+//! and runtime counters; this module turns violating them into a build
+//! failure (`make lint`, wired into `make verify`).
+//!
+//! The rule set (the spawn/lock pair is split into two ids so an
+//! annotation can target one precisely), each with a const allowlist
+//! table in [`rules`]:
+//!
+//! | rule id             | invariant                                              |
+//! |---------------------|--------------------------------------------------------|
+//! | `unsafe-discipline` | `unsafe` only in `util/{pool,arena}.rs`, `// SAFETY:` required |
+//! | `hot-path-alloc`    | designated hot fns draw buffers from `Scratch`/`BufPool` |
+//! | `panic-free`        | decode/load modules return typed errors, never panic   |
+//! | `spawn-hygiene`     | threads only from `util/pool.rs` / `serving/engine.rs` |
+//! | `lock-hygiene`      | no unannotated nested `.lock()` in serving modules     |
+//! | `determinism`       | no hash-container iteration in ordered-output modules  |
+//!
+//! Test code (`#[cfg(test)]` items, `#[test]` fns) is exempt from
+//! every rule. An intentional exception in shipping code is annotated
+//! in place with a justification comment whose text begins with
+//! `lint:allow`, names the rule id in parentheses, and must carry a
+//! non-empty justification after the closing paren — it suppresses
+//! that rule on its own line and the line directly below. An
+//! annotation with an unknown rule id or an empty justification is
+//! itself a diagnostic (`bad-allow`): silent or unexplained
+//! suppression defeats the audit trail.
+//!
+//! The pass is pure lexical analysis over a comment/string-aware mask
+//! of the source ([`lexer`]) — no rustc plumbing, no dependencies —
+//! so it runs in milliseconds anywhere the repo checks out. Entry
+//! points: [`lint_file`] (one virtual file — what the fixture tests
+//! drive) and [`lint_tree`] (walk `rust/src/**`, what the
+//! `repo-lint` binary and the repo-is-clean test run).
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Rule ids an annotation may name. `bad-allow` is deliberately not
+/// suppressible.
+pub const RULE_IDS: &[&str] = &[
+    "unsafe-discipline",
+    "hot-path-alloc",
+    "panic-free",
+    "spawn-hygiene",
+    "lock-hygiene",
+    "determinism",
+];
+
+/// One finding: `file:line: rule-id: message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the scanned root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// A parsed suppression annotation.
+struct Allow {
+    /// 0-based line the annotation comment sits on.
+    line0: usize,
+    /// The rule id inside the parens (verbatim, may be unknown).
+    id: String,
+    /// Non-empty justification text after the closing paren.
+    justified: bool,
+}
+
+const ALLOW_PREFIX: &str = "lint:allow(";
+
+/// Parse annotations from the comment channel. Only comments that
+/// *begin* with the marker count — prose that merely mentions the
+/// syntax is ignored.
+fn parse_allows(lines: &[lexer::Line]) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        let c = l.comment.trim();
+        if let Some(rest) = c.strip_prefix(ALLOW_PREFIX) {
+            if let Some(close) = rest.find(')') {
+                let id = rest[..close].trim().to_string();
+                let justified = !rest[close + 1..].trim().is_empty();
+                out.push(Allow { line0: i, id, justified });
+            }
+        }
+    }
+    out
+}
+
+/// Lint one file's source under its repo-relative path (which decides
+/// rule scoping). This is the seam the fixture tests drive with
+/// virtual paths like `"serving/engine.rs"`.
+pub fn lint_file(rel_path: &str, src: &str) -> Vec<Diagnostic> {
+    let rel = rel_path.replace('\\', "/");
+    let lines = lexer::mask_source(src);
+    let allows = parse_allows(&lines);
+    let ctx = rules::build_ctx(lines);
+    let mut raw: Vec<Diagnostic> = Vec::new();
+    rules::check_all(&rel, &ctx, &mut raw);
+    // one finding per (line, rule)
+    raw.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    raw.dedup_by(|a, b| a.line == b.line && a.rule == b.rule);
+
+    let mut out: Vec<Diagnostic> = Vec::new();
+    for a in &allows {
+        if !RULE_IDS.contains(&a.id.as_str()) {
+            out.push(Diagnostic {
+                file: rel.clone(),
+                line: a.line0 + 1,
+                rule: "bad-allow",
+                msg: format!(
+                    "unknown rule id `{}` (known: {})",
+                    a.id,
+                    RULE_IDS.join(", ")
+                ),
+            });
+        } else if !a.justified {
+            out.push(Diagnostic {
+                file: rel.clone(),
+                line: a.line0 + 1,
+                rule: "bad-allow",
+                msg: format!(
+                    "lint:allow({}) without a justification — say why the \
+                     exception is sound",
+                    a.id
+                ),
+            });
+        }
+    }
+    for d in raw {
+        let line0 = d.line - 1;
+        let suppressed = allows.iter().any(|a| {
+            a.justified
+                && a.id == d.rule
+                && RULE_IDS.contains(&a.id.as_str())
+                && (a.line0 == line0 || a.line0 + 1 == line0)
+        });
+        if !suppressed {
+            out.push(d);
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (deterministic order). Returns
+/// the full diagnostic list; empty means the tree honors every
+/// invariant.
+pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Diagnostic>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    let mut out = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(f)?;
+        out.extend(lint_file(&rel, &src));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_requires_known_id_and_justification() {
+        // unknown id → bad-allow, original diagnostic still fires
+        let src = "fn f() {\n    x.unwrap(); // lint:allow(no-such-rule) because\n}\n";
+        let ds = lint_file("util/json.rs", src);
+        assert!(ds.iter().any(|d| d.rule == "bad-allow"));
+        assert!(ds.iter().any(|d| d.rule == "panic-free"));
+        // missing justification → bad-allow, original still fires
+        let src = "fn f() {\n    x.unwrap(); // lint:allow(panic-free)\n}\n";
+        let ds = lint_file("util/json.rs", src);
+        assert!(ds.iter().any(|d| d.rule == "bad-allow"));
+        assert!(ds.iter().any(|d| d.rule == "panic-free"));
+        // well-formed → suppressed, no bad-allow
+        let src =
+            "fn f() {\n    x.unwrap(); // lint:allow(panic-free) infallible: writes to a String\n}\n";
+        let ds = lint_file("util/json.rs", src);
+        assert!(ds.is_empty(), "unexpected: {ds:?}");
+    }
+
+    #[test]
+    fn allow_on_the_line_above_also_suppresses() {
+        let src = "fn f() {\n    // lint:allow(panic-free) infallible by construction\n    x.unwrap();\n}\n";
+        assert!(lint_file("util/json.rs", src).is_empty());
+    }
+
+    #[test]
+    fn prose_mentioning_the_syntax_is_not_an_annotation() {
+        let src = "//! Exceptions use `// lint:allow(rule) why` comments.\nfn f() {}\n";
+        assert!(lint_file("util/json.rs", src).is_empty());
+    }
+
+    #[test]
+    fn diagnostics_format_as_file_line_rule() {
+        let d = Diagnostic {
+            file: "a/b.rs".into(),
+            line: 7,
+            rule: "panic-free",
+            msg: "m".into(),
+        };
+        assert_eq!(d.to_string(), "a/b.rs:7: panic-free: m");
+    }
+}

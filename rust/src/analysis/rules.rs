@@ -1,0 +1,793 @@
+//! The repo-lint rule checkers and their allowlist tables.
+//!
+//! Every rule is a lexical pass over the masked code channel (see
+//! [`super::lexer`]): comments and literal contents never trigger a
+//! rule. Spans for functions and `#[cfg(test)]` / `#[test]` items are
+//! recovered by brace matching on the masked text, so test-only code —
+//! where `unwrap()` and ad-hoc allocation are idiomatic — is exempt
+//! from every rule.
+//!
+//! The allowlist tables below are the policy half of each rule; the
+//! module docs in [`crate::analysis`] and the ROADMAP "enforced
+//! invariants" note describe how to annotate an intentional exception
+//! (`// lint:allow(<rule-id>) <justification>`).
+
+use super::lexer::{has_method_call, has_word, word_positions, Line};
+use super::Diagnostic;
+
+// ---------------------------------------------------------------------------
+// Policy tables
+// ---------------------------------------------------------------------------
+
+/// Modules allowed to contain `unsafe` at all (rule `unsafe-discipline`).
+/// Everything else must be safe Rust; these two hold the pool's
+/// lifetime-erasure transmute and the arena's buffer recycling.
+pub const UNSAFE_ALLOWED: &[&str] = &["util/pool.rs", "util/arena.rs"];
+
+/// Modules allowed to spawn OS threads (rule `spawn-hygiene`): the
+/// thread pool's lazily-started workers and the serving engine's one
+/// scheduler thread. Ad-hoc threads anywhere else bypass the pool's
+/// bit-identical fan-out contract and its panic propagation.
+pub const SPAWN_ALLOWED: &[&str] = &["util/pool.rs", "serving/engine.rs"];
+
+/// Load/decode modules that must return typed errors instead of
+/// panicking on corrupt input (rule `panic-free`): a bad checkpoint or
+/// run report is data, not a bug (PR 3's hardening, now a build gate).
+pub const PANIC_FREE_FILES: &[&str] = &[
+    "sparsity/mod.rs",
+    "quantize/mod.rs",
+    "util/json.rs",
+    "coordinator/checkpoint.rs",
+    "report/mod.rs",
+];
+
+/// Modules with an ordered-output contract (rule `determinism`): table
+/// emission and serving batch packing must not iterate hash containers
+/// (iteration order varies per process, breaking byte-identical
+/// reports and the ticket-order batching contract).
+pub const DETERMINISM_FILES: &[&str] = &[
+    "report/mod.rs",
+    "serving/engine.rs",
+    "serving/mod.rs",
+    "metrics/mod.rs",
+];
+
+/// Functions with a zero-alloc steady-state contract (rule
+/// `hot-path-alloc`): the packed GEMM/im2col family, the native
+/// backend's per-step entry points, the sparse serving kernels, and
+/// the engine's dispatch loop. Working buffers must come from the
+/// `Scratch` / `BufPool` arenas (PR 6); a raw allocation here is the
+/// regression the runtime grow-counters could only catch after the
+/// fact.
+pub const HOT_FNS: &[(&str, &[&str])] = &[
+    (
+        "tensor/mod.rs",
+        &[
+            "pack_a",
+            "pack_b",
+            "microkernel",
+            "write_out",
+            "gemm_blocked",
+            "gemm",
+            "gemm_epi",
+            "gemm_par",
+            "gemm_par_epi",
+            "gemm_tn",
+            "gemm_tn_par",
+            "gemm_nt",
+            "gemm_nt_par",
+            "im2col",
+            "im2col_str",
+            "col2im",
+            "col2im_str",
+            "ensure_len",
+        ],
+    ),
+    (
+        "backend/native.rs",
+        &[
+            "masked_weight",
+            "conv_forward",
+            "conv_backward",
+            "forward",
+            "ce_stats",
+            "backward",
+            "recycle_tape",
+            "train_step",
+            "evaluate",
+            "infer",
+            "maxpool2_into",
+            "global_avg_pool_into",
+            "residual_join",
+        ],
+    ),
+    (
+        "backend/sparse_infer.rs",
+        &["spmm", "conv_spmm", "infer_with"],
+    ),
+    ("serving/engine.rs", &["scheduler_loop", "dispatch"]),
+];
+
+/// Path prefix for the lock-nesting half of `lock-hygiene`.
+pub const LOCK_SCOPE_PREFIX: &str = "serving/";
+
+// ---------------------------------------------------------------------------
+// Structural context shared by the checkers
+// ---------------------------------------------------------------------------
+
+/// A function's span in the masked source (0-based inclusive lines,
+/// from the `fn` keyword through the body's closing brace).
+pub(crate) struct FnSpan {
+    pub name: String,
+    pub start: usize,
+    pub end: usize,
+}
+
+pub(crate) struct Ctx {
+    pub lines: Vec<Line>,
+    pub fns: Vec<FnSpan>,
+    /// Per line: inside a `#[cfg(test)]` / `#[test]` item.
+    pub is_test: Vec<bool>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Flattened masked code with a per-char line index.
+struct Flat {
+    chars: Vec<char>,
+    line: Vec<usize>,
+}
+
+fn flatten(lines: &[Line]) -> Flat {
+    let mut chars = Vec::new();
+    let mut line = Vec::new();
+    for (li, l) in lines.iter().enumerate() {
+        for c in l.code.chars() {
+            chars.push(c);
+            line.push(li);
+        }
+        chars.push('\n');
+        line.push(li);
+    }
+    Flat { chars, line }
+}
+
+fn find_fn_spans(flat: &Flat) -> Vec<FnSpan> {
+    let cs = &flat.chars;
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < cs.len() {
+        let word_fn = cs[i] == 'f'
+            && cs[i + 1] == 'n'
+            && (i == 0 || !is_ident(cs[i - 1]))
+            && (i + 2 >= cs.len() || !is_ident(cs[i + 2]));
+        if !word_fn {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 2;
+        while j < cs.len() && cs[j].is_whitespace() {
+            j += 1;
+        }
+        let name_start = j;
+        while j < cs.len() && is_ident(cs[j]) {
+            j += 1;
+        }
+        if j == name_start {
+            // `fn(..)` type position — not an item
+            i += 2;
+            continue;
+        }
+        let name: String = cs[name_start..j].iter().collect();
+        // body starts at the first `{` outside the signature's
+        // parens/brackets; a `;` first means a bodyless declaration
+        let mut pd = 0i32;
+        let mut k = j;
+        let mut body = None;
+        while k < cs.len() {
+            match cs[k] {
+                '(' | '[' => pd += 1,
+                ')' | ']' => pd -= 1,
+                '{' if pd == 0 => {
+                    body = Some(k);
+                    break;
+                }
+                ';' if pd == 0 => break,
+                _ => {}
+            }
+            k += 1;
+        }
+        if let Some(b) = body {
+            let mut bd = 0i32;
+            let mut e = b;
+            while e < cs.len() {
+                match cs[e] {
+                    '{' => bd += 1,
+                    '}' => {
+                        bd -= 1;
+                        if bd == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                e += 1;
+            }
+            let e = e.min(cs.len() - 1);
+            spans.push(FnSpan { name, start: flat.line[i], end: flat.line[e] });
+        }
+        // resume right after the name so nested fns are still found
+        i = j;
+    }
+    spans
+}
+
+/// Mark every line covered by a `#[cfg(test)]` or `#[test]` item.
+fn find_test_mask(flat: &Flat, n_lines: usize) -> Vec<bool> {
+    let src: String = flat.chars.iter().collect();
+    let mut mask = vec![false; n_lines];
+    for pat in ["#[cfg(test)]", "#[test]"] {
+        let mut from = 0usize;
+        while let Some(rel) = src[from..].find(pat) {
+            let at = from + rel;
+            let start_char = src[..at].chars().count();
+            let mut k = src[..at + pat.len()].chars().count();
+            let cs = &flat.chars;
+            // skip whitespace and any further attributes
+            loop {
+                while k < cs.len() && cs[k].is_whitespace() {
+                    k += 1;
+                }
+                if k < cs.len() && cs[k] == '#' {
+                    let mut bd = 0i32;
+                    while k < cs.len() {
+                        match cs[k] {
+                            '[' => bd += 1,
+                            ']' => {
+                                bd -= 1;
+                                if bd == 0 {
+                                    k += 1;
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                } else {
+                    break;
+                }
+            }
+            // consume the item: to `;` at depth 0, or a brace block
+            let mut bd = 0i32;
+            let mut saw_brace = false;
+            while k < cs.len() {
+                match cs[k] {
+                    '{' => {
+                        bd += 1;
+                        saw_brace = true;
+                    }
+                    '}' => {
+                        bd -= 1;
+                        if saw_brace && bd == 0 {
+                            break;
+                        }
+                    }
+                    ';' if !saw_brace => break,
+                    _ => {}
+                }
+                k += 1;
+            }
+            let k = k.min(cs.len() - 1);
+            let (s, e) = (flat.line[start_char], flat.line[k]);
+            for m in mask.iter_mut().take(e + 1).skip(s) {
+                *m = true;
+            }
+            from = at + pat.len();
+        }
+    }
+    mask
+}
+
+pub(crate) fn build_ctx(lines: Vec<Line>) -> Ctx {
+    let flat = flatten(&lines);
+    let fns = find_fn_spans(&flat);
+    let is_test = find_test_mask(&flat, lines.len());
+    Ctx { lines, fns, is_test }
+}
+
+// ---------------------------------------------------------------------------
+// Small matching helpers
+// ---------------------------------------------------------------------------
+
+/// Find `pat` (which may contain `::`) with ident boundaries at both
+/// ends — `Vec::new` matches, `MyVec::new` and `Vec::new_in` don't.
+fn has_path(hay: &str, pat: &str) -> bool {
+    let hb = hay.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = hay[from..].find(pat) {
+        let at = from + rel;
+        let before_ok = at == 0 || !is_ident(hb[at - 1] as char);
+        let end = at + pat.len();
+        let after_ok = end >= hb.len() || !is_ident(hb[end] as char);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + pat.len();
+    }
+    false
+}
+
+/// `word` followed by `!` — macro invocation.
+fn has_macro(hay: &str, word: &str) -> bool {
+    let hb = hay.as_bytes();
+    for at in word_positions(hay, word) {
+        let end = at + word.len();
+        if end < hb.len() && hb[end] == b'!' {
+            return true;
+        }
+    }
+    false
+}
+
+/// `word` called as `.word(` or `::word(` (allocation constructors
+/// like `with_capacity` appear both ways).
+fn has_call_after_sep(hay: &str, word: &str) -> bool {
+    let hb = hay.as_bytes();
+    for at in word_positions(hay, word) {
+        let mut b = at;
+        while b > 0 && (hb[b - 1] as char).is_whitespace() {
+            b -= 1;
+        }
+        let sep_ok = b > 0 && (hb[b - 1] == b'.' || hb[b - 1] == b':');
+        let mut e = at + word.len();
+        while e < hb.len() && (hb[e] as char).is_whitespace() {
+            e += 1;
+        }
+        let call_ok = e < hb.len() && (hb[e] == b'(' || hb[e..].starts_with(b"::"));
+        if sep_ok && call_ok {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+fn diag(
+    out: &mut Vec<Diagnostic>,
+    file: &str,
+    line0: usize,
+    rule: &'static str,
+    msg: String,
+) {
+    out.push(Diagnostic { file: file.to_string(), line: line0 + 1, rule, msg });
+}
+
+/// Rule `unsafe-discipline`: `unsafe` only in [`UNSAFE_ALLOWED`], and
+/// every use there must carry a `// SAFETY:` comment — on the same
+/// line, or above it within the same statement / contiguous comment
+/// block.
+pub(crate) fn check_unsafe(file: &str, ctx: &Ctx, out: &mut Vec<Diagnostic>) {
+    for (i, l) in ctx.lines.iter().enumerate() {
+        if ctx.is_test[i] || !has_word(&l.code, "unsafe") {
+            continue;
+        }
+        if !UNSAFE_ALLOWED.contains(&file) {
+            diag(
+                out,
+                file,
+                i,
+                "unsafe-discipline",
+                format!(
+                    "`unsafe` outside the allowlisted modules ({})",
+                    UNSAFE_ALLOWED.join(", ")
+                ),
+            );
+            continue;
+        }
+        if !safety_comment_covers(ctx, i) {
+            diag(
+                out,
+                file,
+                i,
+                "unsafe-discipline",
+                "`unsafe` without a preceding `// SAFETY:` comment".to_string(),
+            );
+        }
+    }
+}
+
+/// Walk upward from the `unsafe` line looking for `SAFETY:` in the
+/// comment channel: comment/blank lines always continue the walk; a
+/// code line continues only while it is part of the same statement
+/// (does not end with `;`, `{`, or `}`).
+fn safety_comment_covers(ctx: &Ctx, at: usize) -> bool {
+    if ctx.lines[at].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut i = at;
+    for _ in 0..24 {
+        if i == 0 {
+            break;
+        }
+        i -= 1;
+        let l = &ctx.lines[i];
+        if l.comment.contains("SAFETY:") {
+            return true;
+        }
+        let code = l.code.trim();
+        if code.is_empty() {
+            continue;
+        }
+        if code.ends_with(';') || code.ends_with('{') || code.ends_with('}') {
+            return false;
+        }
+    }
+    false
+}
+
+/// Rule `hot-path-alloc`: allocation constructors inside the
+/// designated zero-alloc functions ([`HOT_FNS`]).
+pub(crate) fn check_hot_alloc(file: &str, ctx: &Ctx, out: &mut Vec<Diagnostic>) {
+    let Some((_, fns)) = HOT_FNS.iter().find(|(f, _)| *f == file) else {
+        return;
+    };
+    for span in &ctx.fns {
+        if !fns.contains(&span.name.as_str()) || ctx.is_test[span.start] {
+            continue;
+        }
+        for i in span.start..=span.end.min(ctx.lines.len() - 1) {
+            if ctx.is_test[i] {
+                continue;
+            }
+            let code = &ctx.lines[i].code;
+            let tok = if has_path(code, "Vec::new") {
+                Some("Vec::new")
+            } else if has_macro(code, "vec") {
+                Some("vec![")
+            } else if has_call_after_sep(code, "with_capacity") {
+                Some("with_capacity")
+            } else if has_method_call(code, "to_vec") {
+                Some("to_vec")
+            } else if has_method_call(code, "collect") {
+                Some("collect")
+            } else {
+                None
+            };
+            if let Some(tok) = tok {
+                diag(
+                    out,
+                    file,
+                    i,
+                    "hot-path-alloc",
+                    format!(
+                        "allocation (`{tok}`) in zero-alloc hot path \
+                         `{}` — draw from the Scratch/BufPool arenas",
+                        span.name
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Rule `panic-free`: no `unwrap`/`expect`/`panic!`-family in the
+/// hardened load/decode modules ([`PANIC_FREE_FILES`]).
+pub(crate) fn check_panic_free(file: &str, ctx: &Ctx, out: &mut Vec<Diagnostic>) {
+    if !PANIC_FREE_FILES.contains(&file) {
+        return;
+    }
+    for (i, l) in ctx.lines.iter().enumerate() {
+        if ctx.is_test[i] {
+            continue;
+        }
+        let code = &l.code;
+        let tok = if has_method_call(code, "unwrap") {
+            Some(".unwrap()")
+        } else if has_method_call(code, "expect") {
+            Some(".expect()")
+        } else if has_macro(code, "panic") {
+            Some("panic!")
+        } else if has_macro(code, "unreachable") {
+            Some("unreachable!")
+        } else if has_macro(code, "todo") {
+            Some("todo!")
+        } else if has_macro(code, "unimplemented") {
+            Some("unimplemented!")
+        } else {
+            None
+        };
+        if let Some(tok) = tok {
+            diag(
+                out,
+                file,
+                i,
+                "panic-free",
+                format!(
+                    "`{tok}` in a hardened load path — corrupt input must \
+                     surface as a typed error, not a panic"
+                ),
+            );
+        }
+    }
+}
+
+/// Rule `spawn-hygiene`: OS threads only from [`SPAWN_ALLOWED`].
+pub(crate) fn check_spawn(file: &str, ctx: &Ctx, out: &mut Vec<Diagnostic>) {
+    if SPAWN_ALLOWED.contains(&file) {
+        return;
+    }
+    for (i, l) in ctx.lines.iter().enumerate() {
+        if ctx.is_test[i] {
+            continue;
+        }
+        if has_call_after_sep(&l.code, "spawn") {
+            diag(
+                out,
+                file,
+                i,
+                "spawn-hygiene",
+                format!(
+                    "thread spawn outside the allowlisted modules ({}) — \
+                     use util::ThreadPool",
+                    SPAWN_ALLOWED.join(", ")
+                ),
+            );
+        }
+    }
+}
+
+/// Rule `lock-hygiene` (serving modules): a `.lock()` taken while an
+/// earlier guard is still lexically live is a lock-order-inversion
+/// smell — every benign nesting must be annotated with its ordering
+/// argument.
+pub(crate) fn check_lock_nesting(file: &str, ctx: &Ctx, out: &mut Vec<Diagnostic>) {
+    if !file.starts_with(LOCK_SCOPE_PREFIX) {
+        return;
+    }
+    for span in &ctx.fns {
+        if ctx.is_test[span.start] {
+            continue;
+        }
+        // (guard name if bound, depth of the binding's block)
+        let mut guards: Vec<(Option<String>, i32)> = Vec::new();
+        let mut depth = 0i32;
+        for i in span.start..=span.end.min(ctx.lines.len() - 1) {
+            let code = &ctx.lines[i].code;
+            let locks = lock_call_count(code);
+            if locks > 0 {
+                if !guards.is_empty() || locks > 1 {
+                    diag(
+                        out,
+                        file,
+                        i,
+                        "lock-hygiene",
+                        format!(
+                            "nested `.lock()` in `{}` while another guard \
+                             is live — lock-order inversion risk",
+                            span.name
+                        ),
+                    );
+                }
+                if let Some(name) = let_binding_name(code) {
+                    guards.push((Some(name), depth));
+                } else if code.contains("match") || code.contains("if let") {
+                    // guard bound through a pattern — keep it anonymous
+                    guards.push((None, depth));
+                }
+            }
+            // explicit early drop releases the named guard
+            for at in word_positions(code, "drop") {
+                let rest = &code[at + 4..];
+                if let Some(inner) = rest.strip_prefix('(') {
+                    let name: String =
+                        inner.chars().take_while(|&c| is_ident(c)).collect();
+                    guards.retain(|(g, _)| g.as_deref() != Some(name.as_str()));
+                }
+            }
+            for c in code.chars() {
+                match c {
+                    '{' => depth += 1,
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            guards.retain(|(_, d)| *d <= depth);
+        }
+    }
+}
+
+/// Count `.lock()` method calls on the line (`try_lock` is exempt —
+/// non-blocking acquisition cannot deadlock).
+fn lock_call_count(code: &str) -> usize {
+    let hb = code.as_bytes();
+    let mut n = 0usize;
+    for at in word_positions(code, "lock") {
+        let mut b = at;
+        while b > 0 && (hb[b - 1] as char).is_whitespace() {
+            b -= 1;
+        }
+        if b == 0 || hb[b - 1] != b'.' {
+            continue;
+        }
+        let mut e = at + 4;
+        while e < hb.len() && (hb[e] as char).is_whitespace() {
+            e += 1;
+        }
+        if e < hb.len() && hb[e] == b'(' {
+            n += 1;
+        }
+    }
+    n
+}
+
+/// `let [mut] NAME = ...` → NAME.
+fn let_binding_name(code: &str) -> Option<String> {
+    let t = code.trim_start();
+    let rest = t.strip_prefix("let ")?;
+    let rest = rest.trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+    let name: String = rest.chars().take_while(|&c| is_ident(c)).collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// Methods whose call on a hash container implies iteration order.
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "drain",
+    "retain",
+];
+
+/// Rule `determinism`: no iteration over `HashMap`/`HashSet` in
+/// modules with ordered-output contracts ([`DETERMINISM_FILES`]).
+/// Point lookups (`get`/`insert`/`remove`/`contains`) stay legal; use
+/// `BTreeMap` or an explicit sort where iteration is needed.
+pub(crate) fn check_determinism(file: &str, ctx: &Ctx, out: &mut Vec<Diagnostic>) {
+    if !DETERMINISM_FILES.contains(&file) {
+        return;
+    }
+    // names bound or declared with a hash-container type
+    let mut names: Vec<String> = Vec::new();
+    for (i, l) in ctx.lines.iter().enumerate() {
+        if ctx.is_test[i] {
+            continue;
+        }
+        for ty in ["HashMap", "HashSet"] {
+            for at in word_positions(&l.code, ty) {
+                if let Some(n) = binder_before(&l.code, at) {
+                    if !names.contains(&n) {
+                        names.push(n);
+                    }
+                }
+            }
+        }
+    }
+    if names.is_empty() {
+        return;
+    }
+    for (i, l) in ctx.lines.iter().enumerate() {
+        if ctx.is_test[i] {
+            continue;
+        }
+        let code = &l.code;
+        let mut hit = false;
+        for m in ITER_METHODS {
+            if !has_method_call(code, m) {
+                continue;
+            }
+            // the receiver chain must end in a known hash container
+            for at in word_positions(code, m) {
+                if let Some(recv) = receiver_before(code, at) {
+                    if names.contains(&recv) {
+                        hit = true;
+                    }
+                }
+            }
+        }
+        // `for x in [&[mut ]]name` loops
+        if !hit && has_word(code, "for") {
+            if let Some(pos) = code.find(" in ") {
+                let expr = &code[pos + 4..];
+                let expr = expr.split('{').next().unwrap_or(expr);
+                if names.iter().any(|n| has_word(expr, n)) {
+                    hit = true;
+                }
+            }
+        }
+        if hit {
+            diag(
+                out,
+                file,
+                i,
+                "determinism",
+                "iteration over a HashMap/HashSet in an ordered-output \
+                 module — use BTreeMap/Vec or sort explicitly"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// For `name: HashMap<..>` or `name = HashMap::..` at `at`, extract
+/// `name`.
+fn binder_before(code: &str, at: usize) -> Option<String> {
+    let hb = code.as_bytes();
+    let mut b = at;
+    while b > 0 && (hb[b - 1] as char).is_whitespace() {
+        b -= 1;
+    }
+    if b == 0 || (hb[b - 1] != b':' && hb[b - 1] != b'=') {
+        return None;
+    }
+    if hb[b - 1] == b':' {
+        // `::` is a path, not a type ascription
+        if b >= 2 && hb[b - 2] == b':' {
+            return None;
+        }
+        b -= 1;
+    } else {
+        b -= 1;
+        // `==`, `=>`, `+=` etc. are not bindings
+        if b > 0 && !matches!(hb[b - 1], b' ' | b'\t') {
+            return None;
+        }
+    }
+    while b > 0 && (hb[b - 1] as char).is_whitespace() {
+        b -= 1;
+    }
+    let end = b;
+    while b > 0 && is_ident(hb[b - 1] as char) {
+        b -= 1;
+    }
+    if b == end {
+        return None;
+    }
+    code.get(b..end).map(str::to_string)
+}
+
+/// For a method call at `at` (`recv.method(..)` possibly through a
+/// field chain `q.results.iter()`), extract the receiver's last path
+/// segment (`results`).
+fn receiver_before(code: &str, at: usize) -> Option<String> {
+    let hb = code.as_bytes();
+    let mut b = at;
+    while b > 0 && (hb[b - 1] as char).is_whitespace() {
+        b -= 1;
+    }
+    if b == 0 || hb[b - 1] != b'.' {
+        return None;
+    }
+    b -= 1;
+    let end = b;
+    while b > 0 && is_ident(hb[b - 1] as char) {
+        b -= 1;
+    }
+    if b == end {
+        return None;
+    }
+    code.get(b..end).map(str::to_string)
+}
+
+/// Run every rule over one masked file.
+pub(crate) fn check_all(file: &str, ctx: &Ctx, out: &mut Vec<Diagnostic>) {
+    check_unsafe(file, ctx, out);
+    check_hot_alloc(file, ctx, out);
+    check_panic_free(file, ctx, out);
+    check_spawn(file, ctx, out);
+    check_lock_nesting(file, ctx, out);
+    check_determinism(file, ctx, out);
+}

@@ -594,6 +594,10 @@ pub struct NativeBackend {
     ops: Vec<Op>,
     /// Weight order li → (weight param index, bias param index).
     widx: Vec<(usize, usize)>,
+    /// Param index → weight-layer index (None for biases) — the
+    /// inverse of `widx`, precomputed so `train_step`'s ADAM loop does
+    /// not rebuild it every step.
+    is_weight: Vec<Option<usize>>,
     /// Hot-path workspaces; locked once per entry point (`train_step`,
     /// `evaluate`, `infer`), never nested.
     scratch: Mutex<Scratch>,
@@ -642,11 +646,16 @@ impl NativeBackend {
                 widx.push((i, bias));
             }
         }
+        let mut is_weight = vec![None; entry.params.len()];
+        for (li, &(wi, _)) in widx.iter().enumerate() {
+            is_weight[wi] = Some(li);
+        }
         Ok(NativeBackend {
             name: name.to_string(),
             entry,
             ops,
             widx,
+            is_weight,
             scratch: Mutex::new(Scratch::default()),
         })
     }
@@ -794,8 +803,10 @@ impl NativeBackend {
         };
         let mut cur = sc.f.take_uninit(x.len());
         cur.copy_from_slice(x);
+        // lint:allow(hot-path-alloc) O(n_ops) container of pool-drawn buffers
         let mut tape: Vec<Rec> = Vec::new();
         // Saved residual activations: (data, h, w, c) per open edge.
+        // lint:allow(hot-path-alloc) O(n_edges) container of pool-drawn buffers
         let mut skips: Vec<(Vec<f32>, usize, usize, usize)> = Vec::new();
         for op in &self.ops {
             match *op {
@@ -997,11 +1008,13 @@ impl NativeBackend {
             .params
             .iter()
             .map(|p| sc.f.take(p.numel()))
+            // lint:allow(hot-path-alloc) O(n_params) container; buffers come from the pool
             .collect();
         let mut g = dlogits;
         // Gradients queued for the skip branch of each open residual
         // edge (pushed at AddSkip, transformed by SkipConv, folded back
         // into the main path at SaveSkip).
+        // lint:allow(hot-path-alloc) O(n_edges) container of pool-drawn buffers
         let mut skip_grads: Vec<Vec<f32>> = Vec::new();
         for i in (0..tape.len()).rev() {
             // dx of the earliest compute op feeds nothing — skip it.
@@ -1196,13 +1209,7 @@ impl ModelExec for NativeBackend {
         let t = st.step;
         let bc1 = 1.0 - ADAM_B1.powf(t);
         let bc2 = 1.0 - ADAM_B2.powf(t);
-        let is_weight: Vec<Option<usize>> = {
-            let mut v = vec![None; self.entry.params.len()];
-            for (li, &(wi, _)) in self.widx.iter().enumerate() {
-                v[wi] = Some(li);
-            }
-            v
-        };
+        let is_weight = &self.is_weight;
         for (pi, g) in grads.iter().enumerate() {
             let p = st.params[pi].data_mut();
             let m = st.adam_m[pi].data_mut();

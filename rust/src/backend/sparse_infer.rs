@@ -349,6 +349,7 @@ impl SparseInfer {
         let mut cur = sc.f.take_uninit(x.len());
         cur.copy_from_slice(x);
         // Saved residual activations: (data, h, w, c) per open edge.
+        // lint:allow(hot-path-alloc) O(n_edges) container of pool-drawn buffers
         let mut skips: Vec<(Vec<f32>, usize, usize, usize)> = Vec::new();
         for op in &self.ops {
             match *op {
@@ -425,6 +426,7 @@ impl SparseInfer {
         // The logits escape to the caller, so hand back a plain Vec and
         // recycle the arena buffer — the result allocation is the API
         // contract; the workspace stays closed.
+        // lint:allow(hot-path-alloc) result escapes to the caller by contract
         let out = cur[..].to_vec();
         sc.f.put(cur);
         Ok(out)

@@ -1,0 +1,54 @@
+//! `repo-lint` — run the repo-invariant static-analysis pass over the
+//! source tree and fail the build on any violation.
+//!
+//! Usage: `repo-lint [SRC_ROOT]` (default: `rust/src`, falling back to
+//! `src` when invoked from inside `rust/`). Diagnostics print one per
+//! line as `file:line: rule-id: message`; exit status is 0 on a clean
+//! tree, 1 on violations, 2 on I/O errors. See
+//! [`admm_nn::analysis`] for the rules and the annotation policy.
+// Crate-root style allowances, matching rust/src/lib.rs (these used to
+// be -A flags on the Makefile's clippy invocation).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn default_root() -> PathBuf {
+    for c in ["rust/src", "src"] {
+        let p = PathBuf::from(c);
+        if p.is_dir() {
+            return p;
+        }
+    }
+    PathBuf::from("rust/src")
+}
+
+fn main() -> ExitCode {
+    let root = match std::env::args().nth(1) {
+        Some(p) => PathBuf::from(p),
+        None => default_root(),
+    };
+    let diags = match admm_nn::analysis::lint_tree(&root) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("repo-lint: cannot scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for d in &diags {
+        println!("{d}");
+    }
+    if diags.is_empty() {
+        eprintln!("repo-lint: {} clean", root.display());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "repo-lint: {} violation(s) — fix, or annotate with a justified \
+             `lint:allow` comment (see rust/src/analysis/mod.rs)",
+            diags.len()
+        );
+        ExitCode::FAILURE
+    }
+}

@@ -10,7 +10,7 @@
 //! The on-disk format is a versioned little-endian binary; no external
 //! serialization dependency so the format stays auditable.
 
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
 
 use anyhow::{anyhow, Context};
@@ -263,7 +263,7 @@ impl CompressedModel {
 // -- tiny LE codec ----------------------------------------------------------
 
 fn put_u32(w: &mut Vec<u8>, v: u32) {
-    w.write_all(&v.to_le_bytes()).unwrap();
+    w.extend_from_slice(&v.to_le_bytes());
 }
 
 /// Checked u32 count/dim field: a value above `u32::MAX` (a >4G-element
@@ -277,12 +277,12 @@ fn put_count(w: &mut Vec<u8>, v: usize, what: &str) -> crate::Result<()> {
 }
 
 fn put_f32(w: &mut Vec<u8>, v: f32) {
-    w.write_all(&v.to_le_bytes()).unwrap();
+    w.extend_from_slice(&v.to_le_bytes());
 }
 
 fn put_str(w: &mut Vec<u8>, s: &str) {
     put_u32(w, s.len() as u32);
-    w.write_all(s.as_bytes()).unwrap();
+    w.extend_from_slice(s.as_bytes());
 }
 
 fn corrupt(layer: &str, why: String) -> anyhow::Error {

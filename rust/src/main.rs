@@ -17,6 +17,11 @@
 //! `auto` (pjrt when `artifacts/manifest.json` exists, else native).
 //! Python is never invoked. Argument parsing is in-tree
 //! ([`util::cli`]) — this repo builds offline with no clap dependency.
+// Crate-root style allowances, matching rust/src/lib.rs (these used to
+// be -A flags on the Makefile's clippy invocation).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
 
 use admm_nn::backend::{native::NativeBackend, ModelExec};
 use admm_nn::coordinator::{

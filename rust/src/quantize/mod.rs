@@ -250,6 +250,7 @@ pub fn select_bits(v: &[f32], tol: f64, max_bits: u32) -> QuantConfig {
             // the estimate was optimistic at the boundary — add a bit
         }
     }
+    // lint:allow(panic-free) loop invariant: the bits == max_bits iteration always returns
     unreachable!("the bits == max_bits iteration always returns");
 }
 
@@ -267,6 +268,7 @@ pub fn select_bits_exact(v: &[f32], tol: f64, max_bits: u32) -> QuantConfig {
             break;
         }
     }
+    // lint:allow(panic-free) the 1..=max_bits loop sets `best` on every iteration
     best.expect("max_bits >= 1")
 }
 

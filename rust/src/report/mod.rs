@@ -243,6 +243,7 @@ pub fn table_pruning(net_name: &str, runs: &[MeasuredRun]) -> String {
                 ("ADMM-NN (ours)", -0.8, 17.4),
             ],
         ),
+        // lint:allow(panic-free) static table names from the report driver, not loaded data
         _ => panic!("unknown network {net_name}"),
     };
     let total = net.total_params();
@@ -321,6 +322,7 @@ pub fn table_model_size(net_name: &str, runs: &[MeasuredRun]) -> String {
                       profile: None, conv_bits: 2, fc_bits: 2 },
             ],
         ),
+        // lint:allow(panic-free) static table names from the report driver, not loaded data
         _ => panic!("table_model_size: {net_name} not covered"),
     };
 
@@ -566,7 +568,7 @@ pub fn onchip() -> String {
     out.push_str(&format!("On-chip storage feasibility (§4.3)\n{}\n", rule(74)));
     out.push_str(&format!("{:<28}", "model / size"));
     for (d, _) in &devices {
-        out.push_str(&format!(" {:>14}", d.split(' ').next().unwrap()));
+        out.push_str(&format!(" {:>14}", d.split(' ').next().unwrap_or(d)));
     }
     out.push('\n');
     for (name, bytes) in &configs {

@@ -14,6 +14,17 @@
 //! rows independently — per-request logits are bit-identical to serial
 //! single-request calls regardless of coalescing, pool width, or how
 //! submitters interleave (see `tests/serving_engine.rs`).
+//!
+//! Lock poisoning: the queue lock (`q`) guards the engine's core
+//! invariants (ticket accounting, pending/in-flight sets), so a panic
+//! while holding it is unrecoverable and every later `q` acquisition
+//! deliberately propagates with `expect`. The leaf locks — per-model
+//! stats and the persistent batch-packing buffer — hold plain data
+//! that is valid at every statement boundary, so those acquisitions
+//! recover from poisoning with `unwrap_or_else(|e| e.into_inner())`:
+//! a backend panic (already caught in `dispatch`) or a panicking
+//! client thread must not turn a monitoring counter into a
+//! denial-of-service on the whole engine.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
@@ -236,13 +247,18 @@ impl ServingEngine {
                 rows,
                 input: req.input,
                 submitted: now,
-                deadline: req.deadline.map(|d| now + d),
+                // checked: `now + d` panics on overflow for absurd
+                // Durations, and a panic here — under the queue lock —
+                // would poison `q` and kill the whole engine; a
+                // deadline past the representable horizon means none
+                deadline: req.deadline.and_then(|d| now.checked_add(d)),
             });
             q.queued.insert(ticket);
             // counted while the queue lock is held so a stats snapshot
             // can never observe completed > submitted (the scheduler
             // cannot finish this request before the lock drops)
-            sh.stats[model].lock().expect("stats poisoned").submitted += 1;
+            // lint:allow(lock-hygiene) fixed order q -> stats; stats is a leaf lock
+            sh.stats[model].lock().unwrap_or_else(|e| e.into_inner()).submitted += 1;
             ticket
         };
         sh.work.notify_one();
@@ -292,7 +308,7 @@ impl ServingEngine {
     /// Snapshot of one model's serving counters.
     pub fn stats(&self, model: &str) -> Option<ServingCounters> {
         let i = self.shared.names.iter().position(|n| n == model)?;
-        Some(self.shared.stats[i].lock().expect("stats poisoned").clone())
+        Some(self.shared.stats[i].lock().unwrap_or_else(|e| e.into_inner()).clone())
     }
 
     /// Snapshots for every registered model, in registration order.
@@ -302,7 +318,7 @@ impl ServingEngine {
             .iter()
             .cloned()
             .zip(self.shared.stats.iter().map(|s| {
-                s.lock().expect("stats poisoned").clone()
+                s.lock().unwrap_or_else(|e| e.into_inner()).clone()
             }))
             .collect()
     }
@@ -393,6 +409,7 @@ fn scheduler_loop(sh: &Shared) {
                 // same-model request that does NOT fit ends the scan —
                 // later smaller requests must not leapfrog it, so
                 // same-model completion keeps FIFO order.
+                // lint:allow(hot-path-alloc) O(batch) container; payloads are moved, not copied
                 let mut reqs: Vec<Pending> = Vec::new();
                 let mut total_rows = 0usize;
                 let mut i = 0usize;
@@ -432,10 +449,12 @@ fn dispatch(sh: &Shared, batch: Extracted) {
         .into_iter()
         .partition(|p| p.deadline.map(|d| d > dispatch_t).unwrap_or(true));
 
-    let mut outcome: Vec<(u64, Result<Vec<f32>, ServingError>)> =
-        Vec::with_capacity(live.len() + dead.len());
+    type Outcome = Vec<(u64, Result<Vec<f32>, ServingError>)>;
+    // lint:allow(hot-path-alloc) O(batch) ticket/outcome container
+    let mut outcome: Outcome = Vec::with_capacity(live.len() + dead.len());
     {
-        let mut st = sh.stats[batch.model].lock().expect("stats poisoned");
+        let mut st =
+            sh.stats[batch.model].lock().unwrap_or_else(|e| e.into_inner());
         for p in &dead {
             st.expired += 1;
             st.queue_s += dispatch_t.duration_since(p.submitted).as_secs_f64();
@@ -452,7 +471,7 @@ fn dispatch(sh: &Shared, batch: Extracted) {
         // pack inputs in ticket order — the deterministic request→slot
         // assignment behind the bit-identical guarantee — into the
         // persistent buffer (no per-dispatch allocation at steady state)
-        let mut x = sh.batch_x.lock().expect("batch buffer poisoned");
+        let mut x = sh.batch_x.lock().unwrap_or_else(|e| e.into_inner());
         x.clear();
         x.reserve(rows * dim);
         for p in &live {
@@ -481,7 +500,8 @@ fn dispatch(sh: &Shared, batch: Extracted) {
         let infer_s = t_infer.elapsed().as_secs_f64();
         let done_t = Instant::now();
         {
-            let mut st = sh.stats[batch.model].lock().expect("stats poisoned");
+            // lint:allow(lock-hygiene) fixed order batch_x -> stats; stats is a leaf lock
+            let mut st = sh.stats[batch.model].lock().unwrap_or_else(|e| e.into_inner());
             st.batches += 1;
             st.infer_s += infer_s;
             st.max_batch_rows = st.max_batch_rows.max(rows as u64);
@@ -507,6 +527,7 @@ fn dispatch(sh: &Shared, batch: Extracted) {
                 let mut off = 0usize;
                 for p in &live {
                     let n = p.rows * classes;
+                    // lint:allow(hot-path-alloc) per-request logits escape to the client
                     outcome.push((p.ticket, Ok(logits[off..off + n].to_vec())));
                     off += n;
                 }

@@ -258,7 +258,7 @@ impl Csr {
                 ));
             }
         }
-        let nnz = *self.row_ptr.last().unwrap() as usize;
+        let nnz = self.row_ptr.last().copied().unwrap_or(0) as usize;
         if nnz != self.col_idx.len() {
             return Err(format!(
                 "row_ptr ends at {nnz} but col_idx has {} entries",

@@ -69,10 +69,19 @@ impl<T: Copy + Default> BufPool<T> {
         buf
     }
 
-    /// [`BufPool::take`] without the zero-fill contract: contents are
-    /// unspecified (`len` elements, possibly stale). For buffers that
-    /// are fully overwritten before being read — GEMM outputs, im2col
-    /// columns — this skips one memset pass.
+    /// [`BufPool::take`] without the zero-fill contract. Pinned
+    /// contract (tests rely on each clause):
+    ///
+    /// * the returned buffer has **exactly `len` elements** — a longer
+    ///   recycled buffer is truncated, a shorter one is extended;
+    /// * element **values are unspecified**: any prefix recycled from
+    ///   a previous `put` keeps whatever values it last held, and
+    ///   callers must fully overwrite the buffer before reading it
+    ///   (GEMM outputs, im2col columns — this skips one memset pass);
+    /// * "uninit" refers to *values only*, never memory validity:
+    ///   this is safe code (`Vec::resize`), every element is an
+    ///   initialized `T`, and newly grown tails are `T::default()` —
+    ///   reading a stale value is a logic bug, not UB.
     pub fn take_uninit(&mut self, len: usize) -> Vec<T> {
         let mut buf = self.free.pop().unwrap_or_default();
         if buf.capacity() < len {
@@ -132,5 +141,33 @@ mod tests {
         let b = pool.take_uninit(8);
         assert_eq!(b.len(), 8);
         assert_eq!(pool.grow_count(), grows, "capacity 8 was retained");
+    }
+
+    /// Pins the documented `take_uninit` value semantics: a recycled
+    /// prefix keeps its stale values (no implicit clear — callers own
+    /// the overwrite), a shrinking take truncates to exactly `len`,
+    /// and a growing take extends the tail with `T::default()`.
+    #[test]
+    fn take_uninit_recycles_stale_values_without_clearing() {
+        let mut pool: BufPool<f32> = BufPool::new();
+        let mut b = pool.take_uninit(4);
+        b.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        pool.put(b);
+        // same-size retake: the whole stale buffer comes back verbatim
+        let b = pool.take_uninit(4);
+        assert_eq!(b, vec![1.0, 2.0, 3.0, 4.0], "prefix must stay stale");
+        pool.put(b);
+        // shrinking retake: exact len, stale prefix
+        let b = pool.take_uninit(2);
+        assert_eq!(b, vec![1.0, 2.0]);
+        pool.put(b);
+        // growing retake within capacity: stale prefix up to the last
+        // *length*, default-filled tail, and no growth event
+        let grows = pool.grow_count();
+        let b = pool.take_uninit(4);
+        assert_eq!(b.len(), 4);
+        assert_eq!(&b[..2], &[1.0, 2.0]);
+        assert_eq!(&b[2..], &[0.0, 0.0], "grown tail must be default");
+        assert_eq!(pool.grow_count(), grows, "capacity 4 was retained");
     }
 }

@@ -9,6 +9,11 @@
 //! across repeated calls, across fresh dataset instances, and
 //! regardless of what other batches were drawn in between (no hidden
 //! iteration state).
+// Crate-root style allowances, matching rust/src/lib.rs (these used to
+// be -A flags on the Makefile's clippy invocation).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
 
 use admm_nn::data::{Batch, Dataset, Split, SyntheticDigits, SyntheticImages};
 

@@ -10,6 +10,11 @@
 //!   order is a fixed function of the inner dimension alone, never of
 //!   how rows were split across lanes (the serving engine's
 //!   batched-equals-serial contract rides on this).
+// Crate-root style allowances, matching rust/src/lib.rs (these used to
+// be -A flags on the Makefile's clippy invocation).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
 
 use admm_nn::tensor::{self, Epilogue, KC, MC, MR, NC, NR};
 use admm_nn::util::{Rng, ThreadPool};

@@ -20,6 +20,11 @@
 //! * the fused dual update reproduces the composed tensor ops exactly.
 //!
 //! Pure host code — no PJRT artifacts required.
+// Crate-root style allowances, matching rust/src/lib.rs (these used to
+// be -A flags on the Makefile's clippy invocation).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
 
 use admm_nn::coordinator::Constraint;
 use admm_nn::projection::{self, ProjectionWorkspace};

@@ -8,6 +8,11 @@
 //! masks freeze, ρ pulls toward Z, eval/infer agree, init is
 //! deterministic) on the pure-Rust backend, so the runtime seam is
 //! exercised on every checkout — including this offline one.
+// Crate-root style allowances, matching rust/src/lib.rs (these used to
+// be -A flags on the Makefile's clippy invocation).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
 
 use admm_nn::backend::native::{model_entry, NativeBackend};
 use admm_nn::backend::{Hyper, ModelExec, TrainState};

@@ -8,6 +8,11 @@
 //! models through one engine, at pool widths {1, 2, 4, 8}, must each
 //! receive logits **bit-identical** to a serial single-request
 //! `SparseInfer` call on a width-1 pool.
+// Crate-root style allowances, matching rust/src/lib.rs (these used to
+// be -A flags on the Makefile's clippy invocation).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -318,6 +323,35 @@ fn backend_panic_fails_the_batch_but_not_the_engine() {
     assert_eq!(ok, vec![2.0, 0.0]);
     let s = engine.stats("panic-on-odd").unwrap();
     assert_eq!((s.completed, s.failed), (1, 1));
+    // and every stats surface still answers — the leaf locks recover
+    // from poisoning instead of cascading the panic into monitoring
+    let all = engine.stats_all();
+    assert_eq!(all.len(), 1);
+    assert_eq!((all[0].1.completed, all[0].1.failed), (1, 1));
+}
+
+/// `Instant + Duration` panics on overflow, and `submit` used to do
+/// that addition while holding the queue lock — one absurd deadline
+/// would poison the queue and brick the whole engine. The addition is
+/// now checked: a deadline past the representable horizon means "no
+/// deadline", and the engine keeps serving everyone.
+#[test]
+fn absurd_deadline_does_not_poison_the_queue() {
+    let engine = slow_engine(0, 16);
+    let r = engine
+        .infer_sync(
+            InferRequest::new("slow-echo", vec![1.0; 4])
+                .with_deadline(Duration::MAX),
+        )
+        .unwrap();
+    assert_eq!(r, vec![1.0; 4]);
+    // the queue lock is healthy: later plain requests still flow
+    let r = engine
+        .infer_sync(InferRequest::new("slow-echo", vec![2.0; 4]))
+        .unwrap();
+    assert_eq!(r, vec![2.0; 4]);
+    let s = engine.stats("slow-echo").unwrap();
+    assert_eq!((s.completed, s.expired), (2, 0));
 }
 
 #[test]

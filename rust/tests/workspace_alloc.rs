@@ -18,6 +18,11 @@
 //! process-global counter, and unrelated tests running GEMMs in
 //! parallel inside the same binary would race the snapshots. As its own
 //! integration-test binary it owns the process.
+// Crate-root style allowances, matching rust/src/lib.rs (these used to
+// be -A flags on the Makefile's clippy invocation).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
 
 use admm_nn::backend::native::NativeBackend;
 use admm_nn::backend::sparse_infer::{prune_quantize_package, SparseInfer};
