@@ -15,6 +15,9 @@
 #   make bench-gemm   — just the packed-GEMM cases (proxy-shape
 #                       kernels, fused epilogue, serving throughput at
 #                       queue depth 64), written to BENCH_gemm.json
+#   make bench-store  — just the versioned-model-store cases (publish,
+#                       eager vs lazy open, hot-swap latency under a
+#                       deep queue), written to BENCH_store.json
 #   make bench-report — run the benchmarks, then diff the fresh
 #                       BENCH_hot_paths.json against the committed
 #                       BENCH_baseline.json, printing per-path speedup
@@ -34,7 +37,7 @@
 #   make tsan         — run the serving/pool tests under ThreadSanitizer
 #                       (nightly-only; skips with a note when absent)
 
-.PHONY: verify lint miri tsan bench bench-serving bench-gemm bench-report
+.PHONY: verify lint miri tsan bench bench-serving bench-gemm bench-store bench-report
 
 # Style allowances now live as crate-level #![allow] attributes in each
 # crate root (rust/src/lib.rs documents why); everything else is -D.
@@ -82,6 +85,9 @@ bench-serving:
 
 bench-gemm:
 	BENCH_JSON_DIR=$(CURDIR) BENCH_ONLY=gemm cargo bench --bench hot_paths -- --json
+
+bench-store:
+	BENCH_JSON_DIR=$(CURDIR) BENCH_ONLY=store cargo bench --bench hot_paths -- --json
 
 bench-report: bench
 	@cp BENCH_baseline.json .bench_baseline.before 2>/dev/null || true

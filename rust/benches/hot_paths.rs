@@ -111,6 +111,14 @@ fn main() {
         suite.finish();
         return;
     }
+    // `make bench-store` runs just the model-store section into its own
+    // BENCH_store.json (publish, eager vs lazy open, hot-swap latency).
+    if std::env::var("BENCH_ONLY").ok().as_deref() == Some("store") {
+        let mut suite = BenchSuite::new("store");
+        store_benches(&mut suite);
+        suite.finish();
+        return;
+    }
     let mut suite = BenchSuite::new("hot_paths");
     println!("== L3 hot paths ==");
     let mut rng = Rng::new(42);
@@ -433,6 +441,7 @@ fn main() {
 
     gemm_benches(&mut suite);
     serving_benches(&mut suite);
+    store_benches(&mut suite);
 
     suite.finish();
 }
@@ -667,5 +676,112 @@ fn serving_benches(suite: &mut BenchSuite) {
     }
     for (name, stats) in batched.stats_all() {
         println!("    batched engine [{name}]: {}", stats.summary());
+    }
+}
+
+/// Versioned model store: publish cost (encode + atomic write), eager
+/// vs lazy open (the lazy header parse is what serving pays before it
+/// decides which layers to decode), and hot-swap control-plane latency
+/// while ~64+ requests sit queued against the swapped model — the
+/// zero-downtime claim priced, not just tested.
+fn store_benches(suite: &mut BenchSuite) {
+    use admm_nn::backend::native::NativeBackend;
+    use admm_nn::backend::sparse_infer::prune_quantize_package;
+    use admm_nn::backend::TrainState;
+    use admm_nn::serving::{
+        EngineConfig, InferBackend, InferRequest, ModelRegistry, ServingEngine,
+    };
+    use admm_nn::store::ModelStore;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    println!("\n== versioned model store ==");
+    let nb = NativeBackend::open("mlp").expect("native backend");
+    let mut st = TrainState::init(nb.entry(), 13);
+    let model = prune_quantize_package(nb.entry(), "mlp", &mut st, 0.05, 4, 8);
+
+    let root = std::env::temp_dir()
+        .join(format!("admm_nn_store_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let store = ModelStore::open_root(&root).expect("store root");
+    let receipt = store.publish(&model).expect("seed publish");
+    println!(
+        "    container: {} bytes, {} of {} sections compressed \
+         (payload {} -> {})",
+        receipt.file_bytes,
+        receipt.stats.compressed_sections,
+        receipt.stats.total_sections,
+        receipt.stats.raw_payload_bytes,
+        receipt.stats.stored_payload_bytes,
+    );
+
+    suite.bench("store publish (encode + atomic write)", 2, 10, || {
+        black_box(store.publish(&model).expect("publish").version);
+    });
+    let eager = suite.bench("store open eager (full decode)", 2, 10, || {
+        let sv = store.open("mlp", Some(1)).expect("open");
+        black_box(sv.to_model().expect("decode").layers.len());
+    });
+    let lazy = suite.bench("store open lazy (header only)", 2, 10, || {
+        let sv = store.open("mlp", Some(1)).expect("open");
+        black_box(sv.lazy().layers.len());
+    });
+    suite.speedup("store lazy vs eager open", &eager, &lazy);
+    let _ = std::fs::remove_dir_all(&root);
+
+    // hot-swap latency with a deep queue: a slow backend keeps ~64+
+    // requests outstanding for the whole measurement, so every swap and
+    // rollback pays the real cost — COW snapshot + drain accounting
+    // under a contended queue lock
+    struct Pinned {
+        dim: usize,
+        delay: Duration,
+    }
+    impl InferBackend for Pinned {
+        fn name(&self) -> &str {
+            "pinned"
+        }
+        fn input_dim(&self) -> usize {
+            self.dim
+        }
+        fn n_classes(&self) -> usize {
+            self.dim
+        }
+        fn infer_batch(
+            &self,
+            _pool: &ThreadPool,
+            x: &[f32],
+            _bsz: usize,
+        ) -> admm_nn::Result<Vec<f32>> {
+            std::thread::sleep(self.delay);
+            Ok(x.to_vec())
+        }
+    }
+    let mk = || -> Arc<dyn InferBackend> {
+        Arc::new(Pinned { dim: 16, delay: Duration::from_millis(2) })
+    };
+    let mut reg = ModelRegistry::new();
+    reg.register_versioned("pinned".into(), mk(), Some(1)).unwrap();
+    let engine = ServingEngine::new(reg, EngineConfig {
+        max_batch: 8,
+        max_wait: Duration::ZERO,
+        queue_cap: 8192,
+        pool: None,
+    })
+    .unwrap();
+    for _ in 0..2048 {
+        let _ = engine.submit(InferRequest::new("pinned", vec![0.5f32; 16]));
+    }
+    let swapped = mk();
+    suite.bench("hot swap + rollback (queue depth 64+)", 2, 10, || {
+        black_box(
+            engine
+                .swap_model("pinned", swapped.clone(), Some(2))
+                .expect("swap"),
+        );
+        black_box(engine.rollback("pinned").expect("rollback"));
+    });
+    for (name, stats) in engine.stats_all() {
+        println!("    [{name}] {}", stats.summary());
     }
 }

@@ -31,25 +31,32 @@ pub const UNSAFE_ALLOWED: &[&str] = &["util/pool.rs", "util/arena.rs"];
 pub const SPAWN_ALLOWED: &[&str] = &["util/pool.rs", "serving/engine.rs"];
 
 /// Load/decode modules that must return typed errors instead of
-/// panicking on corrupt input (rule `panic-free`): a bad checkpoint or
-/// run report is data, not a bug (PR 3's hardening, now a build gate).
+/// panicking on corrupt input (rule `panic-free`): a bad checkpoint,
+/// store container, or run report is data, not a bug (PR 3's
+/// hardening, now a build gate; the store's container/codec decode
+/// untrusted on-disk bytes and are held to the same bar).
 pub const PANIC_FREE_FILES: &[&str] = &[
     "sparsity/mod.rs",
     "quantize/mod.rs",
     "util/json.rs",
     "coordinator/checkpoint.rs",
     "report/mod.rs",
+    "store/mod.rs",
+    "store/codec.rs",
+    "store/container.rs",
 ];
 
 /// Modules with an ordered-output contract (rule `determinism`): table
-/// emission and serving batch packing must not iterate hash containers
-/// (iteration order varies per process, breaking byte-identical
-/// reports and the ticket-order batching contract).
+/// emission, serving batch packing, and store listings must not
+/// iterate hash containers (iteration order varies per process,
+/// breaking byte-identical reports, the ticket-order batching
+/// contract, and stable `list`/`gc` version ordering).
 pub const DETERMINISM_FILES: &[&str] = &[
     "report/mod.rs",
     "serving/engine.rs",
     "serving/mod.rs",
     "metrics/mod.rs",
+    "store/mod.rs",
 ];
 
 /// Functions with a zero-alloc steady-state contract (rule

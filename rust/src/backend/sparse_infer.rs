@@ -308,15 +308,6 @@ impl SparseInfer {
         Ok(())
     }
 
-    /// Batch-`b` inference from the stored representation on the global
-    /// pool. Thin legacy shim — go through
-    /// [`crate::serving::ServingEngine`] (shared models, micro-batching,
-    /// backpressure) or [`SparseInfer::infer_with`] instead.
-    #[deprecated(note = "serve through serving::ServingEngine, or use infer_with")]
-    pub fn infer(&self, x: &[f32], bsz: usize) -> crate::Result<Vec<f32>> {
-        self.infer_with(ThreadPool::global(), x, bsz)
-    }
-
     /// Batch-`b` inference from the stored representation, fanning row
     /// blocks across `pool`; returns flat logits (b × n_classes,
     /// row-major). Each row of the result is bit-identical to a
@@ -552,11 +543,6 @@ mod tests {
         let pool = ThreadPool::global();
         assert!(sp.infer_with(pool, &[0.0; 7], 1).is_err());
         assert!(sp.infer_with(pool, &[], 0).is_err());
-        // the deprecated shim still routes through the same gate
-        #[allow(deprecated)]
-        {
-            assert!(sp.infer(&[], 0).is_err());
-        }
     }
 
     /// Bit-identical batching: each row of a batched sparse pass equals

@@ -8,7 +8,14 @@
 //! Table-5/6 accounting for the stored model.
 //!
 //! The on-disk format is a versioned little-endian binary; no external
-//! serialization dependency so the format stays auditable.
+//! serialization dependency so the format stays auditable. Since the
+//! versioned store landed, [`CompressedModel::save`] writes the
+//! container-v2 format ([`crate::store::container`]: CRC-gated header,
+//! per-section integrity words, opportunistic payload compression,
+//! lazy per-layer decode) and [`CompressedModel::load`] dispatches on
+//! the magic word — v1 flat checkpoints written by older builds load
+//! forever via the original parser, which also remains the byte-level
+//! codec the container shares (`put_*`/`get_*` budget-checked helpers).
 
 use std::io::Read;
 use std::path::Path;
@@ -20,7 +27,9 @@ use crate::runtime::ModelEntry;
 use crate::sparsity::{LayerSize, RelIndex, SizeReport};
 use crate::tensor::Tensor;
 
-const MAGIC: u32 = 0xAD44_0001; // "ADMM" v1
+/// "ADMM" v1 — the legacy flat checkpoint (v2 lives in
+/// [`crate::store::container`]).
+const LEGACY_MAGIC: u32 = 0xAD44_0001;
 
 /// One compressed weight tensor.
 #[derive(Clone, Debug)]
@@ -153,9 +162,22 @@ impl CompressedModel {
 
     // -- binary io ---------------------------------------------------------
 
+    /// Save in the container-v2 format (CRC-gated, per-layer
+    /// compression policy, lazily decodable). Old builds cannot read
+    /// v2; for that interchange case use [`Self::to_legacy_bytes`].
     pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        let bytes = crate::store::container::encode_model(self)?;
+        std::fs::write(path.as_ref(), bytes)
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+
+    /// Serialize in the legacy v1 flat format. Kept (and tested)
+    /// because fleets hold v1 artifacts: [`Self::load`] must read them
+    /// forever, and the sweep tests prove both formats reject corrupt
+    /// bytes identically.
+    pub fn to_legacy_bytes(&self) -> crate::Result<Vec<u8>> {
         let mut w = Vec::new();
-        put_u32(&mut w, MAGIC);
+        put_u32(&mut w, LEGACY_MAGIC);
         put_str(&mut w, &self.model_name);
         put_count(&mut w, self.layers.len(), "layer count")?;
         for l in &self.layers {
@@ -183,23 +205,40 @@ impl CompressedModel {
             }
         }
         put_f32(&mut w, self.accuracy as f32);
-        std::fs::write(path.as_ref(), w)
-            .with_context(|| format!("writing {}", path.as_ref().display()))
+        Ok(w)
     }
 
-    /// Load and **validate** a checkpoint. Every count is checked against
-    /// the remaining byte budget before allocating, and each layer's
-    /// entry stream must pass [`RelIndex::validate`] (gap within the
-    /// index width, codes within ±2^(bits−1), decode cursor inside
-    /// `dense_len`) — the load-side twin of `put_count`'s save-side
-    /// hardening. A corrupt or truncated file yields a
+    /// Load and **validate** a checkpoint, dispatching on the magic
+    /// word: container-v2 files go through
+    /// [`crate::store::container::decode_model`] (header CRC, per-
+    /// section CRCs, bounded decompression), legacy v1 files through
+    /// the original parser below. In both, every count is checked
+    /// against the remaining byte budget before allocating, and each
+    /// layer's entry stream must pass [`RelIndex::validate`] (gap
+    /// within the index width, codes within ±2^(bits−1), decode cursor
+    /// inside `dense_len`) — the load-side twin of `put_count`'s
+    /// save-side hardening. A corrupt or truncated file yields a
     /// checkpoint-corrupt `Err`; it can never panic downstream in
     /// `RelIndex::decode_into`.
     pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
         let data = std::fs::read(path.as_ref())
             .with_context(|| format!("reading {}", path.as_ref().display()))?;
-        let mut r = &data[..];
-        if get_u32(&mut r)? != MAGIC {
+        let magic = {
+            let mut r = &data[..];
+            get_u32(&mut r)?
+        };
+        match magic {
+            LEGACY_MAGIC => Self::from_legacy_bytes(&data),
+            crate::store::container::STORE_MAGIC => {
+                crate::store::container::decode_model(data)
+            }
+            _ => Err(anyhow!("bad magic (not a CompressedModel file)")),
+        }
+    }
+
+    fn from_legacy_bytes(data: &[u8]) -> crate::Result<Self> {
+        let mut r = data;
+        if get_u32(&mut r)? != LEGACY_MAGIC {
             return Err(anyhow!("bad magic (not a CompressedModel file)"));
         }
         let model_name = get_str(&mut r)?;
@@ -262,34 +301,34 @@ impl CompressedModel {
 
 // -- tiny LE codec ----------------------------------------------------------
 
-fn put_u32(w: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(w: &mut Vec<u8>, v: u32) {
     w.extend_from_slice(&v.to_le_bytes());
 }
 
 /// Checked u32 count/dim field: a value above `u32::MAX` (a >4G-element
 /// layer) used to truncate silently via `as u32`, writing a checkpoint
 /// that decodes to garbage — refuse with an error instead.
-fn put_count(w: &mut Vec<u8>, v: usize, what: &str) -> crate::Result<()> {
+pub(crate) fn put_count(w: &mut Vec<u8>, v: usize, what: &str) -> crate::Result<()> {
     let v = u32::try_from(v)
         .map_err(|_| anyhow!("cannot save checkpoint: {what} {v} exceeds the u32 field"))?;
     put_u32(w, v);
     Ok(())
 }
 
-fn put_f32(w: &mut Vec<u8>, v: f32) {
+pub(crate) fn put_f32(w: &mut Vec<u8>, v: f32) {
     w.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_str(w: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(w: &mut Vec<u8>, s: &str) {
     put_u32(w, s.len() as u32);
     w.extend_from_slice(s.as_bytes());
 }
 
-fn corrupt(layer: &str, why: String) -> anyhow::Error {
+pub(crate) fn corrupt(layer: &str, why: String) -> anyhow::Error {
     anyhow!("corrupt checkpoint: layer {layer}: {why}")
 }
 
-fn get_u32(r: &mut &[u8]) -> crate::Result<u32> {
+pub(crate) fn get_u32(r: &mut &[u8]) -> crate::Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b).map_err(|_| anyhow!("truncated checkpoint"))?;
     Ok(u32::from_le_bytes(b))
@@ -300,7 +339,7 @@ fn get_u32(r: &mut &[u8]) -> crate::Result<u32> {
 /// corrupt count used to drive a multi-GB `Vec::with_capacity` before
 /// the truncation was even noticed; now any pre-allocation is bounded
 /// by a small multiple of the actual file size.
-fn get_count(r: &mut &[u8], elem_bytes: usize, what: &str) -> crate::Result<usize> {
+pub(crate) fn get_count(r: &mut &[u8], elem_bytes: usize, what: &str) -> crate::Result<usize> {
     let n = get_u32(r)? as usize;
     if n.saturating_mul(elem_bytes) > r.len() {
         return Err(anyhow!(
@@ -312,13 +351,13 @@ fn get_count(r: &mut &[u8], elem_bytes: usize, what: &str) -> crate::Result<usiz
     Ok(n)
 }
 
-fn get_f32(r: &mut &[u8]) -> crate::Result<f32> {
+pub(crate) fn get_f32(r: &mut &[u8]) -> crate::Result<f32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b).map_err(|_| anyhow!("truncated checkpoint"))?;
     Ok(f32::from_le_bytes(b))
 }
 
-fn get_str(r: &mut &[u8]) -> crate::Result<String> {
+pub(crate) fn get_str(r: &mut &[u8]) -> crate::Result<String> {
     let n = get_count(r, 1, "string length")?;
     let mut b = vec![0u8; n];
     r.read_exact(&mut b).map_err(|_| anyhow!("truncated checkpoint"))?;
@@ -440,6 +479,32 @@ mod tests {
         let err = m.save(&path).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("shape dim"), "unexpected error: {msg}");
+    }
+
+    #[test]
+    fn legacy_v1_bytes_still_load() {
+        // Fleets hold v1 artifacts: the magic-dispatched loader must
+        // read them forever, bit-exactly, and stay truncation-hardened.
+        let m = sample_model();
+        let dir = std::env::temp_dir().join("admm_nn_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy.bin");
+        let bytes = m.to_legacy_bytes().unwrap();
+        std::fs::write(&path, &bytes).unwrap();
+        let m2 = CompressedModel::load(&path).unwrap();
+        assert_eq!(m2.model_name, m.model_name);
+        assert_eq!(m2.layers.len(), m.layers.len());
+        for (a, b) in m.layers.iter().zip(&m2.layers) {
+            assert_eq!(a.to_tensor().data(), b.to_tensor().data());
+        }
+        assert_eq!(m2.biases[0].1.data(), m.biases[0].1.data());
+        for len in 0..bytes.len() {
+            std::fs::write(&path, &bytes[..len]).unwrap();
+            assert!(
+                CompressedModel::load(&path).is_err(),
+                "legacy truncation at {len} parsed"
+            );
+        }
     }
 
     #[test]

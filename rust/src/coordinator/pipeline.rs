@@ -14,7 +14,10 @@
 //!    before the final snap), then hard quantization;
 //! 6. package as a [`CompressedModel`] and re-validate accuracy through
 //!    the *stored* representation (codes + indices), not the in-memory
-//!    weights.
+//!    weights — then, when [`PipelineConfig::store_root`] is set,
+//!    publish the validated artifact as the next version in a
+//!    [`crate::store::ModelStore`] (the rollout handoff: progressive
+//!    compression rounds each publish a version, serving swaps to it).
 
 use crate::backend::ModelExec;
 use crate::coordinator::admm::{AdmmConfig, AdmmRunner, Constraint};
@@ -48,6 +51,9 @@ pub struct PipelineConfig {
     pub index_bits: u32,
     pub eval_batches: u64,
     pub verbose: bool,
+    /// When set, the finalized (validated) model is published as the
+    /// next version in the [`crate::store::ModelStore`] rooted here.
+    pub store_root: Option<std::path::PathBuf>,
 }
 
 impl Default for PipelineConfig {
@@ -64,6 +70,7 @@ impl Default for PipelineConfig {
             index_bits: 0,
             eval_batches: 8,
             verbose: false,
+            store_root: None,
         }
     }
 }
@@ -80,6 +87,9 @@ pub struct CompressReport {
     pub quant: Vec<QuantConfig>,
     pub overall_prune_ratio: f64,
     pub model: CompressedModel,
+    /// Store receipt when [`PipelineConfig::store_root`] was set: the
+    /// version id serving should swap to, plus size accounting.
+    pub published: Option<crate::store::PublishReceipt>,
 }
 
 /// Run the joint pipeline on an already-(pre)trained state, over any
@@ -236,6 +246,27 @@ pub fn run_pipeline(
         eprintln!("[pipeline] stored-model accuracy {final_acc:.4}");
     }
 
+    // Publish only *after* validation, so the store never holds a
+    // version whose recorded accuracy wasn't measured from the stored
+    // representation itself.
+    let published = match &cfg.store_root {
+        Some(root) => {
+            let receipt = crate::store::ModelStore::open_root(root)?.publish(&model)?;
+            if cfg.verbose {
+                eprintln!(
+                    "[pipeline] published {} v{} ({} bytes, {} of {} sections compressed)",
+                    receipt.name,
+                    receipt.version,
+                    receipt.file_bytes,
+                    receipt.stats.compressed_sections,
+                    receipt.stats.total_sections,
+                );
+            }
+            Some(receipt)
+        }
+        None => None,
+    };
+
     let total: usize = layer_keep.iter().map(|(_, t, _)| t).sum();
     let kept: usize = layer_keep.iter().map(|(_, _, k)| k).sum();
     Ok(CompressReport {
@@ -246,6 +277,7 @@ pub fn run_pipeline(
         quant,
         overall_prune_ratio: total as f64 / kept.max(1) as f64,
         model,
+        published,
     })
 }
 

@@ -24,15 +24,27 @@
 //!   stored [`coordinator::CompressedModel`] representation (RelIndex →
 //!   CSR, levels materialized on the fly).
 //! * [`serving`] — the unified serving surface over both inference
-//!   paths: a [`serving::ServingEngine`] owns a
-//!   [`serving::ModelRegistry`] of named [`serving::InferBackend`]s
-//!   (each compressed model decoded once into shared immutable CSR
-//!   behind an `Arc`), takes [`serving::InferRequest`]s via
-//!   `submit`/`poll`/`infer_sync`, micro-batches same-model requests
-//!   into one pass on the thread pool (deterministic ticket→slot order
-//!   → per-request logits bit-identical to serial calls), applies
-//!   bounded-queue backpressure and deadlines, and surfaces per-model
-//!   [`metrics::ServingCounters`].
+//!   paths: a [`serving::ServingEngine`] owns an epoch-swapped `Arc`
+//!   snapshot of named [`serving::InferBackend`]s (seeded from a
+//!   [`serving::ModelRegistry`], each compressed model decoded once
+//!   into shared immutable CSR behind an `Arc`), takes
+//!   [`serving::InferRequest`]s via `submit`/`poll`/`infer_sync`,
+//!   micro-batches same-model requests into one pass on the thread
+//!   pool (deterministic ticket→slot order → per-request logits
+//!   bit-identical to serial calls), applies bounded-queue
+//!   backpressure and deadlines, surfaces per-model
+//!   [`metrics::ServingCounters`], and hot-swaps model versions with
+//!   zero downtime: `swap_model`/`rollback` publish a new epoch
+//!   atomically while admitted requests finish on the epoch they were
+//!   admitted under (never coalescing two epochs into one batch).
+//! * [`store`] — the versioned model store behind rollout:
+//!   [`store::ModelStore`] (`publish`/`open`/`list`/`gc`, monotonic
+//!   per-name version ids, atomic tmp+rename publish, gc that never
+//!   lets a corrupt new version evict a healthy old one) over the
+//!   CRC-gated container v2 ([`store::container`]: header + per-
+//!   section integrity words, opportunistic LZSS payload compression
+//!   behind a threshold-and-savings policy, lazy per-layer decode
+//!   hardened like the checkpoint loader).
 //! * [`coordinator`] — the ADMM engine (W/Z/U state, subproblem scheduling,
 //!   dual updates), the joint prune→quantize pipeline (paper Fig. 2), and
 //!   the hardware-aware compression algorithm (paper Fig. 5) — all over
@@ -110,6 +122,7 @@ pub mod report;
 pub mod runtime;
 pub mod serving;
 pub mod sparsity;
+pub mod store;
 pub mod tensor;
 pub mod util;
 

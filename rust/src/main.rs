@@ -10,6 +10,13 @@
 //!                   packaged compressed model (sparse + dense
 //!                   registered side by side) and measure batched vs
 //!                   single-request dispatch throughput.
+//! * `store`       — the versioned model store (`store::ModelStore`):
+//!                   `publish` a compressed-model file as the next
+//!                   version, `list` names/versions, `gc` old versions
+//!                   (healthy-retention policy), and `serve` a stored
+//!                   version — optionally hot-swapping to a second
+//!                   version mid-traffic to demonstrate the
+//!                   zero-downtime epoch swap.
 //!
 //! Compute runs on an execution backend selected by `--backend`:
 //! `native` (pure-Rust host training/inference, no artifacts needed),
@@ -48,6 +55,11 @@ COMMANDS:
   report      [--table N] [--fig 4] [--onchip] [--all]
   serve-bench --model M [--keep F] [--bits N] [--requests N] [--depth N]
               [--max-batch N]
+  store publish --store DIR --file PATH
+  store list    --store DIR [--model M]
+  store gc      --store DIR --model M [--keep N]
+  store serve   --store DIR --model M [--version V] [--swap-to V]
+                [--requests N]
 
 Models: mlp, lenet5, alexnet_proxy, vgg_proxy, resnet_proxy
 ";
@@ -246,6 +258,54 @@ fn run() -> admm_nn::Result<()> {
             args.finish()?;
             serve_bench(&model, keep, bits, requests, depth, max_batch)?;
         }
+        "store" => {
+            let sub = match args.next_positional() {
+                Some(s) => s,
+                None => {
+                    eprintln!("store needs a subcommand\n\n{USAGE}");
+                    std::process::exit(2);
+                }
+            };
+            let store_dir =
+                args.opt_str("store").unwrap_or_else(|| "model-store".into());
+            match sub.as_str() {
+                "publish" => {
+                    let file = args.opt_str("file").ok_or_else(|| {
+                        anyhow::anyhow!("store publish needs --file PATH")
+                    })?;
+                    args.finish()?;
+                    store_publish(&store_dir, &file)?;
+                }
+                "list" => {
+                    let model = args.opt_str("model");
+                    args.finish()?;
+                    store_list(&store_dir, model.as_deref())?;
+                }
+                "gc" => {
+                    let model = args.opt_str("model").ok_or_else(|| {
+                        anyhow::anyhow!("store gc needs --model M")
+                    })?;
+                    let keep: usize = args.opt_parse("keep")?.unwrap_or(2);
+                    args.finish()?;
+                    store_gc(&store_dir, &model, keep)?;
+                }
+                "serve" => {
+                    let model = args.opt_str("model").ok_or_else(|| {
+                        anyhow::anyhow!("store serve needs --model M")
+                    })?;
+                    let version: Option<u64> = args.opt_parse("version")?;
+                    let swap_to: Option<u64> = args.opt_parse("swap-to")?;
+                    let requests: usize =
+                        args.opt_parse("requests")?.unwrap_or(64);
+                    args.finish()?;
+                    store_serve(&store_dir, &model, version, swap_to, requests)?;
+                }
+                other => {
+                    eprintln!("unknown store subcommand {other:?}\n\n{USAGE}");
+                    std::process::exit(2);
+                }
+            }
+        }
         other => {
             eprintln!("unknown command {other:?}\n\n{USAGE}");
             std::process::exit(2);
@@ -362,6 +422,138 @@ fn serve_bench(
     );
     for (name, stats) in batched.stats_all() {
         println!("  [{name}] {}", stats.summary());
+    }
+    Ok(())
+}
+
+/// `store publish`: load a compressed-model file (legacy v1 checkpoint
+/// or container v2 both load) and publish it as the next version of its
+/// model name.
+fn store_publish(store_dir: &str, file: &str) -> admm_nn::Result<()> {
+    use admm_nn::coordinator::CompressedModel;
+    use admm_nn::store::ModelStore;
+
+    let model = CompressedModel::load(file)?;
+    let receipt = ModelStore::open_root(store_dir)?.publish(&model)?;
+    println!(
+        "published {} v{} -> {} ({} bytes, {} of {} sections compressed, \
+         payload {} -> {} bytes)",
+        receipt.name,
+        receipt.version,
+        receipt.path.display(),
+        receipt.file_bytes,
+        receipt.stats.compressed_sections,
+        receipt.stats.total_sections,
+        receipt.stats.raw_payload_bytes,
+        receipt.stats.stored_payload_bytes,
+    );
+    Ok(())
+}
+
+/// `store list`: all versions of one model, or every model with its
+/// version range.
+fn store_list(store_dir: &str, model: Option<&str>) -> admm_nn::Result<()> {
+    use admm_nn::store::ModelStore;
+
+    let store = ModelStore::open_root(store_dir)?;
+    let names = match model {
+        Some(m) => vec![m.to_string()],
+        None => store.list_models()?,
+    };
+    if names.is_empty() {
+        println!("(store empty)");
+        return Ok(());
+    }
+    for name in names {
+        let versions = store.list(&name)?;
+        if versions.is_empty() {
+            println!("{name}: (no versions)");
+            continue;
+        }
+        let rendered: Vec<String> =
+            versions.iter().map(|v| format!("v{v}")).collect();
+        println!("{name}: {}", rendered.join(" "));
+    }
+    Ok(())
+}
+
+/// `store gc`: keep the newest `keep` healthy versions of `model`.
+fn store_gc(store_dir: &str, model: &str, keep: usize) -> admm_nn::Result<()> {
+    use admm_nn::store::ModelStore;
+
+    let report = ModelStore::open_root(store_dir)?.gc(model, keep)?;
+    println!(
+        "{model}: kept {:?}, removed {:?}, corrupt removed {:?}",
+        report.kept, report.removed, report.corrupt_removed
+    );
+    Ok(())
+}
+
+/// `store serve`: serve a stored version through the engine; with
+/// `--swap-to`, hot-swap to a second stored version halfway through the
+/// request stream (zero drops, epoch-pinned logits — the rollout path).
+fn store_serve(
+    store_dir: &str,
+    model: &str,
+    version: Option<u64>,
+    swap_to: Option<u64>,
+    requests: usize,
+) -> admm_nn::Result<()> {
+    use admm_nn::backend::sparse_infer::SparseInfer;
+    use admm_nn::data::{Dataset, Split};
+    use admm_nn::serving::{
+        EngineConfig, InferBackend, InferRequest, ModelRegistry, ServingEngine,
+    };
+    use admm_nn::store::ModelStore;
+    use std::sync::Arc;
+
+    let store = ModelStore::open_root(store_dir)?;
+    let stored = store.open(model, version)?;
+    let nb = NativeBackend::open(model)?;
+    let sparse: Arc<dyn InferBackend> =
+        Arc::new(SparseInfer::new(&stored.to_model()?, nb.entry())?);
+    eprintln!("serving {} v{} from {store_dir}", stored.name, stored.version);
+
+    let mut reg = ModelRegistry::new();
+    reg.register_versioned(model.to_string(), sparse, Some(stored.version))?;
+    let engine = ServingEngine::new(reg, EngineConfig::default())?;
+
+    let ds = data::for_input_shape(&nb.entry().input_shape);
+    let dim: usize = nb.entry().input_shape.iter().product();
+    let n = requests.max(1);
+    let batch = ds.batch(Split::Test, 0, n);
+    let swap_at = if swap_to.is_some() { n / 2 } else { n };
+    for i in 0..n {
+        if i == swap_at {
+            if let Some(v2) = swap_to {
+                let next = store.open(model, Some(v2))?;
+                let backend: Arc<dyn InferBackend> =
+                    Arc::new(SparseInfer::new(&next.to_model()?, nb.entry())?);
+                let epoch = engine.swap_model(model, backend, Some(v2))?;
+                eprintln!(
+                    "hot-swapped to v{v2} at request {i}/{n} (epoch {epoch})"
+                );
+            }
+        }
+        let row = batch.x[i * dim..(i + 1) * dim].to_vec();
+        engine.infer_sync(InferRequest::new(model, row))?;
+    }
+
+    if let Some(lineage) = engine.versions(model) {
+        for v in lineage {
+            let sv = v
+                .store_version
+                .map(|s| format!("store v{s}"))
+                .unwrap_or_else(|| "unversioned".into());
+            println!(
+                "  epoch {} ({sv}){}",
+                v.epoch,
+                if v.live { " [live]" } else { "" }
+            );
+        }
+    }
+    if let Some(stats) = engine.stats(model) {
+        println!("  [{model}] {}", stats.summary());
     }
     Ok(())
 }

@@ -110,6 +110,15 @@ pub struct ServingCounters {
     pub latency_s: f64,
     /// Wall-clock spent inside the backend's batched passes, seconds.
     pub infer_s: f64,
+    /// Hot swaps (`ServingEngine::swap_model`) applied to this model.
+    pub swaps: u64,
+    /// Rollbacks (`ServingEngine::rollback`) applied to this model.
+    pub rollbacks: u64,
+    /// Superseded epochs whose last admitted request has drained — at
+    /// that point the old backend's final pinned `Arc` is dropped, so
+    /// `swaps + rollbacks − epochs_retired` is the number of old
+    /// versions still finishing admitted traffic.
+    pub epochs_retired: u64,
 }
 
 impl ServingCounters {
@@ -138,8 +147,11 @@ impl ServingCounters {
     }
 
     /// One-line human-readable summary for logs and `serve-bench`.
+    /// Field order is fixed (determinism gate): swap counters append
+    /// after the throughput block, and only when any swap happened, so
+    /// swap-free engines keep the historical line byte-for-byte.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} submitted, {} completed ({} failed, {} expired) in {} \
              batches ({:.1} rows/batch); mean latency {:.1}us, backend \
              {:.0} rows/s",
@@ -151,7 +163,14 @@ impl ServingCounters {
             self.rows_per_batch(),
             self.mean_latency_s() * 1e6,
             self.rows_per_infer_s()
-        )
+        );
+        if self.swaps + self.rollbacks > 0 {
+            s.push_str(&format!(
+                "; {} swaps, {} rollbacks, {} epochs retired",
+                self.swaps, self.rollbacks, self.epochs_retired
+            ));
+        }
+        s
     }
 }
 
@@ -255,6 +274,13 @@ mod tests {
         let s = c.summary();
         assert!(s.contains("10 submitted"), "{s}");
         assert!(s.contains("8.0 rows/batch"), "{s}");
+        // swap-free counters keep the historical line unchanged
+        assert!(!s.contains("swaps"), "{s}");
+        c.swaps = 2;
+        c.rollbacks = 1;
+        c.epochs_retired = 3;
+        let s = c.summary();
+        assert!(s.contains("2 swaps, 1 rollbacks, 3 epochs retired"), "{s}");
     }
 
     #[test]

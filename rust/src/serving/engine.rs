@@ -1,13 +1,13 @@
 //! The micro-batching scheduler behind [`ServingEngine`].
 //!
 //! One background scheduler thread owns dispatch: it pops the oldest
-//! queued request, coalesces every queued request *for the same model*
-//! (in ticket order) up to [`EngineConfig::max_batch`] rows — waiting at
-//! most [`EngineConfig::max_wait`] from the oldest request's submission
-//! for the batch to fill — then runs one batched [`InferBackend`] pass
-//! and scatters the logits back to the tickets. Requests for other
-//! models keep their queue positions, so a burst for model A cannot
-//! starve a request for model B out of order.
+//! queued request, coalesces every queued request *for the same model
+//! epoch* (in ticket order) up to [`EngineConfig::max_batch`] rows —
+//! waiting at most [`EngineConfig::max_wait`] from the oldest request's
+//! submission for the batch to fill — then runs one batched
+//! [`InferBackend`] pass and scatters the logits back to the tickets.
+//! Requests for other models keep their queue positions, so a burst for
+//! model A cannot starve a request for model B out of order.
 //!
 //! Determinism: tickets are assigned under the queue lock in submission
 //! order, the batch is packed in ticket order, and backends compute
@@ -15,16 +15,32 @@
 //! single-request calls regardless of coalescing, pool width, or how
 //! submitters interleave (see `tests/serving_engine.rs`).
 //!
+//! Hot swap: the model table is an epoch-swapped immutable snapshot
+//! ([`Snapshot`] behind `Arc`). [`ServingEngine::swap_model`] /
+//! [`ServingEngine::rollback`] publish a new snapshot atomically
+//! (copy-on-write under a brief registry lock serving never takes);
+//! each admitted request pins the backend `Arc` + epoch it validated
+//! against, so in-flight and queued requests finish on their admission
+//! epoch with bit-identical logits, zero drops. The coalescing key is
+//! `(slot, epoch)` — two epochs of one model are never mixed into one
+//! batch. When the last outstanding request of a superseded epoch
+//! drains, the epoch is *retired* (counted in
+//! [`ServingCounters::epochs_retired`]) and the old backend's last
+//! pinned `Arc` drops with that batch — old snapshots are fully
+//! reclaimed after drain (asserted by `tests/serving_swap.rs` via
+//! `Weak`).
+//!
 //! Lock poisoning: the queue lock (`q`) guards the engine's core
-//! invariants (ticket accounting, pending/in-flight sets), so a panic
-//! while holding it is unrecoverable and every later `q` acquisition
-//! deliberately propagates with `expect`. The leaf locks — per-model
-//! stats and the persistent batch-packing buffer — hold plain data
-//! that is valid at every statement boundary, so those acquisitions
-//! recover from poisoning with `unwrap_or_else(|e| e.into_inner())`:
-//! a backend panic (already caught in `dispatch`) or a panicking
-//! client thread must not turn a monitoring counter into a
-//! denial-of-service on the whole engine.
+//! invariants (ticket accounting, pending/in-flight sets, epoch
+//! drain counts), so a panic while holding it is unrecoverable and
+//! every later `q` acquisition deliberately propagates with `expect`.
+//! The leaf locks — the registry snapshot cell, per-model stats, and
+//! the persistent batch-packing buffer — hold plain data that is valid
+//! at every statement boundary, so those acquisitions recover from
+//! poisoning with `unwrap_or_else(|e| e.into_inner())`: a backend
+//! panic (already caught in `dispatch`) or a panicking client thread
+//! must not turn a monitoring counter into a denial-of-service on the
+//! whole engine.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
@@ -102,13 +118,67 @@ impl Default for EngineConfig {
     }
 }
 
+/// One model's lineage entry in a [`Snapshot`]: a previous backend
+/// kept for [`ServingEngine::rollback`].
+#[derive(Clone)]
+struct PrevModel {
+    backend: Arc<dyn InferBackend>,
+    store_version: Option<u64>,
+    epoch: u64,
+}
+
+/// One served model in a [`Snapshot`]. The stats `Arc` is shared
+/// across every epoch of the slot, so counters are cumulative per
+/// model name through swaps and rollbacks.
+#[derive(Clone)]
+struct Slot {
+    name: String,
+    backend: Arc<dyn InferBackend>,
+    /// Engine epoch at which this backend became current.
+    epoch: u64,
+    /// Store version id the backend was opened from, if any.
+    store_version: Option<u64>,
+    /// The immediately superseded backend (rollback target).
+    prev: Option<PrevModel>,
+    stats: Arc<Mutex<ServingCounters>>,
+}
+
+/// Immutable model table; replaced wholesale on swap/rollback. Readers
+/// (submit, stats, versions) clone the `Arc` and never block dispatch.
+struct Snapshot {
+    /// Monotonic engine epoch — bumped by every swap or rollback.
+    epoch: u64,
+    /// Registration order; a swap replaces a slot in place, so slot
+    /// indices are stable for the engine's lifetime.
+    slots: Vec<Slot>,
+}
+
+/// One model version visible through [`ServingEngine::versions`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelVersion {
+    /// Engine epoch at which this backend became current.
+    pub epoch: u64,
+    /// Store version id it was opened from, if any.
+    pub store_version: Option<u64>,
+    /// Whether this is the currently serving backend.
+    pub live: bool,
+}
+
 struct Pending {
     ticket: u64,
-    model: usize,
+    slot: usize,
+    /// Epoch the request was admitted under — the coalescing key half
+    /// that keeps batches epoch-pure.
+    epoch: u64,
     rows: usize,
     input: Vec<f32>,
     submitted: Instant,
     deadline: Option<Instant>,
+    /// Admission-pinned backend: a swap cannot change what this
+    /// request computes, and the old epoch's `Arc` lives exactly as
+    /// long as its last admitted request.
+    backend: Arc<dyn InferBackend>,
+    stats: Arc<Mutex<ServingCounters>>,
 }
 
 #[derive(Default)]
@@ -125,6 +195,12 @@ struct QState {
     /// are evicted past the retention cap, so fire-and-forget clients
     /// cannot grow the map without bound.
     finished_order: VecDeque<u64>,
+    /// Per-slot currently-live epoch, mirrored from the snapshot under
+    /// this lock so admission and drain accounting are race-free.
+    live_epoch: Vec<u64>,
+    /// (slot, epoch, admitted-but-unfinished count). At most one entry
+    /// per live (slot, epoch) pair; tiny, scanned linearly.
+    outstanding: Vec<(usize, u64, usize)>,
     next_ticket: u64,
     shutdown: bool,
 }
@@ -133,11 +209,40 @@ impl QState {
     fn is_pending(&self, ticket: u64) -> bool {
         self.queued.contains(&ticket) || self.in_flight.contains(&ticket)
     }
+
+    fn note_admitted(&mut self, slot: usize, epoch: u64) {
+        for e in self.outstanding.iter_mut() {
+            if e.0 == slot && e.1 == epoch {
+                e.2 += 1;
+                return;
+            }
+        }
+        self.outstanding.push((slot, epoch, 1));
+    }
+
+    /// Account `n` finished requests of `(slot, epoch)`. Returns true
+    /// when that was the last outstanding request of a *superseded*
+    /// epoch — i.e. the epoch just fully drained and retires.
+    fn note_finished(&mut self, slot: usize, epoch: u64, n: usize) -> bool {
+        for i in 0..self.outstanding.len() {
+            if self.outstanding[i].0 == slot && self.outstanding[i].1 == epoch {
+                self.outstanding[i].2 = self.outstanding[i].2.saturating_sub(n);
+                if self.outstanding[i].2 == 0 {
+                    self.outstanding.swap_remove(i);
+                    return self.live_epoch.get(slot).map(|&l| l != epoch).unwrap_or(false);
+                }
+                return false;
+            }
+        }
+        false
+    }
 }
 
 struct Shared {
-    names: Vec<String>,
-    models: Vec<Arc<dyn InferBackend>>,
+    /// The epoch-swapped model table. A leaf lock held only for the
+    /// instants of cloning the `Arc` out or storing a new snapshot in —
+    /// never across validation, queueing, or dispatch.
+    reg: Mutex<Arc<Snapshot>>,
     cfg_max_batch: usize,
     cfg_max_wait: Duration,
     cfg_queue_cap: usize,
@@ -152,12 +257,16 @@ struct Shared {
     work: Condvar,
     /// Wakes `wait`/`infer_sync` callers (new results).
     done: Condvar,
-    stats: Vec<Mutex<ServingCounters>>,
 }
 
 impl Shared {
     fn pool(&self) -> &ThreadPool {
         self.pool.as_deref().unwrap_or_else(ThreadPool::global)
+    }
+
+    /// Clone the current model table out from under the leaf lock.
+    fn snapshot(&self) -> Arc<Snapshot> {
+        self.reg.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 }
 
@@ -169,28 +278,38 @@ pub struct ServingEngine {
 }
 
 impl ServingEngine {
-    /// Seal a registry into a running engine (spawns the scheduler
-    /// thread). The registry must not be empty.
+    /// Seed the engine from a registry (spawns the scheduler thread).
+    /// The registry must not be empty. Registration order fixes slot
+    /// order; later swaps replace slots in place at epoch > 0.
     pub fn new(registry: ModelRegistry, cfg: EngineConfig) -> crate::Result<Self> {
         if registry.is_empty() {
             return Err(anyhow::anyhow!("serving engine needs at least one model"));
         }
-        let (names, models) = registry.into_parts();
-        let stats = (0..models.len())
-            .map(|_| Mutex::new(ServingCounters::default()))
+        let (names, models, versions) = registry.into_parts();
+        let slots: Vec<Slot> = names
+            .into_iter()
+            .zip(models)
+            .zip(versions)
+            .map(|((name, backend), store_version)| Slot {
+                name,
+                backend,
+                epoch: 0,
+                store_version,
+                prev: None,
+                stats: Arc::new(Mutex::new(ServingCounters::default())),
+            })
             .collect();
+        let n = slots.len();
         let shared = Arc::new(Shared {
-            names,
-            models,
+            reg: Mutex::new(Arc::new(Snapshot { epoch: 0, slots })),
             cfg_max_batch: cfg.max_batch.max(1),
             cfg_max_wait: cfg.max_wait,
             cfg_queue_cap: cfg.queue_cap.max(1),
             pool: cfg.pool,
-            q: Mutex::new(QState::default()),
+            q: Mutex::new(QState { live_epoch: vec![0; n], ..QState::default() }),
             batch_x: Mutex::new(Vec::new()),
             work: Condvar::new(),
             done: Condvar::new(),
-            stats,
         });
         let sched_shared = shared.clone();
         let scheduler = std::thread::Builder::new()
@@ -200,69 +319,202 @@ impl ServingEngine {
         Ok(ServingEngine { shared, scheduler: Some(scheduler) })
     }
 
-    /// Names the sealed registry serves, in registration order.
-    pub fn model_names(&self) -> &[String] {
-        &self.shared.names
+    /// Names currently served, in registration order.
+    pub fn model_names(&self) -> Vec<String> {
+        self.shared.snapshot().slots.iter().map(|s| s.name.clone()).collect()
+    }
+
+    /// The engine's current epoch (bumped by every swap/rollback).
+    pub fn epoch(&self) -> u64 {
+        self.shared.snapshot().epoch
+    }
+
+    /// Atomically replace `name`'s backend with a new version; returns
+    /// the new engine epoch. Requests admitted before the swap finish
+    /// on the old backend (bit-identical to their admission version);
+    /// requests validated after it run on `backend`. The superseded
+    /// backend is kept as the [`Self::rollback`] target.
+    pub fn swap_model(
+        &self,
+        name: &str,
+        backend: Arc<dyn InferBackend>,
+        store_version: Option<u64>,
+    ) -> Result<u64, ServingError> {
+        self.swap_inner(name, Some((backend, store_version)))
+    }
+
+    /// Atomically re-promote `name`'s previous backend; returns the new
+    /// engine epoch (monotonic — rollback is a forward swap to the old
+    /// bits, so the epoch-pure batching contract is unchanged). The
+    /// rolled-back-from backend becomes the new rollback target, so
+    /// two rollbacks toggle.
+    pub fn rollback(&self, name: &str) -> Result<u64, ServingError> {
+        self.swap_inner(name, None)
+    }
+
+    /// `new`: `Some` = swap to that backend, `None` = rollback to prev.
+    fn swap_inner(
+        &self,
+        name: &str,
+        new: Option<(Arc<dyn InferBackend>, Option<u64>)>,
+    ) -> Result<u64, ServingError> {
+        let sh = &self.shared;
+        let is_rollback = new.is_none();
+        let (slot_idx, new_epoch, old_epoch, stats) = {
+            let mut reg = sh.reg.lock().unwrap_or_else(|e| e.into_inner());
+            let cur = reg.clone();
+            let i = cur
+                .slots
+                .iter()
+                .position(|s| s.name == name)
+                .ok_or_else(|| ServingError::UnknownModel(name.to_string()))?;
+            let old = &cur.slots[i];
+            let (backend, store_version) = match new {
+                Some(n) => n,
+                None => {
+                    let p = old
+                        .prev
+                        .as_ref()
+                        .ok_or_else(|| ServingError::NoPreviousVersion(name.to_string()))?;
+                    (p.backend.clone(), p.store_version)
+                }
+            };
+            let epoch = cur.epoch + 1;
+            let mut slots = cur.slots.clone();
+            slots[i] = Slot {
+                name: old.name.clone(),
+                backend,
+                epoch,
+                store_version,
+                prev: Some(PrevModel {
+                    backend: old.backend.clone(),
+                    store_version: old.store_version,
+                    epoch: old.epoch,
+                }),
+                stats: old.stats.clone(),
+            };
+            *reg = Arc::new(Snapshot { epoch, slots });
+            (i, epoch, old.epoch, old.stats.clone())
+        };
+        // mirror the live epoch into the queue state; if the old epoch
+        // has nothing outstanding it retires right here
+        let retired_now = {
+            let mut q = sh.q.lock().expect("serving queue poisoned");
+            q.live_epoch[slot_idx] = new_epoch;
+            !q.outstanding.iter().any(|&(s, e, _)| s == slot_idx && e == old_epoch)
+        };
+        {
+            let mut st = stats.lock().unwrap_or_else(|e| e.into_inner());
+            if is_rollback {
+                st.rollbacks += 1;
+            } else {
+                st.swaps += 1;
+            }
+            if retired_now {
+                st.epochs_retired += 1;
+            }
+        }
+        Ok(new_epoch)
+    }
+
+    /// Version lineage of `name`, current first: the live backend, then
+    /// the rollback target if one exists. `None` for unknown models.
+    pub fn versions(&self, name: &str) -> Option<Vec<ModelVersion>> {
+        let snap = self.shared.snapshot();
+        let s = snap.slots.iter().find(|s| s.name == name)?;
+        let mut out = vec![ModelVersion {
+            epoch: s.epoch,
+            store_version: s.store_version,
+            live: true,
+        }];
+        if let Some(p) = &s.prev {
+            out.push(ModelVersion {
+                epoch: p.epoch,
+                store_version: p.store_version,
+                live: false,
+            });
+        }
+        Some(out)
     }
 
     /// Validate and enqueue a request; returns its ticket. Typed
     /// failures: unknown model, empty/mis-sized input, full queue
-    /// (backpressure), engine shut down.
+    /// (backpressure), engine shut down. Admission pins the model
+    /// epoch: the logits this ticket redeems are computed by the
+    /// backend that was live at queue insertion, even across swaps.
     pub fn submit(&self, req: InferRequest) -> Result<Ticket, ServingError> {
         let sh = &self.shared;
-        let model = sh
-            .names
-            .iter()
-            .position(|n| *n == req.model)
-            .ok_or_else(|| ServingError::UnknownModel(req.model.clone()))?;
-        let dim = sh.models[model].input_dim();
-        if req.input.is_empty() {
-            return Err(ServingError::EmptyBatch);
-        }
-        if dim == 0 || req.input.len() % dim != 0 {
-            // report the next whole multiple of the input dim — the
-            // smallest buffer that would actually be accepted
-            let dim = dim.max(1);
-            return Err(ServingError::InputSizeMismatch {
-                model: req.model.clone(),
-                got: req.input.len(),
-                want: ((req.input.len() + dim - 1) / dim) * dim,
-            });
-        }
-        let rows = req.input.len() / dim;
-        let now = Instant::now();
-        let ticket = {
-            let mut q = sh.q.lock().expect("serving queue poisoned");
-            if q.shutdown {
-                return Err(ServingError::ShutDown);
+        let input = req.input;
+        let deadline = req.deadline;
+        loop {
+            let snap = sh.snapshot();
+            let slot = snap
+                .slots
+                .iter()
+                .position(|s| s.name == req.model)
+                .ok_or_else(|| ServingError::UnknownModel(req.model.clone()))?;
+            let s = &snap.slots[slot];
+            let dim = s.backend.input_dim();
+            if input.is_empty() {
+                return Err(ServingError::EmptyBatch);
             }
-            if q.queue.len() >= sh.cfg_queue_cap {
-                return Err(ServingError::QueueFull { cap: sh.cfg_queue_cap });
+            if dim == 0 || input.len() % dim != 0 {
+                // report the next whole multiple of the input dim — the
+                // smallest buffer that would actually be accepted
+                let dim = dim.max(1);
+                return Err(ServingError::InputSizeMismatch {
+                    model: req.model.clone(),
+                    got: input.len(),
+                    want: ((input.len() + dim - 1) / dim) * dim,
+                });
             }
-            let ticket = q.next_ticket;
-            q.next_ticket += 1;
-            q.queue.push_back(Pending {
-                ticket,
-                model,
-                rows,
-                input: req.input,
-                submitted: now,
-                // checked: `now + d` panics on overflow for absurd
-                // Durations, and a panic here — under the queue lock —
-                // would poison `q` and kill the whole engine; a
-                // deadline past the representable horizon means none
-                deadline: req.deadline.and_then(|d| now.checked_add(d)),
-            });
-            q.queued.insert(ticket);
-            // counted while the queue lock is held so a stats snapshot
-            // can never observe completed > submitted (the scheduler
-            // cannot finish this request before the lock drops)
-            // lint:allow(lock-hygiene) fixed order q -> stats; stats is a leaf lock
-            sh.stats[model].lock().unwrap_or_else(|e| e.into_inner()).submitted += 1;
-            ticket
-        };
-        sh.work.notify_one();
-        Ok(Ticket(ticket))
+            let rows = input.len() / dim;
+            let now = Instant::now();
+            {
+                let mut q = sh.q.lock().expect("serving queue poisoned");
+                if q.shutdown {
+                    return Err(ServingError::ShutDown);
+                }
+                if q.live_epoch[slot] != s.epoch {
+                    // a swap won the race between snapshot read and
+                    // admission — re-validate against the new backend
+                    // so every admitted request carries the epoch that
+                    // was live at insertion (keeps drain accounting
+                    // exact and per-thread results monotonic in epoch)
+                    continue;
+                }
+                if q.queue.len() >= sh.cfg_queue_cap {
+                    return Err(ServingError::QueueFull { cap: sh.cfg_queue_cap });
+                }
+                let ticket = q.next_ticket;
+                q.next_ticket += 1;
+                q.queue.push_back(Pending {
+                    ticket,
+                    slot,
+                    epoch: s.epoch,
+                    rows,
+                    input,
+                    submitted: now,
+                    // checked: `now + d` panics on overflow for absurd
+                    // Durations, and a panic here — under the queue lock —
+                    // would poison `q` and kill the whole engine; a
+                    // deadline past the representable horizon means none
+                    deadline: deadline.and_then(|d| now.checked_add(d)),
+                    backend: s.backend.clone(),
+                    stats: s.stats.clone(),
+                });
+                q.queued.insert(ticket);
+                q.note_admitted(slot, s.epoch);
+                // counted while the queue lock is held so a stats snapshot
+                // can never observe completed > submitted (the scheduler
+                // cannot finish this request before the lock drops)
+                // lint:allow(lock-hygiene) fixed order q -> stats; stats is a leaf lock
+                s.stats.lock().unwrap_or_else(|e| e.into_inner()).submitted += 1;
+                drop(q);
+                sh.work.notify_one();
+                return Ok(Ticket(ticket));
+            }
+        }
     }
 
     /// Non-blocking completion check. A `Ready`/`Failed` result is
@@ -305,21 +557,26 @@ impl ServingEngine {
         self.wait(t)
     }
 
-    /// Snapshot of one model's serving counters.
+    /// Snapshot of one model's serving counters (cumulative across
+    /// swaps and rollbacks of that name).
     pub fn stats(&self, model: &str) -> Option<ServingCounters> {
-        let i = self.shared.names.iter().position(|n| n == model)?;
-        Some(self.shared.stats[i].lock().unwrap_or_else(|e| e.into_inner()).clone())
+        let snap = self.shared.snapshot();
+        let s = snap.slots.iter().find(|s| s.name == model)?;
+        Some(s.stats.lock().unwrap_or_else(|e| e.into_inner()).clone())
     }
 
     /// Snapshots for every registered model, in registration order.
     pub fn stats_all(&self) -> Vec<(String, ServingCounters)> {
         self.shared
-            .names
+            .snapshot()
+            .slots
             .iter()
-            .cloned()
-            .zip(self.shared.stats.iter().map(|s| {
-                s.lock().unwrap_or_else(|e| e.into_inner()).clone()
-            }))
+            .map(|s| {
+                (
+                    s.name.clone(),
+                    s.stats.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+                )
+            })
             .collect()
     }
 }
@@ -349,8 +606,11 @@ impl Drop for ServingEngine {
 const DEADLINE_DISPATCH_MARGIN: Duration = Duration::from_millis(5);
 
 /// A batch extracted for dispatch (already removed from the queue).
+/// All requests share one `(slot, epoch)` — batches are epoch-pure by
+/// construction.
 struct Extracted {
-    model: usize,
+    slot: usize,
+    epoch: u64,
     reqs: Vec<Pending>,
 }
 
@@ -366,7 +626,10 @@ fn scheduler_loop(sh: &Shared) {
                     q = sh.work.wait(q).expect("serving queue poisoned");
                     continue;
                 }
-                let head_model = q.queue[0].model;
+                // the coalescing key is (slot, epoch): a swap mid-queue
+                // splits one model's requests into two never-mixed runs
+                let head_slot = q.queue[0].slot;
+                let head_epoch = q.queue[0].epoch;
                 let oldest = q.queue[0].submitted;
                 let mut rows_ready = 0usize;
                 // the hold window is bounded by max_wait from the oldest
@@ -377,7 +640,7 @@ fn scheduler_loop(sh: &Shared) {
                 // behind an unrelated hold on an idle engine
                 let mut hold_until = oldest + sh.cfg_max_wait;
                 for p in q.queue.iter() {
-                    if p.model == head_model {
+                    if p.slot == head_slot && p.epoch == head_epoch {
                         rows_ready += p.rows;
                     }
                     if let Some(d) = p.deadline {
@@ -404,9 +667,9 @@ fn scheduler_loop(sh: &Shared) {
                     q = guard;
                     continue;
                 }
-                // extract same-model requests in ticket order up to
-                // max_batch rows (the first request always fits). A
-                // same-model request that does NOT fit ends the scan —
+                // extract same-(slot, epoch) requests in ticket order up
+                // to max_batch rows (the first request always fits). A
+                // matching request that does NOT fit ends the scan —
                 // later smaller requests must not leapfrog it, so
                 // same-model completion keeps FIFO order.
                 // lint:allow(hot-path-alloc) O(batch) container; payloads are moved, not copied
@@ -415,7 +678,7 @@ fn scheduler_loop(sh: &Shared) {
                 let mut i = 0usize;
                 while i < q.queue.len() {
                     let p = &q.queue[i];
-                    if p.model != head_model {
+                    if p.slot != head_slot || p.epoch != head_epoch {
                         i += 1;
                         continue;
                     }
@@ -433,7 +696,7 @@ fn scheduler_loop(sh: &Shared) {
                         break;
                     }
                 }
-                break Extracted { model: head_model, reqs };
+                break Extracted { slot: head_slot, epoch: head_epoch, reqs };
             }
         };
         dispatch(sh, batch);
@@ -441,7 +704,13 @@ fn scheduler_loop(sh: &Shared) {
 }
 
 fn dispatch(sh: &Shared, batch: Extracted) {
-    let backend = &sh.models[batch.model];
+    let n_reqs = batch.reqs.len();
+    let (backend, stats) = match batch.reqs.first() {
+        // every request in the batch pins the same (slot, epoch), so
+        // the first one's backend/stats Arcs speak for the batch
+        Some(p) => (p.backend.clone(), p.stats.clone()),
+        None => return,
+    };
     let dispatch_t = Instant::now();
     // deadline triage: expired requests are failed without compute
     let (live, dead): (Vec<Pending>, Vec<Pending>) = batch
@@ -453,8 +722,7 @@ fn dispatch(sh: &Shared, batch: Extracted) {
     // lint:allow(hot-path-alloc) O(batch) ticket/outcome container
     let mut outcome: Outcome = Vec::with_capacity(live.len() + dead.len());
     {
-        let mut st =
-            sh.stats[batch.model].lock().unwrap_or_else(|e| e.into_inner());
+        let mut st = stats.lock().unwrap_or_else(|e| e.into_inner());
         for p in &dead {
             st.expired += 1;
             st.queue_s += dispatch_t.duration_since(p.submitted).as_secs_f64();
@@ -501,7 +769,7 @@ fn dispatch(sh: &Shared, batch: Extracted) {
         let done_t = Instant::now();
         {
             // lint:allow(lock-hygiene) fixed order batch_x -> stats; stats is a leaf lock
-            let mut st = sh.stats[batch.model].lock().unwrap_or_else(|e| e.into_inner());
+            let mut st = stats.lock().unwrap_or_else(|e| e.into_inner());
             st.batches += 1;
             st.infer_s += infer_s;
             st.max_batch_rows = st.max_batch_rows.max(rows as u64);
@@ -548,6 +816,7 @@ fn dispatch(sh: &Shared, batch: Extracted) {
         q.results.insert(ticket, r);
         q.finished_order.push_back(ticket);
     }
+    let epoch_drained = q.note_finished(batch.slot, batch.epoch, n_reqs);
     // retention cap: abandoned (never-redeemed) results are evicted
     // oldest-first; a later poll/wait on an evicted ticket reports
     // UnknownTicket, same as an already-consumed one. Every result key
@@ -567,4 +836,10 @@ fn dispatch(sh: &Shared, batch: Extracted) {
     }
     drop(q);
     sh.done.notify_all();
+    if epoch_drained {
+        // the superseded epoch's last outstanding request just
+        // finished: when `live`/`dead` drop at the end of this call,
+        // the old backend's final pinned Arc goes with them
+        stats.lock().unwrap_or_else(|e| e.into_inner()).epochs_retired += 1;
+    }
 }

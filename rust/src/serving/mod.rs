@@ -20,6 +20,19 @@
 //!   logits a request receives are bit-identical to a serial
 //!   single-request call, at any pool width and any coalescing. Tested
 //!   in `tests/serving_engine.rs` at widths {1, 2, 4, 8}.
+//! * **Zero-downtime hot swap.** [`ServingEngine::swap_model`] /
+//!   [`ServingEngine::rollback`] atomically publish a new model
+//!   *epoch* (copy-on-write snapshot behind an `Arc`). Admission pins
+//!   the epoch: every queued and in-flight request finishes on the
+//!   backend it validated against — bit-identical to that version, zero
+//!   drops — and the scheduler never coalesces two epochs of one model
+//!   into a batch. Superseded backends are reclaimed when their last
+//!   admitted request drains (counted as `epochs_retired` in the
+//!   model's [`crate::metrics::ServingCounters`]).
+//!   [`ServingEngine::versions`] exposes the lineage; backends
+//!   typically come from a [`crate::store::ModelStore`] version.
+//!   Tested under concurrent mixed-model load in
+//!   `tests/serving_swap.rs`.
 //! * **Backpressure.** The queue is bounded
 //!   ([`EngineConfig::queue_cap`]); a full queue rejects with the typed
 //!   [`ServingError::QueueFull`] instead of buffering unboundedly.
@@ -35,9 +48,6 @@
 //! stored-model sparse path) and [`DenseInfer`] (a
 //! [`crate::backend::native::NativeBackend`] plus a frozen
 //! [`TrainState`] — the dense `ModelExec` path behind the same trait).
-//! The legacy one-model entry points (`SparseInfer::infer`,
-//! per-example loops in examples and baselines) survive as thin
-//! deprecated shims around this module.
 
 mod engine;
 
@@ -51,7 +61,9 @@ use crate::coordinator::checkpoint::CompressedModel;
 use crate::runtime::manifest::ModelEntry;
 use crate::util::ThreadPool;
 
-pub use engine::{EngineConfig, InferRequest, Poll, ServingEngine, Ticket};
+pub use engine::{
+    EngineConfig, InferRequest, ModelVersion, Poll, ServingEngine, Ticket,
+};
 
 /// Typed serving errors — the scheduler's control-flow outcomes
 /// (backpressure, deadlines, validation) are values callers can match
@@ -81,6 +93,8 @@ pub enum ServingError {
     UnknownTicket(u64),
     /// The backend's batched pass failed (rendered message).
     Backend(String),
+    /// `rollback` on a model that has never been swapped.
+    NoPreviousVersion(String),
 }
 
 impl fmt::Display for ServingError {
@@ -108,6 +122,9 @@ impl fmt::Display for ServingError {
                 write!(f, "ticket {t} unknown or already consumed")
             }
             ServingError::Backend(msg) => write!(f, "backend failure: {msg}"),
+            ServingError::NoPreviousVersion(m) => {
+                write!(f, "model {m:?} has no previous version to roll back to")
+            }
         }
     }
 }
@@ -224,13 +241,17 @@ impl InferBackend for DenseInfer {
 
 /// Named, immutable, shareable model set: every model is decoded once
 /// at registration and held behind an `Arc`, so all concurrent batches
-/// read the same CSR buffers. The registry is sealed into a
-/// [`ServingEngine`] at construction — registration is a setup-time
-/// activity, serving never takes a registry-wide lock.
+/// read the same CSR buffers. The registry seeds a [`ServingEngine`]
+/// at construction (epoch 0); later versions arrive through
+/// [`ServingEngine::swap_model`], not the registry — registration is
+/// a setup-time activity, serving never takes a registry-wide lock.
 #[derive(Default)]
 pub struct ModelRegistry {
     names: Vec<String>,
     models: Vec<Arc<dyn InferBackend>>,
+    /// Per-model store version id ([`crate::store::ModelStore`]), if
+    /// the backend was opened from one.
+    versions: Vec<Option<u64>>,
 }
 
 impl ModelRegistry {
@@ -254,11 +275,24 @@ impl ModelRegistry {
         name: String,
         backend: Arc<dyn InferBackend>,
     ) -> Result<(), ServingError> {
+        self.register_versioned(name, backend, None)
+    }
+
+    /// Register a backend opened from a specific
+    /// [`crate::store::ModelStore`] version, so the engine's
+    /// [`ServingEngine::versions`] lineage can report it.
+    pub fn register_versioned(
+        &mut self,
+        name: String,
+        backend: Arc<dyn InferBackend>,
+        store_version: Option<u64>,
+    ) -> Result<(), ServingError> {
         if self.names.iter().any(|n| *n == name) {
             return Err(ServingError::DuplicateModel(name));
         }
         self.names.push(name);
         self.models.push(backend);
+        self.versions.push(store_version);
         Ok(())
     }
 
@@ -303,7 +337,9 @@ impl ModelRegistry {
         self.names.iter().any(|n| n == name)
     }
 
-    pub(crate) fn into_parts(self) -> (Vec<String>, Vec<Arc<dyn InferBackend>>) {
-        (self.names, self.models)
+    pub(crate) fn into_parts(
+        self,
+    ) -> (Vec<String>, Vec<Arc<dyn InferBackend>>, Vec<Option<u64>>) {
+        (self.names, self.models, self.versions)
     }
 }

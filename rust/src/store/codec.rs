@@ -1,0 +1,272 @@
+//! Byte-level primitives behind the store container: CRC-32 integrity
+//! words and a dependency-free LZSS compressor for the opportunistic
+//! per-layer compression policy (see [`crate::store::container`]).
+//!
+//! The compressor is deliberately the simplest credible LZ variant —
+//! a 4 KiB sliding window, 12-bit back-references, 3..=18-byte matches,
+//! one control byte per 8 tokens — because the store's policy (ADR-0048
+//! style: compress only above a size threshold and only when it
+//! actually saves) makes a heavyweight entropy coder unnecessary: the
+//! dominant payloads are RelIndex entry streams whose little-endian
+//! u32 fields are three-quarters zero bytes, which LZ back-references
+//! already fold up well. Compression is exercised only through the
+//! threshold-and-savings gate, so an incompressible payload costs one
+//! trial pass at publish time and nothing at open time.
+//!
+//! The decompressor is hardened like every other load path in this
+//! repo (`panic-free` lint gate): every read is bounds-checked, match
+//! back-references must land inside the already-produced output, and
+//! the declared uncompressed length is an exact contract — a stream
+//! that underruns, overruns, or leaves trailing bytes is a typed
+//! error, never a panic and never an unbounded allocation (callers
+//! bound `raw_len` before calling, see the container's budget checks).
+
+use std::sync::OnceLock;
+
+/// Sliding-window size: offsets are 12-bit, 1..=4095 back.
+pub const WINDOW: usize = 4096;
+/// Shortest back-reference worth a 2-byte token.
+pub const MIN_MATCH: usize = 3;
+/// Longest back-reference a 4-bit length field can carry.
+pub const MAX_MATCH: usize = MIN_MATCH + 15;
+
+// -- CRC-32 (IEEE 802.3, reflected) -----------------------------------------
+
+static CRC_TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+
+fn crc_table() -> &'static [u32; 256] {
+    CRC_TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// CRC-32 of `bytes` — the integrity word gating every container
+/// section before its bytes are decoded.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let t = crc_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// -- LZSS -------------------------------------------------------------------
+
+const HASH_BITS: usize = 13;
+
+fn hash3(a: u8, b: u8, c: u8) -> usize {
+    let v = (a as usize) | ((b as usize) << 8) | ((c as usize) << 16);
+    v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS) & ((1 << HASH_BITS) - 1)
+}
+
+/// Compress `src`. Token stream: one control byte per 8 tokens (bit k
+/// set ⇒ token k is a match), literals are 1 byte, matches are 2 bytes
+/// (offset low byte, then offset-high nibble | length−3). Deterministic:
+/// the greedy single-candidate matcher has no tie-breaking state.
+pub fn lzss_compress(src: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(src.len() / 2 + 16);
+    let mut head = vec![usize::MAX; 1 << HASH_BITS];
+    let mut i = 0usize;
+    let mut ctrl_pos = 0usize;
+    let mut ctrl_bit = 8u32;
+    while i < src.len() {
+        if ctrl_bit == 8 {
+            out.push(0);
+            ctrl_pos = out.len() - 1;
+            ctrl_bit = 0;
+        }
+        let mut best_len = 0usize;
+        let mut best_off = 0usize;
+        if i + MIN_MATCH <= src.len() {
+            let h = hash3(src[i], src[i + 1], src[i + 2]);
+            let cand = head[h];
+            if cand != usize::MAX && cand < i && i - cand < WINDOW {
+                let max = MAX_MATCH.min(src.len() - i);
+                let mut l = 0usize;
+                while l < max && src[cand + l] == src[i + l] {
+                    l += 1;
+                }
+                if l >= MIN_MATCH {
+                    best_len = l;
+                    best_off = i - cand;
+                }
+            }
+        }
+        if best_len >= MIN_MATCH {
+            out[ctrl_pos] |= 1 << ctrl_bit;
+            out.push((best_off & 0xFF) as u8);
+            out.push((((best_off >> 8) as u8) << 4) | (best_len - MIN_MATCH) as u8);
+            let end = i + best_len;
+            while i < end {
+                if i + MIN_MATCH <= src.len() {
+                    head[hash3(src[i], src[i + 1], src[i + 2])] = i;
+                }
+                i += 1;
+            }
+        } else {
+            out.push(src[i]);
+            if i + MIN_MATCH <= src.len() {
+                head[hash3(src[i], src[i + 1], src[i + 2])] = i;
+            }
+            i += 1;
+        }
+        ctrl_bit += 1;
+    }
+    out
+}
+
+/// Decompress a [`lzss_compress`] stream into exactly `raw_len` bytes.
+/// Malformed input — truncated tokens, out-of-window offsets, streams
+/// that overrun or underrun the declared length, trailing garbage —
+/// is a described error, never a panic: corrupt store bytes are data.
+pub fn lzss_decompress(src: &[u8], raw_len: usize) -> Result<Vec<u8>, String> {
+    let mut out = Vec::with_capacity(raw_len);
+    let mut i = 0usize;
+    while out.len() < raw_len {
+        if i >= src.len() {
+            return Err("compressed stream ends before a control byte".into());
+        }
+        let ctrl = src[i];
+        i += 1;
+        for bit in 0..8u32 {
+            if out.len() == raw_len {
+                break;
+            }
+            if ctrl & (1 << bit) != 0 {
+                if i + 2 > src.len() {
+                    return Err(format!(
+                        "compressed stream truncated inside a match token at byte {i}"
+                    ));
+                }
+                let b0 = src[i] as usize;
+                let b1 = src[i + 1] as usize;
+                i += 2;
+                let off = b0 | ((b1 >> 4) << 8);
+                let len = (b1 & 0x0F) + MIN_MATCH;
+                if off == 0 || off > out.len() {
+                    return Err(format!(
+                        "match offset {off} outside the {} bytes produced so far",
+                        out.len()
+                    ));
+                }
+                if out.len() + len > raw_len {
+                    return Err(format!(
+                        "match of {len} bytes overruns the declared length {raw_len}"
+                    ));
+                }
+                let start = out.len() - off;
+                // byte-at-a-time so overlapping (RLE-style) matches
+                // replay already-copied bytes, as LZ semantics require
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            } else {
+                if i >= src.len() {
+                    return Err(format!(
+                        "compressed stream truncated inside a literal at byte {i}"
+                    ));
+                }
+                out.push(src[i]);
+                i += 1;
+            }
+        }
+    }
+    if i != src.len() {
+        return Err(format!(
+            "{} trailing bytes after the compressed stream",
+            src.len() - i
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // "123456789" → 0xCBF43926 is the canonical IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+
+    fn roundtrip(src: &[u8]) {
+        let z = lzss_compress(src);
+        let back = lzss_decompress(&z, src.len()).expect("valid stream");
+        assert_eq!(back, src, "roundtrip of {} bytes drifted", src.len());
+    }
+
+    #[test]
+    fn lzss_roundtrips_structured_and_random_payloads() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"ab");
+        roundtrip(b"abcabcabcabcabcabc");
+        roundtrip(&[0u8; 10_000]);
+        // RelIndex-shaped payload: little-endian u32 pairs, mostly
+        // zero high bytes — the store's dominant section content.
+        let mut rng = Rng::new(7);
+        let mut rel = Vec::new();
+        for _ in 0..4096 {
+            let gap = (rng.next_u64() % 15) as u32;
+            let code = (rng.next_u64() % 7) as u32;
+            rel.extend_from_slice(&gap.to_le_bytes());
+            rel.extend_from_slice(&code.to_le_bytes());
+        }
+        let z = lzss_compress(&rel);
+        assert!(
+            z.len() * 10 < rel.len() * 9,
+            "entry streams should compress ≥10%: {} -> {}",
+            rel.len(),
+            z.len()
+        );
+        roundtrip(&rel);
+        // incompressible random bytes still roundtrip (they just
+        // expand slightly — the policy layer is what rejects them)
+        let rnd: Vec<u8> = (0..20_000).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        roundtrip(&rnd);
+    }
+
+    #[test]
+    fn lzss_decode_rejects_malformed_streams_without_panicking() {
+        let src: Vec<u8> = (0..600u32).flat_map(|i| (i % 9).to_le_bytes()).collect();
+        let z = lzss_compress(&src);
+        // every truncation errs (or, for whole-token prefixes, underruns
+        // the declared length — also an err)
+        for cut in 0..z.len() {
+            assert!(
+                lzss_decompress(&z[..cut], src.len()).is_err(),
+                "truncation at {cut} decoded"
+            );
+        }
+        // every 1-bit corruption either errs or produces exactly raw_len
+        // bytes — never panics, never over-allocates
+        for pos in 0..z.len() {
+            for bit in [0u8, 3, 7] {
+                let mut bad = z.clone();
+                bad[pos] ^= 1 << bit;
+                if let Ok(out) = lzss_decompress(&bad, src.len()) {
+                    assert_eq!(out.len(), src.len());
+                }
+            }
+        }
+        // wrong declared lengths are typed errors
+        assert!(lzss_decompress(&z, src.len() + 1).is_err());
+        if src.len() > 1 {
+            assert!(lzss_decompress(&z, src.len() - 1).is_err());
+        }
+    }
+}

@@ -1,0 +1,478 @@
+//! The versioned store container: CRC-gated, lazily decodable on-disk
+//! format v2 for [`CompressedModel`].
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! u32 magic (0xAD44_0002)
+//! u32 header CRC-32            — gates the header before any field is trusted
+//! u32 header length
+//! header:
+//!   str model_name · f32 accuracy · u32 n_layers · u32 n_biases
+//!   per layer: str name · u32 rank · rank×u32 dims · u32 bits · f32 q
+//!              · u32 index_bits · u32 dense_len · u32 n_entries
+//!              · u8 encoding (0 raw, 1 LZSS) · u32 stored_len
+//!              · u32 raw_len · u32 payload CRC-32
+//!   per bias:  str name · u32 len · u8 encoding · u32 stored_len
+//!              · u32 raw_len · u32 payload CRC-32
+//! payload sections, contiguous in header order (layers then biases)
+//! ```
+//!
+//! The metadata/payload split is what makes the decode *lazy*: parsing
+//! the header alone yields every layer's name, shape, bits and sizes;
+//! a layer's entry stream is CRC-checked, decompressed, and
+//! [`RelIndex::validate`]d only when [`LazyModel::layer`] asks for it,
+//! so opening a version to serve one head does not materialize the
+//! rest. Per-layer payloads are compressed opportunistically (ADR-0048
+//! policy): only sections of at least [`COMPRESS_MIN_BYTES`] whose
+//! LZSS trial saves at least [`COMPRESS_MIN_SAVINGS_PCT`]% stay
+//! compressed; everything else is stored raw, so pathological inputs
+//! cost one trial pass at publish time and nothing at open time.
+//!
+//! Hardening matches the legacy checkpoint loader (this file sits under
+//! the same `panic-free` lint gate): counts are budget-checked before
+//! any allocation, declared raw lengths are bounded by the LZSS
+//! worst-case expansion of the stored bytes, the payload extent must
+//! equal the file length exactly (any truncation is a typed error),
+//! and every section must clear its CRC before a byte is decoded.
+
+use crate::coordinator::checkpoint::{
+    corrupt, get_count, get_f32, get_str, get_u32, put_count, put_f32, put_str, put_u32,
+    CompressedLayer, CompressedModel,
+};
+use crate::sparsity::RelIndex;
+use crate::store::codec::{crc32, lzss_compress, lzss_decompress};
+use crate::tensor::Tensor;
+use anyhow::anyhow;
+
+/// "ADMM" container v2 (v1 is the legacy flat checkpoint).
+pub const STORE_MAGIC: u32 = 0xAD44_0002;
+
+/// Sections below this size are never compressed — the token overhead
+/// can't pay for itself and tiny layers dominate open latency.
+pub const COMPRESS_MIN_BYTES: usize = 256;
+/// A trial compression must save at least this share to be kept.
+pub const COMPRESS_MIN_SAVINGS_PCT: usize = 10;
+
+/// LZSS worst case: a 17-byte group (control + 8 two-byte matches)
+/// expands to at most 8×18 raw bytes, a ratio under 9 — so any
+/// declared `raw_len` beyond `9 × stored + 16` is provably corrupt and
+/// is refused *before* the decode buffer is allocated.
+const MAX_EXPANSION: usize = 9;
+
+const ENC_RAW: u8 = 0;
+const ENC_LZSS: u8 = 1;
+
+/// How one payload section is stored.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Encoding {
+    Raw,
+    Lzss,
+}
+
+/// Location + integrity metadata for one payload section.
+#[derive(Clone, Debug)]
+pub struct SectionMeta {
+    pub encoding: Encoding,
+    /// Absolute byte offset of the stored payload within the file.
+    pub offset: usize,
+    /// Stored (possibly compressed) byte length.
+    pub stored_len: usize,
+    /// Decoded byte length (exact contract, not an upper bound).
+    pub raw_len: usize,
+    /// CRC-32 of the stored bytes.
+    pub crc: u32,
+}
+
+/// Everything known about a layer without touching its payload.
+#[derive(Clone, Debug)]
+pub struct LayerMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub bits: u32,
+    pub q: f32,
+    pub index_bits: u32,
+    pub dense_len: usize,
+    pub n_entries: usize,
+    pub section: SectionMeta,
+}
+
+/// Everything known about a bias vector without touching its payload.
+#[derive(Clone, Debug)]
+pub struct BiasMeta {
+    pub name: String,
+    pub len: usize,
+    pub section: SectionMeta,
+}
+
+/// A parsed-but-not-decoded container: owns the raw file bytes plus
+/// the validated header. Individual layers/biases decode on demand.
+pub struct LazyModel {
+    bytes: Vec<u8>,
+    pub model_name: String,
+    pub accuracy: f64,
+    pub layers: Vec<LayerMeta>,
+    pub biases: Vec<BiasMeta>,
+}
+
+/// Publish-side accounting for the opportunistic compression policy.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EncodeStats {
+    /// Decoded payload bytes across all sections.
+    pub raw_payload_bytes: u64,
+    /// Stored payload bytes after the policy picked raw-vs-LZSS.
+    pub stored_payload_bytes: u64,
+    /// Sections the policy kept compressed.
+    pub compressed_sections: usize,
+    pub total_sections: usize,
+}
+
+struct Section {
+    enc: u8,
+    payload: Vec<u8>,
+    raw_len: usize,
+    crc: u32,
+}
+
+/// Apply the threshold-and-savings policy to one raw section.
+fn pack_section(raw: Vec<u8>) -> Section {
+    if raw.len() >= COMPRESS_MIN_BYTES {
+        let z = lzss_compress(&raw);
+        // keep only if stored ≤ raw × (100 − savings)%
+        if z.len().saturating_mul(100) <= raw.len().saturating_mul(100 - COMPRESS_MIN_SAVINGS_PCT)
+        {
+            return Section { enc: ENC_LZSS, crc: crc32(&z), raw_len: raw.len(), payload: z };
+        }
+    }
+    Section { enc: ENC_RAW, crc: crc32(&raw), raw_len: raw.len(), payload: raw }
+}
+
+/// Serialize `m` into container-v2 bytes.
+pub fn encode_model(m: &CompressedModel) -> crate::Result<Vec<u8>> {
+    encode_model_with_stats(m).map(|(bytes, _)| bytes)
+}
+
+/// Serialize `m`, also reporting what the compression policy did.
+pub fn encode_model_with_stats(m: &CompressedModel) -> crate::Result<(Vec<u8>, EncodeStats)> {
+    // payload sections first, so the header can carry lengths + CRCs
+    let mut sections = Vec::with_capacity(m.layers.len() + m.biases.len());
+    for l in &m.layers {
+        let mut raw = Vec::with_capacity(l.enc.entries.len() * 8);
+        for &(gap, code) in &l.enc.entries {
+            put_u32(&mut raw, gap);
+            put_u32(&mut raw, code as u32);
+        }
+        sections.push(pack_section(raw));
+    }
+    for (_, t) in &m.biases {
+        let mut raw = Vec::with_capacity(t.len() * 4);
+        for &x in t.data() {
+            put_f32(&mut raw, x);
+        }
+        sections.push(pack_section(raw));
+    }
+    let mut stats = EncodeStats { total_sections: sections.len(), ..Default::default() };
+    for s in &sections {
+        stats.raw_payload_bytes += s.raw_len as u64;
+        stats.stored_payload_bytes += s.payload.len() as u64;
+        if s.enc == ENC_LZSS {
+            stats.compressed_sections += 1;
+        }
+    }
+
+    let mut h = Vec::new();
+    put_str(&mut h, &m.model_name);
+    put_f32(&mut h, m.accuracy as f32);
+    put_count(&mut h, m.layers.len(), "layer count")?;
+    put_count(&mut h, m.biases.len(), "bias count")?;
+    for (li, l) in m.layers.iter().enumerate() {
+        put_str(&mut h, &l.name);
+        put_count(&mut h, l.shape.len(), "shape rank")?;
+        for &d in &l.shape {
+            put_count(&mut h, d, "shape dim")?;
+        }
+        put_u32(&mut h, l.bits);
+        put_f32(&mut h, l.q);
+        put_u32(&mut h, l.enc.index_bits);
+        put_count(&mut h, l.enc.dense_len, "dense_len")?;
+        put_count(&mut h, l.enc.entries.len(), "entry count")?;
+        put_section_meta(&mut h, &sections[li])?;
+    }
+    for (bi, (name, t)) in m.biases.iter().enumerate() {
+        put_str(&mut h, name);
+        put_count(&mut h, t.len(), "bias length")?;
+        put_section_meta(&mut h, &sections[m.layers.len() + bi])?;
+    }
+
+    let payload: usize = sections.iter().map(|s| s.payload.len()).sum();
+    let mut w = Vec::with_capacity(12 + h.len() + payload);
+    put_u32(&mut w, STORE_MAGIC);
+    put_u32(&mut w, crc32(&h));
+    put_count(&mut w, h.len(), "header length")?;
+    w.extend_from_slice(&h);
+    for s in &sections {
+        w.extend_from_slice(&s.payload);
+    }
+    Ok((w, stats))
+}
+
+fn put_section_meta(h: &mut Vec<u8>, s: &Section) -> crate::Result<()> {
+    h.push(s.enc);
+    put_count(h, s.payload.len(), "stored payload length")?;
+    put_count(h, s.raw_len, "raw payload length")?;
+    put_u32(h, s.crc);
+    Ok(())
+}
+
+/// Decode an entire container eagerly (the checkpoint-load path).
+pub fn decode_model(bytes: Vec<u8>) -> crate::Result<CompressedModel> {
+    LazyModel::parse(bytes)?.to_model()
+}
+
+impl LazyModel {
+    /// Parse + validate the header. Payload sections are located and
+    /// extent-checked but **not** read — that happens per layer/bias.
+    pub fn parse(bytes: Vec<u8>) -> crate::Result<Self> {
+        let mut r = &bytes[..];
+        if get_u32(&mut r)? != STORE_MAGIC {
+            return Err(anyhow!("bad magic (not a store container)"));
+        }
+        let header_crc = get_u32(&mut r)?;
+        let header_len = get_count(&mut r, 1, "header length")?;
+        let header = match r.get(..header_len) {
+            Some(h) => h,
+            None => return Err(anyhow!("corrupt checkpoint: header extends past the file")),
+        };
+        if crc32(header) != header_crc {
+            return Err(anyhow!("corrupt checkpoint: header CRC mismatch"));
+        }
+        let mut h = header;
+        let model_name = get_str(&mut h)?;
+        let accuracy = get_f32(&mut h)? as f64;
+        // minimum header bytes per layer: 7 u32 fields + encoding byte
+        // + 3 section u32s ⇒ 41; per bias: 2 u32s + 1 + 12 ⇒ 21
+        let n_layers = get_count(&mut h, 41, "layer count")?;
+        let n_biases = get_count(&mut h, 21, "bias count")?;
+        let mut layers = Vec::with_capacity(n_layers);
+        let mut biases = Vec::with_capacity(n_biases);
+        // payload sections start right after the header
+        let mut offset = 12usize.saturating_add(header_len);
+        for _ in 0..n_layers {
+            let name = get_str(&mut h)?;
+            let ndim = get_count(&mut h, 4, "shape rank")?;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(get_u32(&mut h)? as usize);
+            }
+            let bits = get_u32(&mut h)?;
+            if !(1..=16).contains(&bits) {
+                return Err(corrupt(&name, format!("weight bits {bits} out of 1..=16")));
+            }
+            let q = get_f32(&mut h)?;
+            let index_bits = get_u32(&mut h)?;
+            if !(1..=16).contains(&index_bits) {
+                return Err(corrupt(&name, format!("index bits {index_bits} out of 1..=16")));
+            }
+            let dense_len = get_u32(&mut h)? as usize;
+            let covered = shape.iter().try_fold(1usize, |a, &d| a.checked_mul(d));
+            if covered != Some(dense_len) {
+                return Err(corrupt(
+                    &name,
+                    format!("shape {shape:?} does not cover dense length {dense_len}"),
+                ));
+            }
+            // entries live in the payload, not the header, so the
+            // count's allocation bound comes from raw_len below
+            let n_entries = get_count(&mut h, 0, "entry count")?;
+            let section = get_section_meta(&mut h, &name, &mut offset)?;
+            let want_raw = n_entries.checked_mul(8);
+            if want_raw != Some(section.raw_len) {
+                return Err(corrupt(
+                    &name,
+                    format!(
+                        "{} entries need {want_raw:?} raw bytes, header declares {}",
+                        n_entries, section.raw_len
+                    ),
+                ));
+            }
+            layers.push(LayerMeta {
+                name,
+                shape,
+                bits,
+                q,
+                index_bits,
+                dense_len,
+                n_entries,
+                section,
+            });
+        }
+        for _ in 0..n_biases {
+            let name = get_str(&mut h)?;
+            let len = get_count(&mut h, 0, "bias length")?;
+            let section = get_section_meta(&mut h, &name, &mut offset)?;
+            if len.checked_mul(4) != Some(section.raw_len) {
+                return Err(corrupt(
+                    &name,
+                    format!(
+                        "bias of {len} f32s does not match raw length {}",
+                        section.raw_len
+                    ),
+                ));
+            }
+            biases.push(BiasMeta { name, len, section });
+        }
+        if !h.is_empty() {
+            return Err(anyhow!(
+                "corrupt checkpoint: {} trailing bytes in the header",
+                h.len()
+            ));
+        }
+        // strict extent: the sections must tile the rest of the file
+        if offset != bytes.len() {
+            return Err(anyhow!(
+                "corrupt checkpoint: payload extent {offset} does not match file length {}",
+                bytes.len()
+            ));
+        }
+        Ok(LazyModel { bytes, model_name, accuracy, layers, biases })
+    }
+
+    /// CRC-check + decode + validate one layer. This is the lazy path:
+    /// nothing outside this layer's section is touched.
+    pub fn layer(&self, i: usize) -> crate::Result<CompressedLayer> {
+        let m = match self.layers.get(i) {
+            Some(m) => m,
+            None => return Err(anyhow!("layer {i} out of range ({})", self.layers.len())),
+        };
+        let raw = self.section_bytes(&m.section, &m.name)?;
+        let mut r = &raw[..];
+        let mut entries = Vec::with_capacity(m.n_entries);
+        for _ in 0..m.n_entries {
+            let gap = get_u32(&mut r)?;
+            let code = get_u32(&mut r)? as i32;
+            entries.push((gap, code));
+        }
+        let enc = RelIndex { index_bits: m.index_bits, entries, dense_len: m.dense_len };
+        // bits was range-checked in parse(), so the shift cannot overflow
+        let max_code = 1i32 << (m.bits - 1);
+        if let Err(why) = enc.validate(max_code) {
+            return Err(corrupt(&m.name, why));
+        }
+        Ok(CompressedLayer {
+            name: m.name.clone(),
+            shape: m.shape.clone(),
+            bits: m.bits,
+            q: m.q,
+            enc,
+        })
+    }
+
+    /// CRC-check + decode one bias vector.
+    pub fn bias(&self, i: usize) -> crate::Result<(String, Tensor)> {
+        let m = match self.biases.get(i) {
+            Some(m) => m,
+            None => return Err(anyhow!("bias {i} out of range ({})", self.biases.len())),
+        };
+        let raw = self.section_bytes(&m.section, &m.name)?;
+        let mut r = &raw[..];
+        let mut v = Vec::with_capacity(m.len);
+        for _ in 0..m.len {
+            v.push(get_f32(&mut r)?);
+        }
+        Ok((m.name.clone(), Tensor::new(vec![m.len], v)))
+    }
+
+    /// Decode every section into a full [`CompressedModel`].
+    pub fn to_model(&self) -> crate::Result<CompressedModel> {
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for i in 0..self.layers.len() {
+            layers.push(self.layer(i)?);
+        }
+        let mut biases = Vec::with_capacity(self.biases.len());
+        for i in 0..self.biases.len() {
+            biases.push(self.bias(i)?);
+        }
+        Ok(CompressedModel {
+            model_name: self.model_name.clone(),
+            layers,
+            biases,
+            accuracy: self.accuracy,
+        })
+    }
+
+    /// Total file size in bytes (header + payloads).
+    pub fn file_len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    fn section_bytes(&self, s: &SectionMeta, what: &str) -> crate::Result<Vec<u8>> {
+        let end = match s.offset.checked_add(s.stored_len) {
+            Some(e) => e,
+            None => return Err(corrupt(what, "section extent overflows".into())),
+        };
+        let stored = match self.bytes.get(s.offset..end) {
+            Some(b) => b,
+            None => return Err(corrupt(what, "section extends past the file".into())),
+        };
+        if crc32(stored) != s.crc {
+            return Err(corrupt(what, "payload CRC mismatch".into()));
+        }
+        match s.encoding {
+            Encoding::Raw => Ok(stored.to_vec()),
+            Encoding::Lzss => lzss_decompress(stored, s.raw_len).map_err(|why| corrupt(what, why)),
+        }
+    }
+}
+
+/// Read one section descriptor from the header cursor, accumulating
+/// the running payload offset with overflow checks and bounding the
+/// declared raw length by the LZSS worst-case expansion so a corrupt
+/// header can never drive an oversized allocation.
+fn get_section_meta(
+    h: &mut &[u8],
+    what: &str,
+    offset: &mut usize,
+) -> crate::Result<SectionMeta> {
+    let enc = match h.split_first() {
+        Some((&b, rest)) => {
+            *h = rest;
+            b
+        }
+        None => return Err(anyhow!("truncated checkpoint")),
+    };
+    let encoding = match enc {
+        ENC_RAW => Encoding::Raw,
+        ENC_LZSS => Encoding::Lzss,
+        other => return Err(corrupt(what, format!("unknown section encoding {other}"))),
+    };
+    let stored_len = get_count(h, 0, "stored payload length")?;
+    let raw_len = get_count(h, 0, "raw payload length")?;
+    let crc = get_u32(h)?;
+    match encoding {
+        Encoding::Raw => {
+            if raw_len != stored_len {
+                return Err(corrupt(
+                    what,
+                    format!("raw section declares {raw_len} decoded vs {stored_len} stored"),
+                ));
+            }
+        }
+        Encoding::Lzss => {
+            if raw_len > stored_len.saturating_mul(MAX_EXPANSION) + 16 {
+                return Err(corrupt(
+                    what,
+                    format!(
+                        "declared raw length {raw_len} exceeds the LZSS expansion \
+                         bound for {stored_len} stored bytes"
+                    ),
+                ));
+            }
+        }
+    }
+    let this = *offset;
+    *offset = match this.checked_add(stored_len) {
+        Some(o) => o,
+        None => return Err(corrupt(what, "payload extent overflows".into())),
+    };
+    Ok(SectionMeta { encoding, offset: this, stored_len, raw_len, crc })
+}

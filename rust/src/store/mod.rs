@@ -1,0 +1,250 @@
+//! Versioned model store: the artifact side of zero-downtime rollout.
+//!
+//! ADMM-NN compression emits a *sequence* of model versions per network
+//! (progressive prune→quantize rounds, re-tuned bit-widths), not one
+//! checkpoint — so the serving fleet needs a store, not a file. A
+//! [`ModelStore`] roots a directory tree `root/<model>/v00000042.admm`
+//! of container-v2 artifacts ([`container`]):
+//!
+//! * [`ModelStore::publish`] assigns the next monotonic version id per
+//!   model name and writes the container atomically (tmp + rename), so
+//!   a crashed publish never leaves a half-written version visible.
+//! * [`ModelStore::open`] parses a version's header lazily — layers
+//!   decode (CRC gate → optional LZSS → [`RelIndex::validate`]
+//!   hardening) only when asked for, mirroring the checkpoint loader's
+//!   corrupt-input guarantees.
+//! * [`ModelStore::gc`] keeps the newest `keep` **healthy** versions:
+//!   a corrupt newer version can never evict a serving-healthy older
+//!   one, because health (full decode) is checked before a version
+//!   counts toward the retention quota.
+//!
+//! Output ordering is deterministic everywhere (sorted version lists,
+//! sorted model names) — this module sits under the `determinism` lint
+//! gate alongside serving and report emission.
+//!
+//! [`RelIndex::validate`]: crate::sparsity::RelIndex::validate
+
+pub mod codec;
+pub mod container;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context};
+
+use crate::coordinator::checkpoint::CompressedModel;
+pub use container::{EncodeStats, LazyModel};
+
+const FILE_SUFFIX: &str = ".admm";
+
+/// A directory-rooted, versioned store of compressed models.
+pub struct ModelStore {
+    root: PathBuf,
+}
+
+/// What [`ModelStore::publish`] wrote.
+#[derive(Clone, Debug)]
+pub struct PublishReceipt {
+    pub name: String,
+    /// Monotonic per-name version id (starts at 1).
+    pub version: u64,
+    pub path: PathBuf,
+    /// Total file bytes written (header + payloads).
+    pub file_bytes: u64,
+    /// Compression-policy accounting for the payload sections.
+    pub stats: EncodeStats,
+}
+
+/// One openable version: the parsed-but-lazy container plus its
+/// store coordinates.
+pub struct StoredVersion {
+    pub name: String,
+    pub version: u64,
+    pub path: PathBuf,
+    lazy: LazyModel,
+}
+
+impl StoredVersion {
+    /// The lazily-decodable container (per-layer access).
+    pub fn lazy(&self) -> &LazyModel {
+        &self.lazy
+    }
+
+    /// Decode every section into a full model (the eager path).
+    pub fn to_model(&self) -> crate::Result<CompressedModel> {
+        self.lazy.to_model()
+    }
+}
+
+/// What [`ModelStore::gc`] kept and removed, all lists ascending.
+#[derive(Clone, Debug, Default)]
+pub struct GcReport {
+    pub kept: Vec<u64>,
+    pub removed: Vec<u64>,
+    /// Versions removed because they failed the health check — these
+    /// never counted toward the retention quota.
+    pub corrupt_removed: Vec<u64>,
+}
+
+impl ModelStore {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open_root(root: impl AsRef<Path>) -> crate::Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        fs::create_dir_all(&root)
+            .with_context(|| format!("creating store root {}", root.display()))?;
+        Ok(ModelStore { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Path a given (name, version) pair lives at.
+    pub fn path_of(&self, name: &str, version: u64) -> PathBuf {
+        self.root.join(name).join(format!("v{version:08}{FILE_SUFFIX}"))
+    }
+
+    /// Publish `model` as the next version of its `model_name`.
+    /// Atomic: the container is written to a temp file and renamed in,
+    /// so a crash mid-write leaves no visible version behind.
+    pub fn publish(&self, model: &CompressedModel) -> crate::Result<PublishReceipt> {
+        let name = sane_name(&model.model_name)?;
+        let dir = self.root.join(name);
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating model dir {}", dir.display()))?;
+        let version = self.list(name)?.last().copied().unwrap_or(0) + 1;
+        let (bytes, stats) = container::encode_model_with_stats(model)?;
+        let tmp = dir.join(format!(".tmp-v{version:08}"));
+        fs::write(&tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        let path = self.path_of(name, version);
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing {}", path.display()))?;
+        Ok(PublishReceipt {
+            name: name.to_string(),
+            version,
+            path,
+            file_bytes: bytes.len() as u64,
+            stats,
+        })
+    }
+
+    /// Open a version of `name` — the latest when `version` is `None`.
+    /// The header is parsed and validated; layer payloads stay lazy.
+    pub fn open(&self, name: &str, version: Option<u64>) -> crate::Result<StoredVersion> {
+        let name = sane_name(name)?;
+        let version = match version {
+            Some(v) => v,
+            None => match self.list(name)?.last().copied() {
+                Some(v) => v,
+                None => return Err(anyhow!("no versions of `{name}` in the store")),
+            },
+        };
+        let path = self.path_of(name, version);
+        let bytes =
+            fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        let lazy = LazyModel::parse(bytes)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Ok(StoredVersion { name: name.to_string(), version, path, lazy })
+    }
+
+    /// All versions of `name`, ascending. A model never published
+    /// lists as empty rather than erroring.
+    pub fn list(&self, name: &str) -> crate::Result<Vec<u64>> {
+        let name = sane_name(name)?;
+        let dir = self.root.join(name);
+        if !dir.is_dir() {
+            return Ok(Vec::new());
+        }
+        let mut out = Vec::new();
+        let entries =
+            fs::read_dir(&dir).with_context(|| format!("listing {}", dir.display()))?;
+        for entry in entries {
+            let entry = entry.with_context(|| format!("listing {}", dir.display()))?;
+            if let Some(v) = parse_version(&entry.file_name().to_string_lossy()) {
+                out.push(v);
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    /// All model names in the store, sorted.
+    pub fn list_models(&self) -> crate::Result<Vec<String>> {
+        let mut out = Vec::new();
+        let entries = fs::read_dir(&self.root)
+            .with_context(|| format!("listing {}", self.root.display()))?;
+        for entry in entries {
+            let entry = entry.with_context(|| format!("listing {}", self.root.display()))?;
+            let is_dir = entry.file_type().map(|t| t.is_dir()).unwrap_or(false);
+            if !is_dir {
+                continue;
+            }
+            if let Some(n) = entry.file_name().to_str() {
+                if sane_name(n).is_ok() {
+                    out.push(n.to_string());
+                }
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    /// Keep the newest `keep` (min 1) *healthy* versions of `name`,
+    /// removing the rest. Health means a full decode succeeds — so a
+    /// corrupt freshly-published version is removed without consuming
+    /// retention quota, and can never evict a serving-healthy older
+    /// version.
+    pub fn gc(&self, name: &str, keep: usize) -> crate::Result<GcReport> {
+        let keep = keep.max(1);
+        let versions = self.list(name)?;
+        let mut report = GcReport::default();
+        for &v in versions.iter().rev() {
+            let healthy = self
+                .open(name, Some(v))
+                .and_then(|s| s.to_model().map(|_| ()))
+                .is_ok();
+            if healthy && report.kept.len() < keep {
+                report.kept.push(v);
+                continue;
+            }
+            let path = self.path_of(name, v);
+            fs::remove_file(&path)
+                .with_context(|| format!("removing {}", path.display()))?;
+            if healthy {
+                report.removed.push(v);
+            } else {
+                report.corrupt_removed.push(v);
+            }
+        }
+        report.kept.reverse();
+        report.removed.reverse();
+        report.corrupt_removed.reverse();
+        Ok(report)
+    }
+}
+
+/// Model names become directory names, so constrain them to a safe
+/// charset — no separators, no dot-prefixed (hidden / traversal) names.
+fn sane_name(name: &str) -> crate::Result<&str> {
+    let ok = !name.is_empty()
+        && !name.starts_with('.')
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.'));
+    if ok {
+        Ok(name)
+    } else {
+        Err(anyhow!(
+            "invalid model name `{name}`: use ASCII alphanumerics, `_`, `-`, `.` \
+             and no leading dot"
+        ))
+    }
+}
+
+fn parse_version(file_name: &str) -> Option<u64> {
+    let digits = file_name.strip_prefix('v')?.strip_suffix(FILE_SUFFIX)?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}

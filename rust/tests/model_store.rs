@@ -1,0 +1,280 @@
+//! Integration tests of the versioned model store: publish/list/open
+//! round-trips, the opportunistic compression policy, exhaustive
+//! corruption sweeps (every truncation and every single-bit flip must
+//! come back as a typed `Err`, never a panic), gc's healthy-retention
+//! guarantee, lazy per-layer decode isolation, and legacy checkpoint
+//! compatibility through the magic-dispatched loader.
+// Crate-root style allowances, matching rust/src/lib.rs (these used to
+// be -A flags on the Makefile's clippy invocation).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
+
+use std::path::PathBuf;
+
+use admm_nn::coordinator::checkpoint::{CompressedLayer, CompressedModel};
+use admm_nn::projection::prune_topk;
+use admm_nn::quantize::search_interval;
+use admm_nn::store::{container, ModelStore};
+use admm_nn::tensor::Tensor;
+use admm_nn::util::Rng;
+
+/// Fresh per-test store root under the system temp dir.
+fn store_root(test: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("admm_nn_store_test").join(test);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A small random model: two pruned+quantized layers plus a bias.
+/// Payload sections are big enough to exercise real entry streams but
+/// small enough that exhaustive bit-flip sweeps stay fast.
+fn sample_model(seed: u64) -> CompressedModel {
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    for (i, n) in [400usize, 1200].iter().enumerate() {
+        let w = prune_topk(&rng.normal_vec(*n, 0.1), n / 8);
+        let cfg = search_interval(&w, 3);
+        let t = Tensor::new(vec![*n], cfg.apply(&w));
+        layers.push(CompressedLayer::from_quantized(&format!("l{i}.w"), &t, &cfg, 4));
+    }
+    CompressedModel {
+        model_name: "toy".into(),
+        layers,
+        biases: vec![("l0.b".into(), Tensor::new(vec![4], vec![0.5; 4]))],
+        accuracy: 0.97,
+    }
+}
+
+/// A model whose entry stream is extremely regular (constant level at a
+/// constant stride), so the LZSS policy is guaranteed to keep it.
+fn repetitive_model() -> CompressedModel {
+    let n = 10_000usize;
+    let mut w = vec![0.0f32; n];
+    for i in (0..n).step_by(4) {
+        w[i] = 0.5;
+    }
+    let cfg = search_interval(&w, 3);
+    let t = Tensor::new(vec![n], cfg.apply(&w));
+    CompressedModel {
+        model_name: "regular".into(),
+        layers: vec![CompressedLayer::from_quantized("r.w", &t, &cfg, 4)],
+        biases: Vec::new(),
+        accuracy: 0.5,
+    }
+}
+
+fn assert_models_bit_equal(a: &CompressedModel, b: &CompressedModel) {
+    assert_eq!(a.model_name, b.model_name);
+    assert_eq!(a.layers.len(), b.layers.len());
+    for (x, y) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(x.to_tensor().data(), y.to_tensor().data(), "layer drifted");
+        assert_eq!(x.bits, y.bits);
+        assert_eq!(x.shape, y.shape);
+    }
+    assert_eq!(a.biases.len(), b.biases.len());
+    for ((xn, xt), (yn, yt)) in a.biases.iter().zip(&b.biases) {
+        assert_eq!(xn, yn);
+        assert_eq!(xt.data(), yt.data());
+    }
+    // both container formats store accuracy as f32 (the weights are the
+    // bit-exact contract; accuracy is advisory metadata)
+    assert!((a.accuracy - b.accuracy).abs() < 1e-6);
+}
+
+#[test]
+fn publish_assigns_monotonic_versions_and_roundtrips() {
+    let store = ModelStore::open_root(store_root("roundtrip")).unwrap();
+    let m = sample_model(1);
+    let r1 = store.publish(&m).unwrap();
+    assert_eq!((r1.name.as_str(), r1.version), ("toy", 1));
+    assert!(r1.path.is_file());
+    assert_eq!(std::fs::metadata(&r1.path).unwrap().len(), r1.file_bytes);
+
+    let mut m2 = sample_model(2);
+    m2.accuracy = 0.98;
+    let r2 = store.publish(&m2).unwrap();
+    assert_eq!(r2.version, 2);
+    assert_eq!(store.list("toy").unwrap(), vec![1, 2]);
+    assert_eq!(store.list_models().unwrap(), vec!["toy".to_string()]);
+
+    // no tmp residue from the atomic write path
+    let dir = store.root().join("toy");
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let name = entry.unwrap().file_name();
+        assert!(
+            !name.to_string_lossy().starts_with('.'),
+            "tmp file left behind: {name:?}"
+        );
+    }
+
+    // latest by default, explicit versions on request — both bit-exact
+    let latest = store.open("toy", None).unwrap();
+    assert_eq!(latest.version, 2);
+    assert_models_bit_equal(&latest.to_model().unwrap(), &m2);
+    let first = store.open("toy", Some(1)).unwrap();
+    assert_models_bit_equal(&first.to_model().unwrap(), &m);
+
+    // a store file is also loadable through the plain checkpoint
+    // loader (magic dispatch) — one artifact format, two front doors
+    let via_ckpt = CompressedModel::load(&r2.path).unwrap();
+    assert_models_bit_equal(&via_ckpt, &m2);
+
+    // never-published names list empty, absent versions err typed
+    assert!(store.list("ghost").unwrap().is_empty());
+    assert!(store.open("ghost", None).is_err());
+    assert!(store.open("toy", Some(99)).is_err());
+}
+
+#[test]
+fn compression_policy_is_threshold_and_savings_gated() {
+    let store = ModelStore::open_root(store_root("policy")).unwrap();
+
+    // tiny sections (below COMPRESS_MIN_BYTES) must stay raw
+    let mut tiny = sample_model(3);
+    tiny.model_name = "tiny".into();
+    tiny.layers.truncate(1);
+    {
+        let w = vec![0.25f32, 0.0, 0.0, -0.25, 0.0, 0.25, 0.0, 0.0];
+        let cfg = search_interval(&w, 2);
+        let t = Tensor::new(vec![8], cfg.apply(&w));
+        tiny.layers[0] = CompressedLayer::from_quantized("t.w", &t, &cfg, 4);
+    }
+    let r = store.publish(&tiny).unwrap();
+    assert_eq!(r.stats.compressed_sections, 0, "{:?}", r.stats);
+    assert_eq!(r.stats.stored_payload_bytes, r.stats.raw_payload_bytes);
+    assert_models_bit_equal(&store.open("tiny", None).unwrap().to_model().unwrap(), &tiny);
+
+    // a regular entry stream must be kept compressed, and still decode
+    // bit-exactly
+    let reg = repetitive_model();
+    let r = store.publish(&reg).unwrap();
+    assert!(r.stats.compressed_sections >= 1, "{:?}", r.stats);
+    assert!(
+        r.stats.stored_payload_bytes < r.stats.raw_payload_bytes,
+        "{:?}",
+        r.stats
+    );
+    assert_models_bit_equal(&store.open("regular", None).unwrap().to_model().unwrap(), &reg);
+}
+
+#[test]
+fn every_truncation_errs_and_every_bit_flip_errs_without_panic() {
+    let bytes = container::encode_model(&sample_model(4)).unwrap();
+
+    // the untouched container decodes
+    assert!(container::decode_model(bytes.clone()).is_ok());
+
+    // every prefix truncation is a typed Err
+    for len in 0..bytes.len() {
+        assert!(
+            container::decode_model(bytes[..len].to_vec()).is_err(),
+            "truncation at {len}/{} parsed",
+            bytes.len()
+        );
+    }
+
+    // every single-bit flip is caught by a CRC / bounds gate — full
+    // decode must return Err (and in particular must not panic)
+    for i in 0..bytes.len() {
+        for bit in 0..8 {
+            let mut buf = bytes.clone();
+            buf[i] ^= 1 << bit;
+            assert!(
+                container::decode_model(buf).is_err(),
+                "bit {bit} of byte {i} flipped but the container decoded"
+            );
+        }
+    }
+}
+
+#[test]
+fn gc_keeps_newest_healthy_and_corrupt_never_evicts_healthy() {
+    let store = ModelStore::open_root(store_root("gc")).unwrap();
+    for seed in [1, 2, 3] {
+        store.publish(&sample_model(seed)).unwrap();
+    }
+
+    // corrupt the NEWEST version on disk (payload byte flip)
+    let path = store.path_of("toy", 3);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(store.open("toy", Some(3)).and_then(|s| s.to_model()).is_err());
+
+    // keep=1: the corrupt v3 must not consume the retention quota —
+    // healthy v2 survives, v1 is retired as a plain old version
+    let rep = store.gc("toy", 1).unwrap();
+    assert_eq!(rep.kept, vec![2]);
+    assert_eq!(rep.removed, vec![1]);
+    assert_eq!(rep.corrupt_removed, vec![3]);
+    assert_eq!(store.list("toy").unwrap(), vec![2]);
+    assert!(store.open("toy", None).unwrap().to_model().is_ok());
+
+    // keep larger than what exists keeps everything
+    let rep = store.gc("toy", 8).unwrap();
+    assert_eq!(rep.kept, vec![2]);
+    assert!(rep.removed.is_empty() && rep.corrupt_removed.is_empty());
+}
+
+#[test]
+fn lazy_decode_isolates_per_layer_corruption() {
+    let store = ModelStore::open_root(store_root("lazy")).unwrap();
+    let m = sample_model(5);
+    let receipt = store.publish(&m).unwrap();
+
+    // flip one byte inside layer 1's payload section only
+    let offset = {
+        let sv = store.open("toy", None).unwrap();
+        assert_eq!(sv.lazy().layers.len(), 2);
+        sv.lazy().layers[1].section.offset
+    };
+    let mut bytes = std::fs::read(&receipt.path).unwrap();
+    bytes[offset] ^= 0x01;
+    std::fs::write(&receipt.path, &bytes).unwrap();
+
+    // the header still parses and the intact layer still decodes;
+    // only the damaged layer (and the eager whole-model path) fail
+    let sv = store.open("toy", None).unwrap();
+    let l0 = sv.lazy().layer(0).unwrap();
+    assert_eq!(l0.to_tensor().data(), m.layers[0].to_tensor().data());
+    assert!(sv.lazy().layer(1).is_err());
+    assert!(sv.to_model().is_err());
+    let (bn, bt) = sv.lazy().bias(0).unwrap();
+    assert_eq!((bn.as_str(), bt.data()), ("l0.b", &[0.5f32; 4][..]));
+}
+
+#[test]
+fn unsafe_model_names_are_refused() {
+    let store = ModelStore::open_root(store_root("names")).unwrap();
+    for bad in ["", "..", "../evil", "a/b", ".hidden", "sp ace"] {
+        let mut m = sample_model(6);
+        m.model_name = bad.into();
+        assert!(store.publish(&m).is_err(), "published {bad:?}");
+        assert!(store.open(bad, None).is_err());
+    }
+    // names with inner dots/dashes/underscores are fine
+    let mut m = sample_model(6);
+    m.model_name = "net-v2.5_final".into();
+    assert_eq!(store.publish(&m).unwrap().version, 1);
+}
+
+#[test]
+fn legacy_v1_files_load_through_the_same_front_door() {
+    let m = sample_model(7);
+    let dir = store_root("legacy");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("legacy.bin");
+    std::fs::write(&path, m.to_legacy_bytes().unwrap()).unwrap();
+    let loaded = CompressedModel::load(&path).unwrap();
+    assert_models_bit_equal(&loaded, &m);
+
+    // and a legacy model republishes into the store unchanged
+    let store = ModelStore::open_root(dir.join("store")).unwrap();
+    let receipt = store.publish(&loaded).unwrap();
+    assert_models_bit_equal(
+        &store.open(&receipt.name, None).unwrap().to_model().unwrap(),
+        &m,
+    );
+}

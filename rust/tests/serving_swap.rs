@@ -1,0 +1,420 @@
+//! Integration tests of zero-downtime hot swap: concurrent submitters
+//! across a `swap_model` must see logits bit-identical to the version
+//! their request was admitted under (pool widths {1, 2, 4, 8}), with
+//! zero dropped requests and no mixed-epoch batches; rollback restores
+//! the previous version mid-traffic; superseded backends are reclaimed
+//! (their last `Arc` dropped) once their admitted traffic drains.
+// Crate-root style allowances, matching rust/src/lib.rs (these used to
+// be -A flags on the Makefile's clippy invocation).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
+
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use admm_nn::backend::native::NativeBackend;
+use admm_nn::backend::sparse_infer::{prune_quantize_package, SparseInfer};
+use admm_nn::backend::TrainState;
+use admm_nn::data::{self, Dataset, Split};
+use admm_nn::serving::{
+    EngineConfig, InferBackend, InferRequest, ModelRegistry, ServingEngine,
+    ServingError,
+};
+use admm_nn::util::ThreadPool;
+
+/// Package a proxy model without training (structure is what matters);
+/// different seeds give different weights, so v1 and v2 logits differ.
+fn packaged(name: &str, keep: f64, seed: u64) -> (NativeBackend, SparseInfer) {
+    let nb = NativeBackend::open_with_batches(name, 8, 8).expect("backend");
+    let mut st = TrainState::init(nb.entry(), seed);
+    let model = prune_quantize_package(nb.entry(), name, &mut st, keep, 4, 8);
+    let sp = SparseInfer::new(&model, nb.entry()).expect("sparse form");
+    (nb, sp)
+}
+
+/// Deterministic version-tagged backend for scheduler-path tests:
+/// "logits" are the input scaled by the version (exact in f32 for the
+/// versions used here), after an optional delay to keep queues full.
+struct VersionedEcho {
+    version: f32,
+    dim: usize,
+    delay: Duration,
+}
+
+impl VersionedEcho {
+    fn arc(version: f32, delay_ms: u64) -> Arc<dyn InferBackend> {
+        Arc::new(VersionedEcho {
+            version,
+            dim: 4,
+            delay: Duration::from_millis(delay_ms),
+        })
+    }
+}
+
+impl InferBackend for VersionedEcho {
+    fn name(&self) -> &str {
+        "versioned-echo"
+    }
+
+    fn input_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_classes(&self) -> usize {
+        self.dim
+    }
+
+    fn infer_batch(
+        &self,
+        _pool: &ThreadPool,
+        x: &[f32],
+        _bsz: usize,
+    ) -> admm_nn::Result<Vec<f32>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(x.iter().map(|v| v * self.version).collect())
+    }
+}
+
+fn scaled(x: &[f32], version: f32) -> Vec<f32> {
+    x.iter().map(|v| v * version).collect()
+}
+
+/// Poll a model's counters until `pred` holds (the retirement bump runs
+/// on the dispatch thread after results are published, so observers may
+/// race it by a few microseconds).
+fn wait_for_stats(
+    engine: &ServingEngine,
+    model: &str,
+    what: &str,
+    pred: impl Fn(&admm_nn::metrics::ServingCounters) -> bool,
+) -> admm_nn::metrics::ServingCounters {
+    for _ in 0..2000 {
+        let s = engine.stats(model).expect("model registered");
+        if pred(&s) {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    panic!("stats never satisfied: {what}: {:?}", engine.stats(model));
+}
+
+/// The acceptance gate: N submitter threads queue a wave of requests,
+/// the main thread hot-swaps the model while that wave is still in
+/// flight, then the threads push a second wave. Every pre-swap request
+/// must return logits bit-identical to a serial v1 reference, every
+/// post-swap request bit-identical to v2 — at pool widths {1, 2, 4, 8},
+/// with zero drops and exactly one retired epoch once traffic drains.
+#[test]
+fn hot_swap_under_concurrent_load_is_epoch_pinned_and_lossless() {
+    const THREADS: usize = 4;
+    const HALF: usize = 6;
+
+    let (nb, sp1) = packaged("mlp", 0.15, 21);
+    let (_, sp2) = packaged("mlp", 0.10, 99);
+    let ds = data::for_input_shape(&nb.entry().input_shape);
+    let dim = sp1.input_dim();
+    let pool_x = ds.batch(Split::Test, 0, 48).x;
+    let row = |t: usize, i: usize| -> Vec<f32> {
+        let r = (t * 2 * HALF + i) % 48;
+        pool_x[r * dim..(r + 1) * dim].to_vec()
+    };
+
+    // serial references on a width-1 pool, for both versions
+    let serial = ThreadPool::new(1);
+    let ref_of = |sp: &SparseInfer, t: usize, i: usize| -> Vec<f32> {
+        sp.infer_with(&serial, &row(t, i), 1).expect("serial reference")
+    };
+
+    for width in [1usize, 2, 4, 8] {
+        let mut reg = ModelRegistry::new();
+        reg.register_versioned(
+            "mlp".into(),
+            Arc::new(packaged("mlp", 0.15, 21).1),
+            Some(1),
+        )
+        .unwrap();
+        let engine = ServingEngine::new(reg, EngineConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+            pool: Some(Arc::new(ThreadPool::new(width))),
+        })
+        .unwrap();
+        assert_eq!(engine.epoch(), 0);
+
+        let queued = Barrier::new(THREADS + 1);
+        let swapped = Barrier::new(THREADS + 1);
+        let results: Vec<(Vec<Vec<f32>>, Vec<Vec<f32>>)> =
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..THREADS)
+                    .map(|t| {
+                        let engine = &engine;
+                        let queued = &queued;
+                        let swapped = &swapped;
+                        let row = &row;
+                        s.spawn(move || {
+                            // wave 1: queued (not necessarily dispatched)
+                            // before the swap — admission pins epoch 0
+                            let w1: Vec<_> = (0..HALF)
+                                .map(|i| {
+                                    engine
+                                        .submit(InferRequest::new(
+                                            "mlp",
+                                            row(t, i),
+                                        ))
+                                        .expect("wave-1 submit")
+                                })
+                                .collect();
+                            queued.wait();
+                            swapped.wait();
+                            // wave 2: admitted strictly after the swap
+                            let w2: Vec<_> = (HALF..2 * HALF)
+                                .map(|i| {
+                                    engine
+                                        .submit(InferRequest::new(
+                                            "mlp",
+                                            row(t, i),
+                                        ))
+                                        .expect("wave-2 submit")
+                                })
+                                .collect();
+                            let r1: Vec<Vec<f32>> = w1
+                                .into_iter()
+                                .map(|tk| engine.wait(tk).expect("wave-1 wait"))
+                                .collect();
+                            let r2: Vec<Vec<f32>> = w2
+                                .into_iter()
+                                .map(|tk| engine.wait(tk).expect("wave-2 wait"))
+                                .collect();
+                            (r1, r2)
+                        })
+                    })
+                    .collect();
+
+                queued.wait();
+                let epoch = engine
+                    .swap_model(
+                        "mlp",
+                        Arc::new(packaged("mlp", 0.10, 99).1),
+                        Some(2),
+                    )
+                    .expect("swap under load");
+                assert_eq!(epoch, 1, "width {width}");
+                swapped.wait();
+
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+
+        for (t, (r1, r2)) in results.iter().enumerate() {
+            for (i, got) in r1.iter().enumerate() {
+                assert_eq!(
+                    got,
+                    &ref_of(&sp1, t, i),
+                    "width {width}: thread {t} pre-swap request {i} \
+                     drifted from its admitted version"
+                );
+            }
+            for (i, got) in r2.iter().enumerate() {
+                assert_eq!(
+                    got,
+                    &ref_of(&sp2, t, HALF + i),
+                    "width {width}: thread {t} post-swap request {i} \
+                     not served by the new version"
+                );
+            }
+        }
+
+        // zero drops, one swap, and the superseded epoch fully retired
+        // once its admitted traffic drained
+        let want = (THREADS * 2 * HALF) as u64;
+        let s = wait_for_stats(&engine, "mlp", "epoch retirement", |s| {
+            s.epochs_retired == 1
+        });
+        assert_eq!(s.submitted, want, "width {width}");
+        assert_eq!(s.completed, want, "width {width}: dropped requests");
+        assert_eq!(s.failed + s.expired, 0, "width {width}");
+        assert_eq!((s.swaps, s.rollbacks), (1, 0), "width {width}");
+    }
+}
+
+#[test]
+fn requests_admitted_before_swap_finish_on_their_admitted_version() {
+    let mut reg = ModelRegistry::new();
+    reg.register_versioned("echo".into(), VersionedEcho::arc(1.0, 10), Some(1))
+        .unwrap();
+    let engine = ServingEngine::new(reg, EngineConfig {
+        max_batch: 2,
+        max_wait: Duration::ZERO,
+        queue_cap: 64,
+        pool: None,
+    })
+    .unwrap();
+
+    let x_of = |i: usize| vec![i as f32 + 1.0; 4];
+    let pre: Vec<_> = (0..8)
+        .map(|i| engine.submit(InferRequest::new("echo", x_of(i))).unwrap())
+        .collect();
+    let epoch = engine
+        .swap_model("echo", VersionedEcho::arc(2.0, 0), Some(2))
+        .unwrap();
+    assert_eq!(epoch, 1);
+    let post: Vec<_> = (8..16)
+        .map(|i| engine.submit(InferRequest::new("echo", x_of(i))).unwrap())
+        .collect();
+
+    // pre-swap requests (mostly still queued during the swap) all run
+    // on v1; post-swap requests all run on v2 — a batch that mixed
+    // epochs would break one side or the other bit-exactly
+    for (i, t) in pre.into_iter().enumerate() {
+        assert_eq!(engine.wait(t).unwrap(), scaled(&x_of(i), 1.0), "pre {i}");
+    }
+    for (i, t) in post.into_iter().enumerate() {
+        let i = i + 8;
+        assert_eq!(engine.wait(t).unwrap(), scaled(&x_of(i), 2.0), "post {i}");
+    }
+
+    // lineage: v2 live, v1 kept as the rollback target
+    let lineage = engine.versions("echo").unwrap();
+    assert_eq!(lineage.len(), 2);
+    assert_eq!(
+        (lineage[0].epoch, lineage[0].store_version, lineage[0].live),
+        (1, Some(2), true)
+    );
+    assert_eq!(
+        (lineage[1].epoch, lineage[1].store_version, lineage[1].live),
+        (0, Some(1), false)
+    );
+
+    let s = wait_for_stats(&engine, "echo", "drain", |s| s.epochs_retired == 1);
+    assert_eq!((s.submitted, s.completed), (16, 16));
+    assert_eq!(s.failed + s.expired, 0);
+}
+
+#[test]
+fn rollback_mid_traffic_restores_the_previous_version() {
+    let mut reg = ModelRegistry::new();
+    reg.register_versioned("echo".into(), VersionedEcho::arc(1.0, 0), Some(1))
+        .unwrap();
+    let engine = ServingEngine::new(reg, EngineConfig {
+        max_batch: 1,
+        max_wait: Duration::ZERO,
+        queue_cap: 64,
+        pool: None,
+    })
+    .unwrap();
+    let x = vec![3.0f32; 4];
+
+    assert_eq!(engine.infer_sync(InferRequest::new("echo", x.clone())).unwrap(),
+               scaled(&x, 1.0));
+
+    // swap to a slow v2, queue traffic against it, then roll back while
+    // that traffic is still in flight
+    engine.swap_model("echo", VersionedEcho::arc(2.0, 5), Some(2)).unwrap();
+    let inflight: Vec<_> = (0..4)
+        .map(|_| engine.submit(InferRequest::new("echo", x.clone())).unwrap())
+        .collect();
+    let epoch = engine.rollback("echo").unwrap();
+    assert_eq!(epoch, 2);
+
+    // v2-admitted traffic still completes on v2 — zero drops
+    for t in inflight {
+        assert_eq!(engine.wait(t).unwrap(), scaled(&x, 2.0));
+    }
+    // new traffic is back on v1
+    assert_eq!(engine.infer_sync(InferRequest::new("echo", x.clone())).unwrap(),
+               scaled(&x, 1.0));
+    let lineage = engine.versions("echo").unwrap();
+    assert_eq!(
+        (lineage[0].store_version, lineage[0].live),
+        (Some(1), true)
+    );
+    assert_eq!((lineage[1].store_version, lineage[1].live), (Some(2), false));
+
+    // rollback toggles: rolling back again returns to v2
+    engine.rollback("echo").unwrap();
+    assert_eq!(engine.infer_sync(InferRequest::new("echo", x.clone())).unwrap(),
+               scaled(&x, 2.0));
+
+    let s = wait_for_stats(&engine, "echo", "all epochs retired", |s| {
+        s.epochs_retired == 3
+    });
+    assert_eq!((s.swaps, s.rollbacks), (1, 2));
+    assert_eq!(s.submitted, s.completed);
+    assert_eq!(s.failed + s.expired, 0);
+}
+
+#[test]
+fn swap_and_rollback_reject_typed() {
+    let mut reg = ModelRegistry::new();
+    reg.register_versioned("echo".into(), VersionedEcho::arc(1.0, 0), None)
+        .unwrap();
+    let engine = ServingEngine::new(reg, EngineConfig::default()).unwrap();
+
+    assert_eq!(
+        engine.swap_model("ghost", VersionedEcho::arc(2.0, 0), None),
+        Err(ServingError::UnknownModel("ghost".into()))
+    );
+    assert_eq!(
+        engine.rollback("ghost"),
+        Err(ServingError::UnknownModel("ghost".into()))
+    );
+    // a model that has never been swapped has nothing to roll back to
+    assert_eq!(
+        engine.rollback("echo"),
+        Err(ServingError::NoPreviousVersion("echo".into()))
+    );
+    assert!(engine.versions("ghost").is_none());
+    // failed control-plane calls did not move the epoch
+    assert_eq!(engine.epoch(), 0);
+}
+
+#[test]
+fn superseded_backends_are_reclaimed_after_drain() {
+    let b1 = VersionedEcho::arc(1.0, 0);
+    let weak1 = Arc::downgrade(&b1);
+    let mut reg = ModelRegistry::new();
+    reg.register_versioned("echo".into(), b1, Some(1)).unwrap();
+    let engine = ServingEngine::new(reg, EngineConfig {
+        max_batch: 4,
+        max_wait: Duration::ZERO,
+        queue_cap: 64,
+        pool: None,
+    })
+    .unwrap();
+    let x = vec![1.0f32; 4];
+    assert_eq!(engine.infer_sync(InferRequest::new("echo", x.clone())).unwrap(),
+               scaled(&x, 1.0));
+
+    let b2 = VersionedEcho::arc(2.0, 0);
+    let weak2 = Arc::downgrade(&b2);
+    engine.swap_model("echo", b2, Some(2)).unwrap();
+    assert_eq!(engine.infer_sync(InferRequest::new("echo", x.clone())).unwrap(),
+               scaled(&x, 2.0));
+    // v1 is still pinned — it is the rollback target
+    assert!(weak1.upgrade().is_some());
+
+    engine.swap_model("echo", VersionedEcho::arc(3.0, 0), Some(3)).unwrap();
+    assert_eq!(engine.infer_sync(InferRequest::new("echo", x.clone())).unwrap(),
+               scaled(&x, 3.0));
+
+    // v1 left the prev slot and its traffic has drained: its last Arc
+    // must drop (the dispatch thread may hold it a beat longer)
+    let mut reclaimed = false;
+    for _ in 0..2000 {
+        if weak1.upgrade().is_none() {
+            reclaimed = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(reclaimed, "superseded v1 backend still referenced");
+    // v2 remains pinned as the current rollback target
+    assert!(weak2.upgrade().is_some());
+
+    let s = wait_for_stats(&engine, "echo", "retire", |s| s.epochs_retired == 2);
+    assert_eq!(s.swaps, 2);
+    assert_eq!(s.submitted, s.completed);
+}
