@@ -18,6 +18,10 @@
 #   make bench-store  — just the versioned-model-store cases (publish,
 #                       eager vs lazy open, hot-swap latency under a
 #                       deep queue), written to BENCH_store.json
+#   make bench-train  — just the sharded train/eval width sweep
+#                       (train_step + evaluate at pool widths 1/2/4/8
+#                       on lenet5 and resnet_proxy shapes, speedups vs
+#                       width 1), written to BENCH_train.json
 #   make bench-report — run the benchmarks, then diff the fresh
 #                       BENCH_hot_paths.json against the committed
 #                       BENCH_baseline.json, printing per-path speedup
@@ -37,7 +41,7 @@
 #   make tsan         — run the serving/pool tests under ThreadSanitizer
 #                       (nightly-only; skips with a note when absent)
 
-.PHONY: verify lint miri tsan bench bench-serving bench-gemm bench-store bench-report
+.PHONY: verify lint miri tsan bench bench-serving bench-gemm bench-store bench-train bench-report
 
 # Style allowances now live as crate-level #![allow] attributes in each
 # crate root (rust/src/lib.rs documents why); everything else is -D.
@@ -88,6 +92,9 @@ bench-gemm:
 
 bench-store:
 	BENCH_JSON_DIR=$(CURDIR) BENCH_ONLY=store cargo bench --bench hot_paths -- --json
+
+bench-train:
+	BENCH_JSON_DIR=$(CURDIR) BENCH_ONLY=train cargo bench --bench hot_paths -- --json
 
 bench-report: bench
 	@cp BENCH_baseline.json .bench_baseline.before 2>/dev/null || true

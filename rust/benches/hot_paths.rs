@@ -119,6 +119,15 @@ fn main() {
         suite.finish();
         return;
     }
+    // `make bench-train` runs just the sharded train/eval width sweep
+    // into its own BENCH_train.json (train_step + evaluate at pinned
+    // pool widths {1, 2, 4, 8} on the lenet5 / resnet_proxy shapes).
+    if std::env::var("BENCH_ONLY").ok().as_deref() == Some("train") {
+        let mut suite = BenchSuite::new("train");
+        train_benches(&mut suite);
+        suite.finish();
+        return;
+    }
     let mut suite = BenchSuite::new("hot_paths");
     println!("== L3 hot paths ==");
     let mut rng = Rng::new(42);
@@ -442,8 +451,71 @@ fn main() {
     gemm_benches(&mut suite);
     serving_benches(&mut suite);
     store_benches(&mut suite);
+    train_benches(&mut suite);
 
     suite.finish();
+}
+
+/// Data-parallel sharded training: `train_step` and `evaluate`
+/// throughput at pinned pool widths {1, 2, 4, 8} on the lenet5 and
+/// resnet_proxy shapes, with the speedup of every width over the
+/// width-1 serial fallback. Results are bit-identical across widths
+/// (the `train_shard` property suite pins that); these cases price the
+/// batch-sharded fan-out + fixed-order reduction. Width 1 is the old
+/// single-lane cost — the acceptance bar is >1.5x on `train_step` at
+/// width 4.
+fn train_benches(suite: &mut BenchSuite) {
+    use admm_nn::backend::native::NativeBackend;
+    use admm_nn::backend::{Hyper, ModelExec, TrainState};
+    use admm_nn::data::{self, Dataset, Split};
+
+    println!("\n== sharded train/eval (pool width sweep) ==");
+    let cases: [(&str, usize, usize, usize); 2] =
+        [("lenet5", 32, 2, 10), ("resnet_proxy", 16, 1, 5)];
+    for (name, bsz, warmup, iters) in cases {
+        let mut base_train = None;
+        let mut base_eval = None;
+        for width in [1usize, 2, 4, 8] {
+            let nb = NativeBackend::open_with_batches(name, bsz, bsz)
+                .expect("native backend")
+                .with_pool(ThreadPool::new(width));
+            let ds = data::for_input_shape(&nb.entry().input_shape);
+            let mut st = TrainState::init(nb.entry(), 5);
+            let hyper = Hyper::default();
+            let batch = ds.batch(Split::Train, 0, bsz);
+            let tr = suite.bench(
+                &format!("train_step {name} b={bsz} width={width}"),
+                warmup,
+                iters,
+                || {
+                    black_box(nb.train_step(&mut st, &hyper, &batch).unwrap().loss);
+                },
+            );
+            let ev = suite.bench(
+                &format!("evaluate {name} b={bsz} width={width}"),
+                warmup,
+                iters,
+                || {
+                    black_box(nb.evaluate(&st, &*ds, 1).unwrap().correct);
+                },
+            );
+            if let (Some(bt), Some(be)) = (&base_train, &base_eval) {
+                suite.speedup(
+                    &format!("train_step {name} b={bsz} width {width} vs 1"),
+                    bt,
+                    &tr,
+                );
+                suite.speedup(
+                    &format!("evaluate {name} b={bsz} width {width} vs 1"),
+                    be,
+                    &ev,
+                );
+            } else {
+                base_train = Some(tr);
+                base_eval = Some(ev);
+            }
+        }
+    }
 }
 
 /// Packed cache-blocked GEMM vs the naive reference at the proxy-model

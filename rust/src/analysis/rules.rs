@@ -98,10 +98,13 @@ pub const HOT_FNS: &[(&str, &[&str])] = &[
             "conv_backward",
             "forward",
             "ce_stats",
+            "ce_stats_rows",
             "backward",
             "recycle_tape",
             "train_step",
+            "train_shard",
             "evaluate",
+            "eval_shard",
             "infer",
             "maxpool2_into",
             "global_avg_pool_into",

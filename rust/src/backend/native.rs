@@ -17,23 +17,48 @@
 //! which is the documented argument-for-argument contract of the AOT
 //! train artifact (`runtime::session`). The heavy GEMMs run through the
 //! packed cache-blocked kernels of [`crate::tensor`], fanned out across
-//! the global [`ThreadPool`] in row blocks (bit-identical to serial at
-//! any width) with the bias-add / ReLU epilogue fused into the GEMM
+//! the [`ThreadPool`] in row blocks (bit-identical to serial at any
+//! width) with the bias-add / ReLU epilogue fused into the GEMM
 //! write-out ([`crate::tensor::Epilogue`]); everything is deterministic
 //! for a fixed seed, so tests and the pipeline behave identically
 //! across machines. Numerical agreement with the PJRT backend is
 //! tolerance-level, not bit-exact (different kernels and reduction
 //! orders).
 //!
+//! ## Data-parallel sharded training
+//!
+//! `train_step` and `evaluate` split each batch's rows into contiguous
+//! shards and run forward(+backward) per shard across the pool's
+//! lanes. The shard partition is a fixed function of the batch size
+//! alone ([`crate::util::shard_count`]`(bsz, MAX_SHARDS)` balanced
+//! contiguous ranges — never of pool width or scheduling order), and
+//! every cross-shard reduction (weight/bias gradient partials, loss
+//! and correct-count scalars) merges serially in ascending shard
+//! index. Together with the width-invariant GEMM contract of
+//! [`crate::tensor`], sharded results are therefore **bit-identical at
+//! any pool width**: width 1 (`ADMM_NN_THREADS=1`) runs the very same
+//! shard loop inline on the caller, so serial debugging reproduces
+//! parallel runs exactly (property-tested at widths {1, 2, 4, 8},
+//! uneven splits included, in `tests/train_shard.rs`). The fused
+//! ADAM+ADMM update splits its parameter sweep into fixed
+//! `UPDATE_CHUNK` blocks — elementwise arithmetic, so chunking cannot
+//! move a bit there either. Note the shard-order gradient reduction is
+//! a *different* (but fixed) float summation tree than an unsharded
+//! whole-batch backward: gradients agree with the single-pass form to
+//! tolerance, not bitwise — the bit-exact contract is across widths,
+//! seeds, and machines for a given batch size.
+//!
 //! Steady-state train steps and inference batches allocate nothing on
 //! the hot path: every working buffer (im2col patch matrices, masked
 //! weights, activations, the backward tape, gradients, argmax maps)
 //! comes from a persistent [`BufPool`] scratch arena owned by the
-//! backend ([`Scratch`], behind one `Mutex` locked once per entry
-//! point). Buffers are taken and returned in a deterministic order each
-//! step, so capacities converge after warmup and
-//! [`NativeBackend::scratch_grow_count`] goes flat — the
-//! workspace-reuse instrumentation tests pin exactly that.
+//! backend ([`Workspaces`]: a caller-side [`Scratch`] plus one
+//! per-shard slot leased by index from [`Lanes`], all behind one
+//! `Mutex` locked once per entry point). Shard `s` always runs against
+//! slot `s`, so every arena sees the same take/put length sequence
+//! each step, capacities converge after warmup, and
+//! [`NativeBackend::scratch_grow_count`] (summed over all arenas) goes
+//! flat — the workspace-reuse instrumentation tests pin exactly that.
 //!
 //! Supported models: all five proxies. `mlp`, `lenet5`,
 //! `alexnet_proxy`, and `vgg_proxy` are straight-line conv/pool/dense
@@ -52,12 +77,26 @@ use crate::data::{Batch, Dataset, Split};
 use crate::metrics::EvalStats;
 use crate::runtime::manifest::{ModelEntry, ParamEntry};
 use crate::tensor::{self, Epilogue, Tensor};
-use crate::util::{BufPool, ThreadPool};
+use crate::util::{shard_count, shard_range, BufPool, Lanes, ThreadPool};
 
 // ADAM constants — fixed by python/compile/model.py for every artifact.
 const ADAM_B1: f32 = 0.9;
 const ADAM_B2: f32 = 0.999;
 const ADAM_EPS: f32 = 1e-8;
+
+/// Upper bound on batch shards per train/eval step. A fixed constant —
+/// deliberately *not* the pool width — so the shard partition, and the
+/// fixed-shard-order reduction tree over it, never depends on how many
+/// threads happen to exist. Pools wider than the shard count still
+/// help: the per-shard GEMM row splits and the update sweep absorb the
+/// extra lanes.
+const MAX_SHARDS: usize = 8;
+
+/// Fixed block length of the parameter-sweep splits (gradient merge,
+/// ADMM penalty, fused ADAM update). A constant for the same reason as
+/// [`MAX_SHARDS`]: per-block penalty partials merge in block order, so
+/// block boundaries must not move with pool width.
+const UPDATE_CHUNK: usize = 32 * 1024;
 
 /// One step of a forward plan. `li` indexes the manifest *weight* order
 /// (the same order masks/Z/U/ρ use). Plans are straight-line except for
@@ -587,6 +626,34 @@ pub(crate) struct Scratch {
     pub u: BufPool<u32>,
 }
 
+/// Per-shard workspace slot of the sharded train/eval paths: the
+/// shard's own [`Scratch`] arena (slot index == shard index, always —
+/// see [`Lanes`]) plus its reduction outputs, written by exactly one
+/// lane per step and read back on the caller in ascending shard order.
+#[derive(Default)]
+struct ShardSlot {
+    sc: Scratch,
+    /// Per-param gradient partials from this shard's backward; the
+    /// buffers belong to `sc` and are drained back into it after every
+    /// merge (and defensively at the start of the next shard run).
+    grads: Vec<Vec<f32>>,
+    /// Σ per-row negative log-likelihood over this shard's rows.
+    nll: f64,
+    /// Correct-prediction count over this shard's rows.
+    correct: f64,
+    /// Shard failure, surfaced to the caller in shard order.
+    err: Option<anyhow::Error>,
+}
+
+/// Every hot-path workspace behind the backend's single scratch mutex:
+/// the caller-side arena (merged gradients, unsharded `infer`) plus
+/// one [`ShardSlot`] per batch shard.
+#[derive(Default)]
+struct Workspaces {
+    main: Scratch,
+    shards: Lanes<ShardSlot>,
+}
+
 /// The pure-Rust [`ModelExec`] implementation.
 pub struct NativeBackend {
     name: String,
@@ -600,7 +667,10 @@ pub struct NativeBackend {
     is_weight: Vec<Option<usize>>,
     /// Hot-path workspaces; locked once per entry point (`train_step`,
     /// `evaluate`, `infer`), never nested.
-    scratch: Mutex<Scratch>,
+    scratch: Mutex<Workspaces>,
+    /// Pool backing the sharded fan-outs and GEMM row splits; `None`
+    /// means the process-global pool (`ADMM_NN_THREADS`).
+    pool: Option<ThreadPool>,
 }
 
 impl NativeBackend {
@@ -656,15 +726,39 @@ impl NativeBackend {
             ops,
             widx,
             is_weight,
-            scratch: Mutex::new(Scratch::default()),
+            scratch: Mutex::new(Workspaces::default()),
+            pool: None,
         })
     }
 
-    /// Workspace growth events so far (both element types) — the
+    /// Pin the thread pool backing the sharded train/eval fan-outs and
+    /// the GEMM row splits (the default is the process-global pool,
+    /// sized by `ADMM_NN_THREADS`). Results are bit-identical at any
+    /// width — this is a speed knob, never a semantics knob — which is
+    /// exactly what the width-{1,2,4,8} property tests pin by swapping
+    /// pools here.
+    pub fn with_pool(mut self, pool: ThreadPool) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    fn pool(&self) -> &ThreadPool {
+        match &self.pool {
+            Some(p) => p,
+            None => ThreadPool::global(),
+        }
+    }
+
+    /// Workspace growth events so far (both element types, summed over
+    /// the caller-side arena and every per-shard arena) — the
     /// zero-alloc instrumentation hook: flat across steady-state steps.
     pub fn scratch_grow_count(&self) -> usize {
-        let sc = self.scratch.lock().unwrap();
-        sc.f.grow_count() + sc.u.grow_count()
+        let ws = self.scratch.lock().unwrap();
+        let mut n = ws.main.f.grow_count() + ws.main.u.grow_count();
+        for slot in ws.shards.slots() {
+            n += slot.sc.f.grow_count() + slot.sc.u.grow_count();
+        }
+        n
     }
 
     /// Masked weight W⊙M for weight layer `li`, taken from the scratch
@@ -784,7 +878,7 @@ impl NativeBackend {
         bsz: usize,
         record: bool,
     ) -> crate::Result<(Vec<f32>, Vec<Rec>)> {
-        let pool = ThreadPool::global();
+        let pool = self.pool();
         let in_elems: usize = self.entry.input_shape.iter().product();
         if x.len() != bsz * in_elems {
             return Err(anyhow!(
@@ -943,22 +1037,29 @@ impl NativeBackend {
         Ok((cur, tape))
     }
 
-    /// Mean softmax-CE + #correct over flat logits; fills `dlogits` with
-    /// ∂(mean CE)/∂logits = (softmax − onehot)/bsz when requested.
-    fn ce_stats(
+    /// Softmax-CE partials over `rows` logit rows: returns (Σ per-row
+    /// NLL, #correct) **unnormalized**, and fills `dlogits` with
+    /// ∂(mean CE over the full batch)/∂logits = (softmax − onehot)/`bsz`
+    /// when requested. `bsz` is the row count the CE *mean* normalizes
+    /// over — equal to `rows` for an unsharded call, the global batch
+    /// size when `rows` is one shard of it, so per-shard cotangents are
+    /// already on the whole-batch scale and partials merge by plain
+    /// summation in shard order.
+    fn ce_stats_rows(
         logits: &[f32],
         y: &[i32],
+        rows: usize,
         bsz: usize,
         classes: usize,
         mut dlogits: Option<&mut Vec<f32>>,
     ) -> (f64, f64) {
         if let Some(d) = dlogits.as_mut() {
             d.clear();
-            d.resize(bsz * classes, 0.0);
+            d.resize(rows * classes, 0.0);
         }
         let mut nll_sum = 0.0f64;
         let mut correct = 0.0f64;
-        for b in 0..bsz {
+        for b in 0..rows {
             let row = &logits[b * classes..(b + 1) * classes];
             let label = y[b] as usize;
             let m = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
@@ -986,6 +1087,20 @@ impl NativeBackend {
                 }
             }
         }
+        (nll_sum, correct)
+    }
+
+    /// Mean softmax-CE + #correct over flat logits; fills `dlogits` with
+    /// ∂(mean CE)/∂logits = (softmax − onehot)/bsz when requested.
+    fn ce_stats(
+        logits: &[f32],
+        y: &[i32],
+        bsz: usize,
+        classes: usize,
+        dlogits: Option<&mut Vec<f32>>,
+    ) -> (f64, f64) {
+        let (nll_sum, correct) =
+            Self::ce_stats_rows(logits, y, bsz, bsz, classes, dlogits);
         (nll_sum / bsz as f64, correct)
     }
 
@@ -1002,7 +1117,7 @@ impl NativeBackend {
         dlogits: Vec<f32>,
         bsz: usize,
     ) -> Vec<Vec<f32>> {
-        let pool = ThreadPool::global();
+        let pool = self.pool();
         let mut grads: Vec<Vec<f32>> = self
             .entry
             .params
@@ -1148,6 +1263,64 @@ impl NativeBackend {
             }
         }
     }
+
+    /// One shard of a sharded train step: forward + CE partials +
+    /// backward over `rows` contiguous batch rows, entirely inside this
+    /// shard's own workspace slot. `bsz` is the full batch size the CE
+    /// mean (and its cotangent) normalizes over. Leaves the shard's
+    /// gradient and scalar partials on the slot for the caller's
+    /// fixed-order merge.
+    #[allow(clippy::too_many_arguments)]
+    fn train_shard(
+        &self,
+        slot: &mut ShardSlot,
+        params: &[Tensor],
+        masks: &[Tensor],
+        x: &[f32],
+        y: &[i32],
+        rows: usize,
+        bsz: usize,
+        classes: usize,
+    ) -> crate::Result<()> {
+        // drain leftovers if a previous step errored before the merge
+        for g in slot.grads.drain(..) {
+            slot.sc.f.put(g);
+        }
+        let sc = &mut slot.sc;
+        let (logits, tape) = self.forward(sc, params, masks, x, rows, true)?;
+        let mut dlogits = sc.f.take_uninit(0);
+        let (nll, correct) =
+            Self::ce_stats_rows(&logits, y, rows, bsz, classes, Some(&mut dlogits));
+        slot.grads = self.backward(sc, params, masks, &tape, dlogits, rows);
+        self.recycle_tape(sc, tape);
+        sc.f.put(logits);
+        slot.nll = nll;
+        slot.correct = correct;
+        Ok(())
+    }
+
+    /// One shard of a sharded evaluate: forward (no tape) + CE partials
+    /// over `rows` contiguous eval rows in this shard's workspace slot.
+    #[allow(clippy::too_many_arguments)]
+    fn eval_shard(
+        &self,
+        slot: &mut ShardSlot,
+        params: &[Tensor],
+        masks: &[Tensor],
+        x: &[f32],
+        y: &[i32],
+        rows: usize,
+        classes: usize,
+    ) -> crate::Result<()> {
+        let sc = &mut slot.sc;
+        let (logits, _) = self.forward(sc, params, masks, x, rows, false)?;
+        let (nll, correct) =
+            Self::ce_stats_rows(&logits, y, rows, rows, classes, None);
+        sc.f.put(logits);
+        slot.nll = nll;
+        slot.correct = correct;
+        Ok(())
+    }
 }
 
 impl ModelExec for NativeBackend {
@@ -1168,18 +1341,96 @@ impl ModelExec for NativeBackend {
         let bsz = batch.batch;
         debug_assert_eq!(bsz, self.entry.train_batch);
         let classes = self.entry.n_classes;
+        let in_elems: usize = self.entry.input_shape.iter().product();
+        let pool = self.pool();
+        let n_shards = shard_count(bsz, MAX_SHARDS);
 
-        let sc = &mut *self.scratch.lock().unwrap();
-        let (logits, tape) =
-            self.forward(sc, &st.params, &st.masks, &batch.x, bsz, true)?;
-        let mut dlogits = sc.f.take_uninit(0);
-        let (data_loss, correct) =
-            Self::ce_stats(&logits, &batch.y, bsz, classes, Some(&mut dlogits));
-        let mut grads = self.backward(sc, &st.params, &st.masks, &tape, dlogits, bsz);
-        self.recycle_tape(sc, tape);
-        sc.f.put(logits);
+        let ws = &mut *self.scratch.lock().unwrap();
+        let slots = ws.shards.lease(n_shards);
+        // Fan the shards out one slot per lane task; the chunk index is
+        // the shard index, so slot `s` always computes shard `s`
+        // regardless of which lane picks it up (at width 1 this loop
+        // runs inline on the caller, in shard order — the documented
+        // serial fallback).
+        {
+            let (params, masks) = (&st.params, &st.masks);
+            pool.par_chunks_mut(&mut *slots, 1, |s, slot| {
+                let slot = &mut slot[0];
+                let r = shard_range(bsz, n_shards, s);
+                let res = self.train_shard(
+                    slot,
+                    params,
+                    masks,
+                    &batch.x[r.start * in_elems..r.end * in_elems],
+                    &batch.y[r.clone()],
+                    r.len(),
+                    bsz,
+                    classes,
+                );
+                if let Err(e) = res {
+                    slot.err = Some(e);
+                }
+            });
+        }
+        if slots.iter().any(|slot| slot.err.is_some()) {
+            let mut first = None;
+            for slot in slots.iter_mut() {
+                for g in slot.grads.drain(..) {
+                    slot.sc.f.put(g);
+                }
+                let e = slot.err.take();
+                if first.is_none() {
+                    first = e;
+                }
+            }
+            return Err(first.expect("shard error vanished"));
+        }
 
-        // ADMM penalty + L1 subgradient + hard masks on the weight grads.
+        // Fixed-order shard reduction: partials merge in ascending
+        // shard index, never in completion order — per element for
+        // gradients, per scalar for loss/accuracy. The gradient merge
+        // fans out over fixed element blocks; each element's shard sum
+        // is the same serial loop either way, so block boundaries (and
+        // pool width) cannot move a bit.
+        let main = &mut ws.main;
+        let mut grads: Vec<Vec<f32>> = self
+            .entry
+            .params
+            .iter()
+            .map(|p| main.f.take_uninit(p.numel()))
+            // lint:allow(hot-path-alloc) O(n_params) container; buffers come from the pool
+            .collect();
+        {
+            let slots = &*slots;
+            for (pi, out) in grads.iter_mut().enumerate() {
+                pool.par_chunks_mut(&mut out[..], UPDATE_CHUNK, |b, ch| {
+                    let off = b * UPDATE_CHUNK;
+                    ch.copy_from_slice(&slots[0].grads[pi][off..off + ch.len()]);
+                    for slot in &slots[1..] {
+                        let part = &slot.grads[pi][off..off + ch.len()];
+                        for (o, &v) in ch.iter_mut().zip(part) {
+                            *o += v;
+                        }
+                    }
+                });
+            }
+        }
+        let mut data_nll = 0.0f64;
+        let mut correct = 0.0f64;
+        for slot in slots.iter_mut() {
+            data_nll += slot.nll;
+            correct += slot.correct;
+            for g in slot.grads.drain(..) {
+                slot.sc.f.put(g);
+            }
+        }
+        let data_loss = data_nll / bsz as f64;
+
+        // ADMM penalty + L1 subgradient + hard masks on the weight
+        // grads, split into fixed UPDATE_CHUNK blocks: per-block f64
+        // penalty partials come back in block order (the par_chunk_map
+        // contract) and merge serially, so the summation tree is fixed
+        // by the layer size alone; the grad adjustment is elementwise.
         let mut penalty = 0.0f64;
         for (li, &(wi, _)) in self.widx.iter().enumerate() {
             let w = st.params[wi].data();
@@ -1189,23 +1440,41 @@ impl ModelExec for NativeBackend {
             let rho = st.rhos[li];
             let l1 = hyper.l1_lambda;
             let gw = &mut grads[wi];
-            for ((((gv, &wv), &zv), &uv), &mv) in
-                gw.iter_mut().zip(w).zip(z).zip(u).zip(m)
-            {
-                let d = wv - zv + uv;
-                penalty += 0.5 * (rho as f64) * (d as f64) * (d as f64);
-                let sign = if wv > 0.0 {
-                    1.0
-                } else if wv < 0.0 {
-                    -1.0
-                } else {
-                    0.0
-                };
-                *gv = (*gv + rho * d + l1 * sign) * mv;
+            let n = gw.len();
+            let blocks = (n + UPDATE_CHUNK - 1) / UPDATE_CHUNK;
+            let parts = pool.par_chunk_map(n, blocks, |_, range| {
+                let mut p = 0.0f64;
+                for i in range {
+                    let d = w[i] - z[i] + u[i];
+                    p += 0.5 * (rho as f64) * (d as f64) * (d as f64);
+                }
+                p
+            });
+            for p in parts {
+                penalty += p;
             }
+            pool.par_chunks_mut(&mut gw[..], UPDATE_CHUNK, |b, ch| {
+                let off = b * UPDATE_CHUNK;
+                for (i, gv) in ch.iter_mut().enumerate() {
+                    let wv = w[off + i];
+                    let d = wv - z[off + i] + u[off + i];
+                    let sign = if wv > 0.0 {
+                        1.0
+                    } else if wv < 0.0 {
+                        -1.0
+                    } else {
+                        0.0
+                    };
+                    *gv = (*gv + rho * d + l1 * sign) * m[off + i];
+                }
+            });
         }
 
-        // ADAM with bias correction; step is 1-based, weights re-masked.
+        // ADAM with bias correction; step is 1-based, weights
+        // re-masked. Elementwise over fixed UPDATE_CHUNK triples of
+        // (param, m, v) — identical per-element arithmetic to the
+        // serial sweep, so any chunking and any width produce the same
+        // bits.
         let t = st.step;
         let bc1 = 1.0 - ADAM_B1.powf(t);
         let bc2 = 1.0 - ADAM_B2.powf(t);
@@ -1214,23 +1483,28 @@ impl ModelExec for NativeBackend {
             let p = st.params[pi].data_mut();
             let m = st.adam_m[pi].data_mut();
             let v = st.adam_v[pi].data_mut();
-            for i in 0..p.len() {
-                let gi = g[i];
-                m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * gi;
-                v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * gi * gi;
-                let mhat = m[i] / bc1;
-                let vhat = v[i] / bc2;
-                p[i] -= hyper.lr * mhat / (vhat.sqrt() + ADAM_EPS);
-            }
-            if let Some(li) = is_weight[pi] {
-                let mask = st.masks[li].data();
-                for (pv, &mv) in p.iter_mut().zip(mask) {
-                    *pv *= mv;
+            let mask = is_weight[pi].map(|li| st.masks[li].data());
+            pool.par_chunks_mut3(p, m, v, UPDATE_CHUNK, |b, pc, mc, vc| {
+                let off = b * UPDATE_CHUNK;
+                let gc = &g[off..off + pc.len()];
+                for i in 0..pc.len() {
+                    let gi = gc[i];
+                    mc[i] = ADAM_B1 * mc[i] + (1.0 - ADAM_B1) * gi;
+                    vc[i] = ADAM_B2 * vc[i] + (1.0 - ADAM_B2) * gi * gi;
+                    let mhat = mc[i] / bc1;
+                    let vhat = vc[i] / bc2;
+                    pc[i] -= hyper.lr * mhat / (vhat.sqrt() + ADAM_EPS);
                 }
-            }
+                if let Some(mask) = mask {
+                    let mk = &mask[off..off + pc.len()];
+                    for (pv, &mv) in pc.iter_mut().zip(mk) {
+                        *pv *= mv;
+                    }
+                }
+            });
         }
         for g in grads.drain(..) {
-            sc.f.put(g);
+            main.f.put(g);
         }
         st.step += 1.0;
         Ok(StepStats {
@@ -1247,15 +1521,55 @@ impl ModelExec for NativeBackend {
     ) -> crate::Result<EvalStats> {
         let b = self.entry.eval_batch;
         let classes = self.entry.n_classes;
+        let in_elems: usize = self.entry.input_shape.iter().product();
+        let pool = self.pool();
+        let n_shards = shard_count(b, MAX_SHARDS);
         let mut stats = EvalStats::default();
-        let sc = &mut *self.scratch.lock().unwrap();
+        let ws = &mut *self.scratch.lock().unwrap();
+        let slots = ws.shards.lease(n_shards);
         for i in 0..n_batches {
             let batch = data.batch(Split::Test, i, b);
-            let (logits, _) =
-                self.forward(sc, &st.params, &st.masks, &batch.x, b, false)?;
-            let (loss, correct) = Self::ce_stats(&logits, &batch.y, b, classes, None);
-            sc.f.put(logits);
-            stats.push(loss, correct, b);
+            // same sharding + fixed-order merge as train_step; forward
+            // is row-local and GEMM reductions never cross batch rows,
+            // so per-shard logits equal the whole-batch logits bitwise
+            // and `evaluate` stays exactly consistent with `infer`.
+            {
+                let (params, masks) = (&st.params, &st.masks);
+                let batch = &batch;
+                pool.par_chunks_mut(&mut *slots, 1, |s, slot| {
+                    let slot = &mut slot[0];
+                    let r = shard_range(b, n_shards, s);
+                    let res = self.eval_shard(
+                        slot,
+                        params,
+                        masks,
+                        &batch.x[r.start * in_elems..r.end * in_elems],
+                        &batch.y[r.clone()],
+                        r.len(),
+                        classes,
+                    );
+                    if let Err(e) = res {
+                        slot.err = Some(e);
+                    }
+                });
+            }
+            // fixed shard-order merge of the per-shard partials
+            let mut err = None;
+            let mut nll = 0.0f64;
+            let mut correct = 0.0f64;
+            for slot in slots.iter_mut() {
+                if let Some(e) = slot.err.take() {
+                    if err.is_none() {
+                        err = Some(e);
+                    }
+                }
+                nll += slot.nll;
+                correct += slot.correct;
+            }
+            if let Some(e) = err {
+                return Err(e);
+            }
+            stats.push(nll / b as f64, correct, b);
         }
         Ok(stats)
     }
@@ -1263,8 +1577,12 @@ impl ModelExec for NativeBackend {
     fn infer(&self, st: &TrainState, x: &[f32], b: usize) -> crate::Result<Vec<f32>> {
         // The returned logits escape to the caller (API contract), so
         // they leave the arena; every internal buffer stays pooled.
-        let sc = &mut *self.scratch.lock().unwrap();
-        let (logits, _) = self.forward(sc, &st.params, &st.masks, x, b, false)?;
+        // Unsharded on purpose: forward is partition-invariant (see
+        // `evaluate`), so there is nothing to merge and the row-blocked
+        // GEMMs already use the full pool.
+        let ws = &mut *self.scratch.lock().unwrap();
+        let (logits, _) =
+            self.forward(&mut ws.main, &st.params, &st.masks, x, b, false)?;
         Ok(logits)
     }
 
@@ -1365,7 +1683,8 @@ mod tests {
         let hyper = Hyper { lr: 1e-3, l1_lambda: 1e-3 };
 
         let loss_of = |st: &TrainState| -> f64 {
-            let sc = &mut *nb.scratch.lock().unwrap();
+            let ws = &mut *nb.scratch.lock().unwrap();
+            let sc = &mut ws.main;
             let (logits, _) = nb
                 .forward(sc, &st.params, &st.masks, &batch.x, bsz, false)
                 .unwrap();
@@ -1390,7 +1709,8 @@ mod tests {
 
         // analytic gradients exactly as train_step assembles them
         let mut grads = {
-            let sc = &mut *nb.scratch.lock().unwrap();
+            let ws = &mut *nb.scratch.lock().unwrap();
+            let sc = &mut ws.main;
             let (logits, tape) = nb
                 .forward(sc, &st.params, &st.masks, &batch.x, bsz, true)
                 .unwrap();
@@ -1559,6 +1879,141 @@ mod tests {
             st.params[0].data().to_vec()
         };
         assert_eq!(run(), run());
+    }
+
+    /// The sharded train_step against an unsharded reference assembled
+    /// from the same primitives (one full-batch forward/backward +
+    /// serial penalty/ADAM — the pre-sharding code path, preserved here
+    /// verbatim). The two take different (fixed) float summation trees,
+    /// so agreement is tolerance-level; what this catches is a
+    /// double-counted, dropped, or mis-ranged shard — exactly the bug
+    /// class the width-invariance property (identical by construction)
+    /// can never see. The prime batch size forces uneven shards.
+    #[test]
+    fn sharded_step_matches_unsharded_reference() {
+        let bsz = 13usize;
+        let nb = NativeBackend::open_with_batches("mlp", bsz, bsz).unwrap();
+        let ds = digits();
+        let batch = ds.batch(Split::Train, 1, bsz);
+        let hyper = Hyper { lr: 1e-3, l1_lambda: 1e-4 };
+        let mk_state = || {
+            let mut st = TrainState::init(nb.entry(), 9);
+            let mut rng = Rng::new(0xFACE);
+            for li in 0..st.zs.len() {
+                let n = st.zs[li].len();
+                st.zs[li].copy_from(&rng.normal_vec(n, 0.1));
+                st.us[li].copy_from(&rng.normal_vec(n, 0.05));
+                st.rhos[li] = 0.3;
+            }
+            let m0 = st.masks[0].data_mut();
+            for i in 0..m0.len() {
+                if i % 5 == 0 {
+                    m0[i] = 0.0;
+                }
+            }
+            st
+        };
+
+        let mut st_sh = mk_state();
+        let stats_sh = nb.train_step(&mut st_sh, &hyper, &batch).unwrap();
+
+        let mut st = mk_state();
+        let (data_loss, correct, mut grads) = {
+            let ws = &mut *nb.scratch.lock().unwrap();
+            let sc = &mut ws.main;
+            let (logits, tape) = nb
+                .forward(sc, &st.params, &st.masks, &batch.x, bsz, true)
+                .unwrap();
+            let mut dlogits = Vec::new();
+            let (dl, c) = NativeBackend::ce_stats(
+                &logits, &batch.y, bsz, 10, Some(&mut dlogits));
+            let grads =
+                nb.backward(sc, &st.params, &st.masks, &tape, dlogits, bsz);
+            nb.recycle_tape(sc, tape);
+            sc.f.put(logits);
+            (dl, c, grads)
+        };
+        let mut penalty = 0.0f64;
+        for (li, &(wi, _)) in nb.widx.iter().enumerate() {
+            let w = st.params[wi].data();
+            let z = st.zs[li].data();
+            let u = st.us[li].data();
+            let m = st.masks[li].data();
+            let rho = st.rhos[li];
+            let gw = &mut grads[wi];
+            for ((((gv, &wv), &zv), &uv), &mv) in
+                gw.iter_mut().zip(w).zip(z).zip(u).zip(m)
+            {
+                let d = wv - zv + uv;
+                penalty += 0.5 * (rho as f64) * (d as f64) * (d as f64);
+                let sign = if wv > 0.0 {
+                    1.0
+                } else if wv < 0.0 {
+                    -1.0
+                } else {
+                    0.0
+                };
+                *gv = (*gv + rho * d + hyper.l1_lambda * sign) * mv;
+            }
+        }
+        let t = st.step;
+        let bc1 = 1.0 - ADAM_B1.powf(t);
+        let bc2 = 1.0 - ADAM_B2.powf(t);
+        for (pi, g) in grads.iter().enumerate() {
+            let p = st.params[pi].data_mut();
+            let m = st.adam_m[pi].data_mut();
+            let v = st.adam_v[pi].data_mut();
+            for i in 0..p.len() {
+                let gi = g[i];
+                m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * gi;
+                v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * gi * gi;
+                let mhat = m[i] / bc1;
+                let vhat = v[i] / bc2;
+                p[i] -= hyper.lr * mhat / (vhat.sqrt() + ADAM_EPS);
+            }
+            if let Some(li) = nb.is_weight[pi] {
+                let mask = st.masks[li].data();
+                for (pv, &mv) in p.iter_mut().zip(mask) {
+                    *pv *= mv;
+                }
+            }
+        }
+        let ref_loss = (data_loss + penalty) as f32;
+        let ref_acc = (correct / bsz as f64) as f32;
+
+        assert_eq!(stats_sh.acc, ref_acc, "correct counts are exact sums");
+        assert!(
+            (stats_sh.loss - ref_loss).abs() <= 1e-4 * ref_loss.abs().max(1.0),
+            "loss diverged: sharded {} vs reference {ref_loss}",
+            stats_sh.loss
+        );
+        for pi in 0..st.params.len() {
+            let a = st_sh.params[pi].data();
+            let b = st.params[pi].data();
+            assert_eq!(a.len(), b.len());
+            for i in 0..a.len() {
+                assert!(
+                    (a[i] - b[i]).abs() <= 1e-4 + 1e-4 * b[i].abs(),
+                    "param {pi} idx {i}: sharded {} vs reference {}",
+                    a[i],
+                    b[i]
+                );
+            }
+            // adam_m is *linear* in the merged gradient, so a uniform
+            // gradient-scale bug (e.g. a shard merged twice) shows up
+            // here even though ADAM's normalized param update would
+            // largely cancel it.
+            let ma = st_sh.adam_m[pi].data();
+            let mb = st.adam_m[pi].data();
+            for i in 0..ma.len() {
+                assert!(
+                    (ma[i] - mb[i]).abs() <= 1e-8 + 1e-3 * mb[i].abs(),
+                    "adam_m {pi} idx {i}: sharded {} vs reference {}",
+                    ma[i],
+                    mb[i]
+                );
+            }
+        }
     }
 
     #[test]

@@ -16,6 +16,12 @@
 //! the same classification accuracy measured through the
 //! [`crate::serving::ServingEngine`] request API instead of a direct
 //! `evaluate` call (bit-identical by the engine's batching contract).
+//!
+//! Every baseline's retrain loops run through the same `ModelExec`
+//! seam as the ADMM pipeline, so on the native backend they inherit
+//! the sharded train step: batches split across the thread pool with a
+//! fixed-shard-order reduction, keeping baseline-vs-ADMM comparisons
+//! reproducible at any pool width.
 
 use crate::backend::ModelExec;
 use crate::coordinator::trainer::{TrainConfig, Trainer};

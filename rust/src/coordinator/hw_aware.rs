@@ -9,7 +9,10 @@
 //!    pruned ~3-4× even when targeting CONV, else accuracy drops);
 //! 3. binary-searches the most aggressive reduction that keeps accuracy
 //!    within the tolerance — each probe is a real (short) ADMM prune +
-//!    masked retrain on a cloned state;
+//!    masked retrain on a cloned state (the search's dominant cost; on
+//!    the native backend every probe step shards its batch across the
+//!    thread pool, so probes scale with cores without perturbing the
+//!    search trajectory — results are bit-identical at any width);
 //! 4. checks every CONV layer's achieved pruning ratio 1/αᵢ against the
 //!    hardware break-even ratio; layers below it are *restored to dense*
 //!    (pruning them would slow the accelerator down) and the freed

@@ -9,7 +9,11 @@
 //! * L1-regularized training for the Wen-style baseline (λ > 0).
 //!
 //! The driver only sees [`ModelExec`], so the PJRT artifact session and
-//! the native host backend are interchangeable.
+//! the native host backend are interchangeable. With the native
+//! backend each `train_step`/`evaluate` call shards its batch rows
+//! across the thread pool with a fixed-shard-order reduction, so every
+//! loop below scales with cores while staying bit-identical at any
+//! pool width (see `backend/native.rs`).
 
 use crate::backend::ModelExec;
 use crate::data::{Dataset, Split};

@@ -19,7 +19,9 @@
 //!   it in pure Rust (im2col conv + packed cache-blocked GEMM with a
 //!   fused bias+ReLU epilogue, softmax-CE, fused ADAM+ADMM update —
 //!   all five proxies, residual edges included, working buffers drawn
-//!   from a persistent scratch arena), and
+//!   from persistent scratch arenas; `train_step`/`evaluate` shard
+//!   each batch's rows across the thread pool with a fixed-shard-order
+//!   reduction, bit-identical at any pool width), and
 //!   [`backend::sparse_infer`] serves inference directly from the
 //!   stored [`coordinator::CompressedModel`] representation (RelIndex →
 //!   CSR, levels materialized on the fly).
@@ -82,19 +84,23 @@
 //!   hash-iteration determinism) into build failures.
 //! * [`util`] — deterministic RNG, search primitives, the persistent
 //!   size-aware [`util::ThreadPool`] (std-only) that fans per-layer
-//!   Z-updates and quantizer searches across cores with bit-identical
-//!   results (workers park when idle; dominant layers additionally
-//!   split elementwise work across idle lanes), the free-list
-//!   [`util::BufPool`] scratch arena behind the zero-alloc hot paths,
-//!   and the bench harness with optional machine-readable JSON output
-//!   ([`util::bench::BenchSuite`]).
+//!   Z-updates, quantizer searches, and batch shards across cores with
+//!   bit-identical results (workers park when idle; dominant layers
+//!   additionally split elementwise work across idle lanes), the
+//!   width-free shard partition helpers ([`util::shard_count`] /
+//!   [`util::shard_range`]), the free-list [`util::BufPool`] scratch
+//!   arena behind the zero-alloc hot paths with per-shard slot leasing
+//!   via [`util::Lanes`], and the bench harness with optional
+//!   machine-readable JSON output ([`util::bench::BenchSuite`]).
 //!
 //! Python never runs at coordination time: the native backend needs no
 //! artifacts at all, and after `make artifacts` the PJRT path is
-//! self-contained too. Host-side projection/selection paths and the
-//! packed GEMM family are bit-identical at any pool width
-//! (property-tested; a GEMM row's reduction order is a fixed function
-//! of the inner dimension, never of how rows were split);
+//! self-contained too. Host-side projection/selection paths, the
+//! packed GEMM family, and the sharded native train/eval steps are
+//! bit-identical at any pool width (property-tested; a GEMM row's
+//! reduction order is a fixed function of the inner dimension, never
+//! of how rows were split, and cross-shard partials merge in fixed
+//! shard order);
 //! PJRT-vs-native agreement is tolerance-checked (different kernels,
 //! different reduction orders), as are sparse-vs-dense inference
 //! (≤1e-4/logit) and packed-vs-naive GEMM (`tensor::gemm_ref`).

@@ -39,6 +39,7 @@ use admm_nn::hwmodel::HwConfig;
 use admm_nn::report::{self, MeasuredRun};
 use admm_nn::runtime::{Runtime, TrainState};
 use admm_nn::util::cli::Args;
+use admm_nn::util::ThreadPool;
 
 const USAGE: &str = "\
 admm-nn — ADMM-NN algorithm-hardware co-design framework
@@ -96,7 +97,14 @@ fn run() -> admm_nn::Result<()> {
             let pjrt_sess;
             let native_sess;
             let sess: &dyn ModelExec = if use_native(&backend, &artifacts)? {
-                eprintln!("backend: native (host-side)");
+                // Train steps shard each batch across the pool with a
+                // fixed-shard-order reduction, so the run is
+                // bit-identical at any width (ADMM_NN_THREADS=1 for
+                // the serial fallback).
+                eprintln!(
+                    "backend: native (host-side), pool width {}",
+                    ThreadPool::global().threads()
+                );
                 native_sess = NativeBackend::open(&model)?;
                 &native_sess
             } else {

@@ -92,6 +92,55 @@ impl<T: Copy + Default> BufPool<T> {
     }
 }
 
+/// Per-lane workspace leasing for sharded fan-outs: a growable set of
+/// `Default`-constructed slots where **slot index == shard index**,
+/// permanently. The sharded train/eval paths lease `n_shards` slots per
+/// step and hand slot `s` to shard `s` every time, so each slot's
+/// buffer arenas see the *same* take/put length sequence step after
+/// step — the per-slot [`BufPool`] capacities converge after warmup and
+/// the zero-alloc steady state survives sharding. (A scheduling-order
+/// slot assignment would shuffle which arena serves which shard size
+/// and keep growing forever on uneven splits.)
+///
+/// Like [`BufPool`], not thread-safe by itself — owners keep it behind
+/// the same `Mutex` as the rest of their scratch and split the leased
+/// `&mut [T]` into disjoint per-shard `&mut T`s via the pool's chunked
+/// primitives.
+#[derive(Debug)]
+pub struct Lanes<T> {
+    slots: Vec<T>,
+}
+
+impl<T> Default for Lanes<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Lanes<T> {
+    pub const fn new() -> Self {
+        Lanes { slots: Vec::new() }
+    }
+
+    /// Every slot ever leased, for instrumentation sweeps (grow-count
+    /// aggregation); slot `s` is always the workspace shard `s` used.
+    pub fn slots(&self) -> &[T] {
+        &self.slots
+    }
+}
+
+impl<T: Default> Lanes<T> {
+    /// Lease the first `n` slots, default-constructing any that do not
+    /// exist yet (growth happens only the first time a wider lease is
+    /// requested — steady-state leases of a fixed `n` allocate nothing).
+    pub fn lease(&mut self, n: usize) -> &mut [T] {
+        while self.slots.len() < n {
+            self.slots.push(T::default());
+        }
+        &mut self.slots[..n]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,6 +190,28 @@ mod tests {
         let b = pool.take_uninit(8);
         assert_eq!(b.len(), 8);
         assert_eq!(pool.grow_count(), grows, "capacity 8 was retained");
+    }
+
+    #[test]
+    fn lanes_lease_by_index_and_retain_slots() {
+        let mut lanes: Lanes<BufPool<f32>> = Lanes::new();
+        {
+            let slots = lanes.lease(3);
+            assert_eq!(slots.len(), 3);
+            // give slot 1 a distinctive converged capacity
+            let b = slots[1].take(100);
+            slots[1].put(b);
+        }
+        // narrower lease keeps the wider slot set alive …
+        assert_eq!(lanes.lease(2).len(), 2);
+        assert_eq!(lanes.slots().len(), 3);
+        // … and re-leasing hands the *same* slot back at the same index:
+        // its arena serves the retake without growing again.
+        let grows = lanes.slots()[1].grow_count();
+        let slots = lanes.lease(3);
+        let b = slots[1].take(100);
+        slots[1].put(b);
+        assert_eq!(lanes.slots()[1].grow_count(), grows, "slot 1 regrew");
     }
 
     /// Pins the documented `take_uninit` value semantics: a recycled

@@ -11,8 +11,8 @@ pub mod pool;
 pub mod rng;
 pub mod search;
 
-pub use arena::BufPool;
-pub use pool::ThreadPool;
+pub use arena::{BufPool, Lanes};
+pub use pool::{shard_count, shard_range, ThreadPool};
 pub use rng::Rng;
 pub use search::{binary_search_max, golden_min};
 

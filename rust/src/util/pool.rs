@@ -73,6 +73,32 @@ fn current_lane_pool() -> usize {
     LANE_OF.with(|f| f.get())
 }
 
+/// Number of contiguous row shards for a data-parallel pass over `len`
+/// rows: `min(len, max_shards)`, never 0 (an empty input still gets one
+/// — empty — shard so fan-out loops stay uniform).
+///
+/// Deliberately a function of the *problem size only*, never of pool
+/// width: the shard partition — and therefore every fixed-shard-order
+/// reduction over it — is identical at any width, which is what makes
+/// the sharded train/eval paths bit-identical from width 1 up
+/// (property-tested at widths {1, 2, 4, 8} in `tests/train_shard.rs`).
+pub fn shard_count(len: usize, max_shards: usize) -> usize {
+    len.min(max_shards).max(1)
+}
+
+/// Row range of shard `s` out of `shards` over `len` rows: balanced
+/// contiguous split, the first `len % shards` shards one row longer.
+/// Pure arithmetic on (len, shards, s) — same partition at any pool
+/// width, ranges cover `0..len` exactly in shard order.
+pub fn shard_range(len: usize, shards: usize, s: usize) -> std::ops::Range<usize> {
+    debug_assert!(s < shards, "shard {s} out of {shards}");
+    let base = len / shards;
+    let rem = len % shards;
+    let start = s * base + s.min(rem);
+    let end = start + base + usize::from(s < rem);
+    start..end
+}
+
 fn in_pool_lane() -> bool {
     current_lane_pool() != 0
 }
@@ -565,6 +591,50 @@ impl ThreadPool {
         self.run_scoped(tasks);
     }
 
+    /// Three-slice sibling of [`ThreadPool::par_chunks_mut`]: split
+    /// `a`/`b`/`c` (equal lengths) into the same contiguous chunks and
+    /// run `f(chunk_index, a_chunk, b_chunk, c_chunk)` across the pool.
+    /// Built for the fused ADAM sweep, where each parameter element
+    /// updates its (param, m, v) triple in lockstep. Chunks are
+    /// disjoint and `f` is elementwise over its chunk, so results
+    /// cannot depend on execution order or chunk boundaries.
+    pub fn par_chunks_mut3<T, F>(
+        &self,
+        a: &mut [T],
+        b: &mut [T],
+        c: &mut [T],
+        chunk_len: usize,
+        f: F,
+    ) where
+        T: Send,
+        F: Fn(usize, &mut [T], &mut [T], &mut [T]) + Sync,
+    {
+        assert!(chunk_len > 0, "par_chunks_mut3: chunk_len must be positive");
+        assert!(
+            a.len() == b.len() && b.len() == c.len(),
+            "par_chunks_mut3 length mismatch: {} / {} / {}",
+            a.len(),
+            b.len(),
+            c.len()
+        );
+        if a.is_empty() {
+            return;
+        }
+        if a.len() <= chunk_len {
+            f(0, a, b, c);
+            return;
+        }
+        let f = &f;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = a
+            .chunks_mut(chunk_len)
+            .zip(b.chunks_mut(chunk_len))
+            .zip(c.chunks_mut(chunk_len))
+            .enumerate()
+            .map(|(i, ((ca, cb), cc))| boxed(move || f(i, ca, cb, cc)))
+            .collect();
+        self.run_scoped(tasks);
+    }
+
     /// Elementwise `dst[i] = f(src[i])` split into contiguous chunks.
     /// Bit-identical to the serial loop: `f` is pure per element, chunk
     /// boundaries never change any element's result, and no reduction
@@ -959,6 +1029,71 @@ mod tests {
         pool.par_zip_map(&src, &mut dst, |x| x - 1.0);
         assert_eq!(dst[70_001], 70_000.0);
         assert!(pool.inner.get().is_none(), "width-1 pool spawned workers");
+    }
+
+    #[test]
+    fn shard_partition_is_balanced_and_width_free() {
+        // covers 0..len exactly, in shard order, sizes differ by ≤ 1
+        for len in [0usize, 1, 2, 3, 5, 7, 8, 9, 13, 16, 64, 100] {
+            for max in [1usize, 2, 4, 8] {
+                let shards = shard_count(len, max);
+                assert!(shards >= 1 && shards <= max.max(1));
+                assert!(len == 0 || shards <= len, "len={len} max={max}");
+                let mut next = 0usize;
+                let (mut lo, mut hi) = (usize::MAX, 0usize);
+                for s in 0..shards {
+                    let r = shard_range(len, shards, s);
+                    assert_eq!(r.start, next, "len={len} shards={shards} s={s}");
+                    next = r.end;
+                    lo = lo.min(r.len());
+                    hi = hi.max(r.len());
+                }
+                assert_eq!(next, len, "full coverage len={len} shards={shards}");
+                assert!(hi - lo <= 1, "unbalanced: len={len} shards={shards}");
+            }
+        }
+        // the partition is a function of (len, max_shards) alone — no
+        // pool in sight, which is the whole determinism argument
+        assert_eq!(shard_count(64, 8), 8);
+        assert_eq!(shard_range(10, 4, 0), 0..3);
+        assert_eq!(shard_range(10, 4, 1), 3..6);
+        assert_eq!(shard_range(10, 4, 2), 6..8);
+        assert_eq!(shard_range(10, 4, 3), 8..10);
+    }
+
+    #[test]
+    fn par_chunks_mut3_keeps_triples_in_lockstep() {
+        let n = 1000;
+        for width in [1usize, 4] {
+            let pool = ThreadPool::new(width);
+            let mut a: Vec<u32> = (0..n as u32).collect();
+            let mut b = vec![0u32; n];
+            let mut c = vec![0u32; n];
+            pool.par_chunks_mut3(&mut a, &mut b, &mut c, 37, |i, ca, cb, cc| {
+                assert_eq!(ca.len(), cb.len());
+                assert_eq!(cb.len(), cc.len());
+                for k in 0..ca.len() {
+                    cb[k] = ca[k] * 2;
+                    cc[k] = i as u32;
+                }
+            });
+            for k in 0..n {
+                assert_eq!(b[k], a[k] * 2, "width={width} element {k}");
+                assert_eq!(c[k], (k / 37) as u32, "width={width} element {k}");
+            }
+        }
+        // single chunk runs inline; empty slices do nothing
+        let pool = ThreadPool::new(4);
+        let (mut a, mut b, mut c) = (vec![1u8; 5], vec![0u8; 5], vec![0u8; 5]);
+        pool.par_chunks_mut3(&mut a, &mut b, &mut c, 10, |i, _, cb, _| {
+            assert_eq!(i, 0);
+            cb.fill(9);
+        });
+        assert_eq!(b, vec![9u8; 5]);
+        let (mut e1, mut e2, mut e3) = (Vec::<u8>::new(), Vec::new(), Vec::new());
+        pool.par_chunks_mut3(&mut e1, &mut e2, &mut e3, 4, |_, _, _, _| {
+            panic!("called on empty")
+        });
     }
 
     #[test]

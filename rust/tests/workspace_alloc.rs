@@ -4,9 +4,10 @@
 //! would measure the harness, not the kernels).
 //!
 //! Three counters, one claim each:
-//! * `NativeBackend::scratch_grow_count` — the train step's arena
-//!   (im2col columns, activations, tape copies, gradients) stops
-//!   growing once warm;
+//! * `NativeBackend::scratch_grow_count` — the train step's arenas
+//!   (im2col columns, activations, tape copies, gradients — the
+//!   caller-side workspace plus every per-shard slot of the sharded
+//!   train/eval fan-out, summed) stop growing once warm;
 //! * `SparseInfer::scratch_grow_count` — the serving batch's arena
 //!   (im2col columns, activations, argmax maps) stops growing once
 //!   warm;
@@ -60,6 +61,29 @@ fn steady_state_hot_paths_stop_growing_workspaces() {
         tensor::pack_grow_count(),
         pack_grows,
         "steady-state train step regrew GEMM pack buffers"
+    );
+
+    // -- sharded evaluate on the same backend: shard `s` always leases
+    //    workspace slot `s` (the partition is fixed by the batch size),
+    //    so the per-slot arenas see the same take/put sequence every
+    //    pass and the eval path goes flat after one warmup pass too --
+    for _ in 0..2 {
+        nb.evaluate(&st, &*ds, 2).unwrap();
+    }
+    let native_grows = nb.scratch_grow_count();
+    let pack_grows = tensor::pack_grow_count();
+    for _ in 0..3 {
+        nb.evaluate(&st, &*ds, 2).unwrap();
+    }
+    assert_eq!(
+        nb.scratch_grow_count(),
+        native_grows,
+        "steady-state sharded evaluate reallocated workspace buffers"
+    );
+    assert_eq!(
+        tensor::pack_grow_count(),
+        pack_grows,
+        "steady-state sharded evaluate regrew GEMM pack buffers"
     );
 
     // -- sparse serving path: conv, skip save/add, projection shortcut,
