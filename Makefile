@@ -18,6 +18,11 @@
 #   make bench-store  — just the versioned-model-store cases (publish,
 #                       eager vs lazy open, hot-swap latency under a
 #                       deep queue), written to BENCH_store.json
+#   make bench-soak   — the deterministic soak harness (all four load
+#                       profiles at pool widths 1 and 4 against a
+#                       two-tenant 3:1 weighted engine, invariants
+#                       scored), written to BENCH_soak.json with
+#                       p50/p99 latency per profile
 #   make bench-train  — just the sharded train/eval width sweep
 #                       (train_step + evaluate at pool widths 1/2/4/8
 #                       on lenet5 and resnet_proxy shapes, speedups vs
@@ -41,7 +46,7 @@
 #   make tsan         — run the serving/pool tests under ThreadSanitizer
 #                       (nightly-only; skips with a note when absent)
 
-.PHONY: verify lint miri tsan bench bench-serving bench-gemm bench-store bench-train bench-report
+.PHONY: verify lint miri tsan bench bench-serving bench-gemm bench-store bench-soak bench-train bench-report
 
 # Style allowances now live as crate-level #![allow] attributes in each
 # crate root (rust/src/lib.rs documents why); everything else is -D.
@@ -92,6 +97,9 @@ bench-gemm:
 
 bench-store:
 	BENCH_JSON_DIR=$(CURDIR) BENCH_ONLY=store cargo bench --bench hot_paths -- --json
+
+bench-soak:
+	BENCH_JSON_DIR=$(CURDIR) cargo run --release -p admm_nn -- soak --profile all --widths 1,4 --json
 
 bench-train:
 	BENCH_JSON_DIR=$(CURDIR) BENCH_ONLY=train cargo bench --bench hot_paths -- --json

@@ -647,7 +647,7 @@ fn gemm_benches(suite: &mut BenchSuite) {
             max_batch: 64,
             max_wait: Duration::from_micros(200),
             queue_cap: 512,
-            pool: None,
+            ..EngineConfig::default()
         })
         .unwrap();
         suite.bench("serving batched dispatch depth=64 (gemm suite)", 3, 15, || {
@@ -710,7 +710,7 @@ fn serving_benches(suite: &mut BenchSuite) {
             max_batch: mb,
             max_wait: Duration::from_micros(200),
             queue_cap: 512,
-            pool: None,
+            ..EngineConfig::default()
         })
         .unwrap()
     };
@@ -748,6 +748,52 @@ fn serving_benches(suite: &mut BenchSuite) {
     }
     for (name, stats) in batched.stats_all() {
         println!("    batched engine [{name}]: {}", stats.summary());
+    }
+
+    // two-tenant weighted fair share: one engine serving the same
+    // sparse model under two names with 3:1 weights, 64 mixed requests
+    // per wave — prices the deficit-round-robin pick loop (per-queue
+    // credit accounting, ring rotation) against the single-tenant
+    // dispatch above, and its stats line shows the p50/p99 percentiles
+    {
+        use admm_nn::serving::TenantConfig;
+        let mut reg = ModelRegistry::new();
+        reg.register_named("hot".into(), sp.clone()).unwrap();
+        reg.register_named("cold".into(), sp.clone()).unwrap();
+        let engine = ServingEngine::new(reg, EngineConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 512,
+            tenants: vec![
+                ("hot".into(), TenantConfig { weight: 3, quota: 0 }),
+                ("cold".into(), TenantConfig { weight: 1, quota: 0 }),
+            ],
+            ..EngineConfig::default()
+        })
+        .unwrap();
+        suite.bench(
+            "serving weighted 2-tenant dispatch depth=64 (3:1)",
+            3,
+            15,
+            || {
+                let tickets: Vec<_> = (0..64)
+                    .map(|i| {
+                        let name = if i % 4 == 3 { "cold" } else { "hot" };
+                        engine
+                            .submit(InferRequest::new(name, rows[i].clone()))
+                            .expect("submit")
+                    })
+                    .collect();
+                let mut n = 0usize;
+                for t in tickets {
+                    n += engine.wait(t).expect("wait").len();
+                }
+                black_box(n);
+            },
+        );
+        for (name, stats) in engine.stats_all() {
+            println!("    weighted engine [{name}]: {}", stats.summary());
+        }
     }
 }
 
@@ -838,7 +884,7 @@ fn store_benches(suite: &mut BenchSuite) {
         max_batch: 8,
         max_wait: Duration::ZERO,
         queue_cap: 8192,
-        pool: None,
+        ..EngineConfig::default()
     })
     .unwrap();
     for _ in 0..2048 {

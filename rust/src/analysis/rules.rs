@@ -25,10 +25,14 @@ use super::Diagnostic;
 pub const UNSAFE_ALLOWED: &[&str] = &["util/pool.rs", "util/arena.rs"];
 
 /// Modules allowed to spawn OS threads (rule `spawn-hygiene`): the
-/// thread pool's lazily-started workers and the serving engine's one
-/// scheduler thread. Ad-hoc threads anywhere else bypass the pool's
-/// bit-identical fan-out contract and its panic propagation.
-pub const SPAWN_ALLOWED: &[&str] = &["util/pool.rs", "serving/engine.rs"];
+/// thread pool's lazily-started workers, the serving engine's one
+/// scheduler thread, and the soak harness's scoped submitter threads
+/// (concurrent clients are the load model — the compute itself still
+/// goes through the engine's pool). Ad-hoc threads anywhere else
+/// bypass the pool's bit-identical fan-out contract and its panic
+/// propagation.
+pub const SPAWN_ALLOWED: &[&str] =
+    &["util/pool.rs", "serving/engine.rs", "soak/mod.rs"];
 
 /// Load/decode modules that must return typed errors instead of
 /// panicking on corrupt input (rule `panic-free`): a bad checkpoint,
@@ -57,6 +61,9 @@ pub const DETERMINISM_FILES: &[&str] = &[
     "serving/mod.rs",
     "metrics/mod.rs",
     "store/mod.rs",
+    "soak/mod.rs",
+    "soak/gen.rs",
+    "soak/score.rs",
 ];
 
 /// Functions with a zero-alloc steady-state contract (rule
@@ -115,7 +122,10 @@ pub const HOT_FNS: &[(&str, &[&str])] = &[
         "backend/sparse_infer.rs",
         &["spmm", "conv_spmm", "infer_with"],
     ),
-    ("serving/engine.rs", &["scheduler_loop", "dispatch"]),
+    (
+        "serving/engine.rs",
+        &["scheduler_loop", "dispatch", "drr_select", "extract_batch"],
+    ),
 ];
 
 /// Path prefix for the lock-nesting half of `lock-hygiene`.

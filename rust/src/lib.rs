@@ -39,6 +39,18 @@
 //!   zero downtime: `swap_model`/`rollback` publish a new epoch
 //!   atomically while admitted requests finish on the epoch they were
 //!   admitted under (never coalescing two epochs into one batch).
+//!   Multi-tenant fairness is deficit-round-robin across per-
+//!   `(slot, epoch)` queues with configurable weights and per-model
+//!   quotas, plus deadline-feasibility admission control from a
+//!   measured per-row service-time estimate.
+//! * [`soak`] — the deterministic soak-test subsystem: a seeded
+//!   xorshift load generator ([`soak::gen`]: steady / bursty /
+//!   adversarial-deadline / hot-skew virtual-time arrival schedules)
+//!   drives a real [`serving::ServingEngine`] from N submitter
+//!   threads, and the scorer ([`soak::score`]) grades the run against
+//!   explicit invariants — zero lost tickets, weight-scaled starvation
+//!   bounds, accounting closure against engine counters, spot-checked
+//!   bit-identical logits. `soak` CLI subcommand; `make bench-soak`.
 //! * [`store`] — the versioned model store behind rollout:
 //!   [`store::ModelStore`] (`publish`/`open`/`list`/`gc`, monotonic
 //!   per-name version ids, atomic tmp+rename publish, gc that never
@@ -127,6 +139,7 @@ pub mod quantize;
 pub mod report;
 pub mod runtime;
 pub mod serving;
+pub mod soak;
 pub mod sparsity;
 pub mod store;
 pub mod tensor;

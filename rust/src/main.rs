@@ -10,6 +10,12 @@
 //!                   packaged compressed model (sparse + dense
 //!                   registered side by side) and measure batched vs
 //!                   single-request dispatch throughput.
+//! * `soak`        — the deterministic soak harness (`soak::run`): replay
+//!                   a seeded arrival schedule (steady / bursty /
+//!                   adversarial-deadline / hot-skew) against a
+//!                   two-tenant weighted engine at several pool widths
+//!                   and score the scheduler's invariants; `--json`
+//!                   emits `BENCH_soak.json`.
 //! * `store`       — the versioned model store (`store::ModelStore`):
 //!                   `publish` a compressed-model file as the next
 //!                   version, `list` names/versions, `gc` old versions
@@ -56,6 +62,9 @@ COMMANDS:
   report      [--table N] [--fig 4] [--onchip] [--all]
   serve-bench --model M [--keep F] [--bits N] [--requests N] [--depth N]
               [--max-batch N]
+  soak        [--profile steady|bursty|adversarial|hotskew|all] [--seed N]
+              [--requests N] [--submitters N] [--widths 1,4] [--smoke]
+              [--json]
   store publish --store DIR --file PATH
   store list    --store DIR [--model M]
   store gc      --store DIR --model M [--keep N]
@@ -266,6 +275,23 @@ fn run() -> admm_nn::Result<()> {
             args.finish()?;
             serve_bench(&model, keep, bits, requests, depth, max_batch)?;
         }
+        "soak" => {
+            let profile =
+                args.opt_str("profile").unwrap_or_else(|| "adversarial".into());
+            let seed: u64 = args.opt_parse("seed")?.unwrap_or(42);
+            let smoke = args.flag("smoke");
+            let requests: usize = args
+                .opt_parse("requests")?
+                .unwrap_or(if smoke { 96 } else { 240 });
+            let submitters: usize = args
+                .opt_parse("submitters")?
+                .unwrap_or(if smoke { 2 } else { 4 });
+            let widths = args.opt_str("widths").unwrap_or_else(|| "1,4".into());
+            let json = args.flag("json")
+                || std::env::var_os("BENCH_JSON").is_some();
+            args.finish()?;
+            soak_cmd(&profile, seed, requests, submitters, &widths, smoke, json)?;
+        }
         "store" => {
             let sub = match args.next_positional() {
                 Some(s) => s,
@@ -430,6 +456,131 @@ fn serve_bench(
     );
     for (name, stats) in batched.stats_all() {
         println!("  [{name}] {}", stats.summary());
+    }
+    Ok(())
+}
+
+/// `soak`: stand up a fresh two-tenant weighted engine per
+/// (width, profile) pair and drive it with the deterministic load
+/// generator, scoring each run against the soak invariants. Exits
+/// nonzero if any invariant fails; `--json` aggregates every run into
+/// `BENCH_soak.json` (`BENCH_JSON_DIR` selects the directory, like the
+/// bench suites).
+fn soak_cmd(
+    profile: &str,
+    seed: u64,
+    requests: usize,
+    submitters: usize,
+    widths: &str,
+    smoke: bool,
+    json: bool,
+) -> admm_nn::Result<()> {
+    use admm_nn::backend::sparse_infer::{prune_quantize_package, SparseInfer};
+    use admm_nn::serving::{
+        EngineConfig, InferBackend, ModelRegistry, ServingEngine, TenantConfig,
+    };
+    use admm_nn::soak::{self, ModelUnderTest, Profile, SoakConfig};
+    use admm_nn::util::json::Json;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let profiles: Vec<Profile> = if profile == "all" {
+        Profile::all().to_vec()
+    } else {
+        vec![Profile::parse(profile).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown --profile {profile:?} (want steady, bursty, \
+                 adversarial, hotskew, or all)"
+            )
+        })?]
+    };
+    let widths: Vec<usize> = widths
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| {
+            s.trim().parse::<usize>().map_err(|_| {
+                anyhow::anyhow!("bad --widths entry {s:?} (want e.g. 1,4)")
+            })
+        })
+        .collect::<Result<_, _>>()?;
+    if widths.is_empty() {
+        return Err(anyhow::anyhow!("--widths needs at least one width"));
+    }
+
+    // two tenants on a 3:1 weight split — a hot mlp and a cold lenet5,
+    // both served from their compressed (sparse CSR) form
+    let make_backend = |model: &str| -> admm_nn::Result<Arc<dyn InferBackend>> {
+        let nb = NativeBackend::open(model)?;
+        let mut st = TrainState::init(nb.entry(), 0);
+        let packaged =
+            prune_quantize_package(nb.entry(), model, &mut st, 0.05, 4, 8);
+        Ok(Arc::new(SparseInfer::new(&packaged, nb.entry())?))
+    };
+    let hot = make_backend("mlp")?;
+    let cold = make_backend("lenet5")?;
+    let tenancy =
+        [("mlp", hot, 3u32), ("lenet5", cold, 1u32)];
+
+    let mut runs = Vec::new();
+    let mut all_passed = true;
+    for &width in &widths {
+        for &p in &profiles {
+            let mut reg = ModelRegistry::new();
+            for (name, backend, _) in &tenancy {
+                reg.register_named(name.to_string(), backend.clone())?;
+            }
+            let engine = ServingEngine::new(reg, EngineConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(300),
+                queue_cap: 256,
+                pool: Some(Arc::new(ThreadPool::new(width))),
+                tenants: tenancy
+                    .iter()
+                    .map(|(n, _, w)| {
+                        (n.to_string(), TenantConfig { weight: *w, quota: 96 })
+                    })
+                    .collect(),
+                ..EngineConfig::default()
+            })?;
+            let models: Vec<ModelUnderTest> = tenancy
+                .iter()
+                .map(|(n, b, w)| ModelUnderTest {
+                    name: n.to_string(),
+                    backend: b.clone(),
+                    weight: *w,
+                })
+                .collect();
+            let cfg = SoakConfig {
+                profile: p,
+                seed,
+                submitters,
+                requests,
+                tick: Duration::from_micros(if smoke { 20 } else { 50 }),
+                spot_every: 7,
+                window: 32,
+                starvation_slack: Duration::from_secs(5),
+            };
+            let report = soak::run(&engine, &models, &cfg)?;
+            print!("{}", report.render());
+            all_passed &= report.passed();
+            runs.push(report.to_json());
+        }
+    }
+
+    if json {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("soak")),
+            ("seed", Json::num(seed as f64)),
+            ("runs", Json::Arr(runs)),
+        ]);
+        let dir =
+            std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+        let path = std::path::Path::new(&dir).join("BENCH_soak.json");
+        std::fs::write(&path, doc.to_string())?;
+        eprintln!("wrote {}", path.display());
+    }
+    if !all_passed {
+        return Err(anyhow::anyhow!("soak invariants failed"));
     }
     Ok(())
 }

@@ -82,6 +82,111 @@ impl EvalStats {
     }
 }
 
+/// Bucket count of [`LatencyHisto`]: log₂ buckets over nanoseconds,
+/// bucket `i` covering `[2^i, 2^{i+1})` ns. 40 buckets span 1 ns to
+/// ~18 minutes — wider than any serving latency worth histogramming.
+pub const HISTO_BUCKETS: usize = 40;
+
+/// Fixed-bucket log₂ latency histogram behind the p50/p95/p99 serving
+/// percentiles. The record path is allocation-free (a shift and two
+/// array increments — safe under the engine's stats leaf lock on the
+/// dispatch hot path), and every accessor walks the buckets in index
+/// order, so rendering is deterministic (`determinism` lint gate).
+/// Bucket resolution is 2× — coarse for means, exactly right for tail
+/// monitoring without per-sample storage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyHisto {
+    counts: [u64; HISTO_BUCKETS],
+    total: u64,
+}
+
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        LatencyHisto { counts: [0; HISTO_BUCKETS], total: 0 }
+    }
+}
+
+impl LatencyHisto {
+    /// Record one duration in seconds. Sub-nanosecond and non-positive
+    /// samples land in bucket 0; samples past the top bucket clamp.
+    pub fn record(&mut self, secs: f64) {
+        let ns = if secs > 0.0 { (secs * 1e9) as u64 } else { 0 }.max(1);
+        let idx = (63 - ns.leading_zeros() as usize).min(HISTO_BUCKETS - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Upper edge (seconds) of the bucket holding the `q`-quantile
+    /// sample; 0 when empty. Monotone in `q` by construction.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return (1u128 << (i + 1)) as f64 / 1e9;
+            }
+        }
+        (1u128 << HISTO_BUCKETS) as f64 / 1e9
+    }
+
+    /// Fold another histogram into this one — buckets are fixed and
+    /// aligned, so merging is exact (the soak scorer uses this for
+    /// run-wide percentiles across models).
+    pub fn merge(&mut self, other: &LatencyHisto) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// `"p50 512.0us p95 2.1ms p99 4.2ms"` — fixed field order.
+    pub fn render(&self) -> String {
+        format!(
+            "p50 {} p95 {} p99 {}",
+            fmt_secs(self.p50()),
+            fmt_secs(self.p95()),
+            fmt_secs(self.p99())
+        )
+    }
+}
+
+/// Human-scale duration with a fixed unit ladder (deterministic).
+fn fmt_secs(s: f64) -> String {
+    if s <= 0.0 {
+        "0".to_string()
+    } else if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
 /// Per-model serving counters maintained by
 /// [`crate::serving::ServingEngine`] — the throughput/latency side of
 /// the bookkeeping, next to the accuracy side above. All counts are
@@ -119,6 +224,25 @@ pub struct ServingCounters {
     /// `swaps + rollbacks − epochs_retired` is the number of old
     /// versions still finishing admitted traffic.
     pub epochs_retired: u64,
+    /// Submits rejected by global queue backpressure
+    /// ([`crate::serving::ServingError::QueueFull`]). Rejected requests
+    /// are *not* counted in `submitted` — the accounting identity is
+    /// `attempts = submitted + rejected_*` and
+    /// `submitted = completed + failed + expired` once drained.
+    pub rejected_full: u64,
+    /// Submits rejected by the model's per-tenant queue quota
+    /// ([`crate::serving::ServingError::QuotaExceeded`]).
+    pub rejected_quota: u64,
+    /// Submits rejected by deadline-feasibility admission control
+    /// ([`crate::serving::ServingError::DeadlineInfeasible`]).
+    pub rejected_infeasible: u64,
+    /// End-to-end (completion − submit) latency histogram over
+    /// completed requests; `latency_h.p50()`/`p95()`/`p99()` are the
+    /// serving percentiles.
+    pub latency_h: LatencyHisto,
+    /// Queue-wait (dispatch − submit) histogram over every dispatched
+    /// request (completed, failed, or expired).
+    pub queue_h: LatencyHisto,
 }
 
 impl ServingCounters {
@@ -146,10 +270,17 @@ impl ServingCounters {
         self.rows as f64 / self.infer_s
     }
 
+    /// Total front-door rejections (backpressure + quota + admission).
+    pub fn rejected(&self) -> u64 {
+        self.rejected_full + self.rejected_quota + self.rejected_infeasible
+    }
+
     /// One-line human-readable summary for logs and `serve-bench`.
-    /// Field order is fixed (determinism gate): swap counters append
-    /// after the throughput block, and only when any swap happened, so
-    /// swap-free engines keep the historical line byte-for-byte.
+    /// Field order is fixed (determinism gate): the optional blocks —
+    /// rejections, swap counters, latency percentiles — append after
+    /// the throughput block in that order, each only when its counters
+    /// are nonzero, so engines that never reject, swap, or complete a
+    /// request keep the historical line byte-for-byte.
     pub fn summary(&self) -> String {
         let mut s = format!(
             "{} submitted, {} completed ({} failed, {} expired) in {} \
@@ -164,11 +295,23 @@ impl ServingCounters {
             self.mean_latency_s() * 1e6,
             self.rows_per_infer_s()
         );
+        if self.rejected() > 0 {
+            s.push_str(&format!(
+                "; rejected {} (full {}, quota {}, infeasible {})",
+                self.rejected(),
+                self.rejected_full,
+                self.rejected_quota,
+                self.rejected_infeasible
+            ));
+        }
         if self.swaps + self.rollbacks > 0 {
             s.push_str(&format!(
                 "; {} swaps, {} rollbacks, {} epochs retired",
                 self.swaps, self.rollbacks, self.epochs_retired
             ));
+        }
+        if !self.latency_h.is_empty() {
+            s.push_str(&format!("; {}", self.latency_h.render()));
         }
         s
     }
@@ -281,6 +424,72 @@ mod tests {
         c.epochs_retired = 3;
         let s = c.summary();
         assert!(s.contains("2 swaps, 1 rollbacks, 3 epochs retired"), "{s}");
+    }
+
+    #[test]
+    fn latency_histo_quantiles_and_render() {
+        let mut h = LatencyHisto::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.render(), "p50 0 p95 0 p99 0");
+        // 90 samples at ~1us, 10 at ~1ms: p50 in the us decade, p99 in
+        // the ms decade, quantiles monotone
+        for _ in 0..90 {
+            h.record(1.0e-6);
+        }
+        for _ in 0..10 {
+            h.record(1.0e-3);
+        }
+        assert_eq!(h.count(), 100);
+        assert!(h.p50() < 1.0e-5, "p50={}", h.p50());
+        assert!(h.p99() >= 1.0e-3 && h.p99() < 4.0e-3, "p99={}", h.p99());
+        assert!(h.p50() <= h.p95() && h.p95() <= h.p99());
+        let r = h.render();
+        assert!(r.starts_with("p50 "), "{r}");
+        // identical inputs render identically (determinism)
+        let mut h2 = LatencyHisto::default();
+        for _ in 0..90 {
+            h2.record(1.0e-6);
+        }
+        for _ in 0..10 {
+            h2.record(1.0e-3);
+        }
+        assert_eq!(h, h2);
+        assert_eq!(h.render(), h2.render());
+        // merging is exact bucket addition
+        let mut m = LatencyHisto::default();
+        m.merge(&h);
+        m.merge(&h2);
+        assert_eq!(m.count(), 200);
+        assert_eq!(m.p50(), h.p50());
+        assert_eq!(m.p99(), h.p99());
+        // degenerate samples clamp instead of panicking
+        let mut h3 = LatencyHisto::default();
+        h3.record(0.0);
+        h3.record(-1.0);
+        h3.record(1e9);
+        assert_eq!(h3.count(), 3);
+    }
+
+    #[test]
+    fn summary_appends_rejections_and_percentiles_in_fixed_order() {
+        let mut c = ServingCounters::default();
+        c.submitted = 4;
+        c.completed = 4;
+        let base = c.summary();
+        assert!(!base.contains("rejected"), "{base}");
+        assert!(!base.contains("p50"), "{base}");
+        c.rejected_quota = 2;
+        c.rejected_infeasible = 1;
+        c.latency_h.record(2.0e-3);
+        let s = c.summary();
+        assert!(
+            s.contains("rejected 3 (full 0, quota 2, infeasible 1)"),
+            "{s}"
+        );
+        let rej_at = s.find("rejected").unwrap();
+        let p50_at = s.find("p50").unwrap();
+        assert!(rej_at < p50_at, "fixed block order: {s}");
     }
 
     #[test]

@@ -1,19 +1,50 @@
-//! The micro-batching scheduler behind [`ServingEngine`].
+//! The fair-share micro-batching scheduler behind [`ServingEngine`].
 //!
-//! One background scheduler thread owns dispatch: it pops the oldest
-//! queued request, coalesces every queued request *for the same model
-//! epoch* (in ticket order) up to [`EngineConfig::max_batch`] rows —
-//! waiting at most [`EngineConfig::max_wait`] from the oldest request's
-//! submission for the batch to fill — then runs one batched
-//! [`InferBackend`] pass and scatters the logits back to the tickets.
-//! Requests for other models keep their queue positions, so a burst for
-//! model A cannot starve a request for model B out of order.
+//! One background scheduler thread owns dispatch. Queued requests live
+//! in per-`(slot, epoch)` FIFO queues arranged in a **deficit-round-
+//! robin ring**: each ring visit grants a queue `quantum × weight` rows
+//! of credit ([`EngineConfig::quantum`], [`TenantConfig::weight`]), and
+//! a queue dispatches — in ticket order, up to
+//! [`EngineConfig::max_batch`] rows, holding at most
+//! [`EngineConfig::max_wait`] from its oldest request for the batch to
+//! fill — only while its accumulated deficit covers the rows it takes.
+//! A queue keeps the floor while its deficit lasts (so large weights
+//! buy consecutive batches), then rotates to the back with any
+//! remainder; an emptied queue forfeits its deficit. Over any
+//! backlogged interval each tenant therefore receives rows in
+//! proportion to its weight, and no tenant can starve another: a
+//! queue's wait is bounded by the rounds needed for its credit to
+//! cover its head request — `f(weight) = O(head_rows / (quantum ×
+//! weight))` ring rotations.
+//!
+//! DRR invariants (property-tested in `tests/serving_fair.rs`, load-
+//! tested by `crate::soak`):
+//! * **Intra-model FIFO.** Extraction only ever pops the front of one
+//!   per-model queue — a request that does not fit ends the scan, so
+//!   later smaller requests never leapfrog it. Ticket order within a
+//!   model is exactly submission order.
+//! * **Epoch purity.** The ring key is `(slot, epoch)`; two epochs of
+//!   one model are distinct ring entries and are never coalesced into
+//!   one batch.
+//! * **Work conservation.** Selection only rotates past a queue after
+//!   granting it credit, and every full rotation strictly increases
+//!   every backlogged queue's deficit — selection terminates and the
+//!   engine never idles while work is queued.
 //!
 //! Determinism: tickets are assigned under the queue lock in submission
 //! order, the batch is packed in ticket order, and backends compute
 //! rows independently — per-request logits are bit-identical to serial
-//! single-request calls regardless of coalescing, pool width, or how
-//! submitters interleave (see `tests/serving_engine.rs`).
+//! single-request calls regardless of coalescing, pool width, weights,
+//! or how submitters interleave (see `tests/serving_engine.rs` and
+//! `tests/serving_fair.rs`).
+//!
+//! Admission control: per-model queue quotas reject with the typed
+//! [`ServingError::QuotaExceeded`] before global backpressure
+//! ([`ServingError::QueueFull`]), and deadline-carrying requests are
+//! checked for feasibility at submit — the engine keeps a per-slot
+//! EWMA of measured per-row service time (updated by dispatch, read
+//! lock-free) and rejects with [`ServingError::DeadlineInfeasible`]
+//! when the estimated backlog drain already exceeds the deadline.
 //!
 //! Hot swap: the model table is an epoch-swapped immutable snapshot
 //! ([`Snapshot`] behind `Arc`). [`ServingEngine::swap_model`] /
@@ -21,28 +52,34 @@
 //! (copy-on-write under a brief registry lock serving never takes);
 //! each admitted request pins the backend `Arc` + epoch it validated
 //! against, so in-flight and queued requests finish on their admission
-//! epoch with bit-identical logits, zero drops. The coalescing key is
-//! `(slot, epoch)` — two epochs of one model are never mixed into one
-//! batch. When the last outstanding request of a superseded epoch
-//! drains, the epoch is *retired* (counted in
-//! [`ServingCounters::epochs_retired`]) and the old backend's last
-//! pinned `Arc` drops with that batch — old snapshots are fully
-//! reclaimed after drain (asserted by `tests/serving_swap.rs` via
-//! `Weak`).
+//! epoch with bit-identical logits, zero drops. When the last
+//! outstanding request of a superseded epoch drains, the epoch is
+//! *retired* (counted in `ServingCounters::epochs_retired`) and the old
+//! backend's last pinned `Arc` drops with that batch (asserted by
+//! `tests/serving_swap.rs` via `Weak`).
+//!
+//! Lock order (a cycle-free hierarchy — every path acquires downward):
+//! `q` (queue/ring/ticket state, the root) → leaf locks (`reg`
+//! snapshot cell, per-model `stats`, the `batch_x` pack buffer). Leaf
+//! locks are never held while taking `q`, and no two leaf locks nest
+//! except `batch_x → stats` in dispatch (annotated in place).
+//! Completion wakeups are sharded: `wait` parks on the condvar shard
+//! of its ticket hash and dispatch notifies only the shards present in
+//! the finished batch — a finished batch no longer wakes every waiter
+//! (the pre-PR-10 thundering herd).
 //!
 //! Lock poisoning: the queue lock (`q`) guards the engine's core
-//! invariants (ticket accounting, pending/in-flight sets, epoch
-//! drain counts), so a panic while holding it is unrecoverable and
-//! every later `q` acquisition deliberately propagates with `expect`.
-//! The leaf locks — the registry snapshot cell, per-model stats, and
-//! the persistent batch-packing buffer — hold plain data that is valid
-//! at every statement boundary, so those acquisitions recover from
-//! poisoning with `unwrap_or_else(|e| e.into_inner())`: a backend
-//! panic (already caught in `dispatch`) or a panicking client thread
-//! must not turn a monitoring counter into a denial-of-service on the
-//! whole engine.
+//! invariants (ticket accounting, ring queues, epoch drain counts), so
+//! a panic while holding it is unrecoverable and every later `q`
+//! acquisition deliberately propagates with `expect`. The leaf locks
+//! hold plain data that is valid at every statement boundary, so those
+//! acquisitions recover from poisoning with
+//! `unwrap_or_else(|e| e.into_inner())`: a backend panic (already
+//! caught in `dispatch`) or a panicking client thread must not turn a
+//! monitoring counter into a denial-of-service on the whole engine.
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -90,6 +127,26 @@ pub enum Poll {
     Failed(ServingError),
 }
 
+/// Per-model scheduling policy: fair-share weight and queue quota.
+/// Attached to a model name through [`EngineConfig::tenants`]; models
+/// without an entry get the defaults (weight 1, quota = queue cap).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TenantConfig {
+    /// Deficit-round-robin weight — the tenant's relative share of
+    /// dispatched rows while backlogged. Clamped to ≥ 1.
+    pub weight: u32,
+    /// Max requests this model may hold queued; submits beyond it fail
+    /// with [`ServingError::QuotaExceeded`]. `0` means "no per-model
+    /// cap" (global [`EngineConfig::queue_cap`] still applies).
+    pub quota: usize,
+}
+
+impl Default for TenantConfig {
+    fn default() -> Self {
+        TenantConfig { weight: 1, quota: 0 }
+    }
+}
+
 /// Scheduler knobs. Defaults suit test-scale models; `serve-bench`
 /// sweeps them.
 #[derive(Clone)]
@@ -100,11 +157,27 @@ pub struct EngineConfig {
     /// batch to fill. Zero dispatches immediately (still coalescing
     /// whatever is already queued).
     pub max_wait: Duration,
-    /// Bounded queue capacity in *requests*; submits beyond it fail
-    /// with [`ServingError::QueueFull`].
+    /// Bounded queue capacity in *requests*, summed over all models;
+    /// submits beyond it fail with [`ServingError::QueueFull`].
     pub queue_cap: usize,
     /// Compute pool for batched passes; `None` uses the global pool.
     pub pool: Option<Arc<ThreadPool>>,
+    /// Per-model `(name, policy)` overrides; models not listed serve
+    /// under `TenantConfig::default()`. Unknown names fail engine
+    /// construction.
+    pub tenants: Vec<(String, TenantConfig)>,
+    /// Deficit-round-robin row credit granted per ring visit, before
+    /// the weight multiplier. `0` (the default) means `max_batch`:
+    /// a single-tenant engine then batches exactly like the pre-DRR
+    /// greedy scheduler. Smaller quanta trade batch size for tighter
+    /// weighted-share granularity.
+    pub quantum: usize,
+    /// Deadline-feasibility admission control. When on, a request with
+    /// a deadline is rejected at submit ([`ServingError::
+    /// DeadlineInfeasible`]) if the measured backlog-drain estimate
+    /// already exceeds it. Requests without deadlines are unaffected,
+    /// as is everything until the first batch is measured.
+    pub admission_control: bool,
 }
 
 impl Default for EngineConfig {
@@ -114,6 +187,9 @@ impl Default for EngineConfig {
             max_wait: Duration::from_micros(500),
             queue_cap: 256,
             pool: None,
+            tenants: Vec::new(),
+            quantum: 0,
+            admission_control: true,
         }
     }
 }
@@ -181,13 +257,49 @@ struct Pending {
     stats: Arc<Mutex<ServingCounters>>,
 }
 
-#[derive(Default)]
+/// Resolved per-slot tenant policy (weights clamped, quota defaulted).
+struct Tenant {
+    weight: u64,
+    quota: usize,
+}
+
+/// One `(slot, epoch)` FIFO queue in the DRR ring.
+struct ModelQueue {
+    slot: usize,
+    epoch: u64,
+    reqs: VecDeque<Pending>,
+    /// Σ `reqs[i].rows` — kept incrementally for admission estimates.
+    rows: usize,
+    /// Deficit-round-robin row credit. Grows by `quantum × weight` per
+    /// fresh ring visit, shrinks by rows dispatched, forfeited when
+    /// the queue drains. Naturally bounded by
+    /// `head_rows + quantum × weight`.
+    deficit: u64,
+    /// Credit already granted for the current stay at the ring front —
+    /// re-entering the pick loop after a batching hold must not grant
+    /// twice.
+    visited: bool,
+}
+
+/// Empty `ModelQueue` shells kept for reuse, so bursty tenants do not
+/// churn a `VecDeque` allocation on every idle→busy transition.
+const SPARE_QUEUES: usize = 8;
+
 struct QState {
-    queue: VecDeque<Pending>,
-    /// Tickets currently in `queue` — O(1) pending checks for
-    /// `poll`/`wait` instead of a queue scan under the shared lock.
+    /// Active `(slot, epoch)` queues in DRR ring order; the front is
+    /// the current selection candidate. Tiny (≤ models × 2 epochs),
+    /// scanned linearly.
+    ring: VecDeque<ModelQueue>,
+    /// Capacity-recycling free list for drained ring entries.
+    spare: Vec<ModelQueue>,
+    /// Requests across all ring queues (global backpressure).
+    total_queued: usize,
+    /// Requests queued per slot, across epochs (per-tenant quota).
+    per_slot_queued: Vec<usize>,
+    /// Tickets currently queued — O(1) pending checks for
+    /// `poll`/`wait` instead of a ring scan under the shared lock.
     queued: HashSet<u64>,
-    /// Tickets extracted from the queue whose batch is mid-flight.
+    /// Tickets extracted from their queue whose batch is mid-flight.
     in_flight: HashSet<u64>,
     /// Finished tickets awaiting pickup (single consumption).
     results: HashMap<u64, Result<Vec<f32>, ServingError>>,
@@ -206,8 +318,57 @@ struct QState {
 }
 
 impl QState {
+    fn new(n_slots: usize) -> Self {
+        QState {
+            ring: VecDeque::new(),
+            spare: Vec::new(),
+            total_queued: 0,
+            per_slot_queued: vec![0; n_slots],
+            queued: HashSet::new(),
+            in_flight: HashSet::new(),
+            results: HashMap::new(),
+            finished_order: VecDeque::new(),
+            live_epoch: vec![0; n_slots],
+            outstanding: Vec::new(),
+            next_ticket: 0,
+            shutdown: false,
+        }
+    }
+
     fn is_pending(&self, ticket: u64) -> bool {
         self.queued.contains(&ticket) || self.in_flight.contains(&ticket)
+    }
+
+    /// Append to the `(slot, epoch)` ring queue, creating (or reusing a
+    /// spare) entry at the ring back if the pair has none. New entries
+    /// start with zero deficit — a tenant earns credit by waiting its
+    /// turn, never by arriving.
+    fn enqueue(&mut self, p: Pending) {
+        self.total_queued += 1;
+        self.per_slot_queued[p.slot] += 1;
+        let rows = p.rows;
+        for mq in self.ring.iter_mut() {
+            if mq.slot == p.slot && mq.epoch == p.epoch {
+                mq.rows += rows;
+                mq.reqs.push_back(p);
+                return;
+            }
+        }
+        let mut mq = self.spare.pop().unwrap_or_else(|| ModelQueue {
+            slot: 0,
+            epoch: 0,
+            reqs: VecDeque::new(),
+            rows: 0,
+            deficit: 0,
+            visited: false,
+        });
+        mq.slot = p.slot;
+        mq.epoch = p.epoch;
+        mq.rows = rows;
+        mq.deficit = 0;
+        mq.visited = false;
+        mq.reqs.push_back(p);
+        self.ring.push_back(mq);
     }
 
     fn note_admitted(&mut self, slot: usize, epoch: u64) {
@@ -238,6 +399,16 @@ impl QState {
     }
 }
 
+/// Completion condvar shards (power of two). `wait` parks on
+/// `done[ticket % DONE_SHARDS]`; dispatch wakes only the shards of the
+/// tickets it finished, so a completed batch no longer wakes every
+/// waiter on the engine.
+const DONE_SHARDS: usize = 16;
+
+fn done_shard(ticket: u64) -> usize {
+    (ticket as usize) & (DONE_SHARDS - 1)
+}
+
 struct Shared {
     /// The epoch-swapped model table. A leaf lock held only for the
     /// instants of cloning the `Arc` out or storing a new snapshot in —
@@ -246,6 +417,15 @@ struct Shared {
     cfg_max_batch: usize,
     cfg_max_wait: Duration,
     cfg_queue_cap: usize,
+    /// DRR row credit per ring visit (≥ 1; defaulted to `max_batch`).
+    cfg_quantum: u64,
+    cfg_admission: bool,
+    /// Per-slot resolved tenant policy, indexed like `Snapshot::slots`.
+    tenants: Vec<Tenant>,
+    /// Per-slot EWMA of measured per-row service time, nanoseconds
+    /// (`0` = unmeasured). Written by dispatch, read lock-free by
+    /// submit's admission check; staleness only shifts the estimate.
+    svc_ns: Vec<AtomicU64>,
     pool: Option<Arc<ThreadPool>>,
     q: Mutex<QState>,
     /// Persistent input pack buffer for batched dispatch. Only the
@@ -255,8 +435,8 @@ struct Shared {
     batch_x: Mutex<Vec<f32>>,
     /// Wakes the scheduler (new work / shutdown).
     work: Condvar,
-    /// Wakes `wait`/`infer_sync` callers (new results).
-    done: Condvar,
+    /// Wakes `wait`/`infer_sync` callers, sharded by ticket hash.
+    done: [Condvar; DONE_SHARDS],
 }
 
 impl Shared {
@@ -267,6 +447,11 @@ impl Shared {
     /// Clone the current model table out from under the leaf lock.
     fn snapshot(&self) -> Arc<Snapshot> {
         self.reg.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Lock-free read of a slot's per-row service estimate (ns).
+    fn svc_est_ns(&self, slot: usize) -> u64 {
+        self.svc_ns[slot].load(Ordering::Relaxed)
     }
 }
 
@@ -279,13 +464,29 @@ pub struct ServingEngine {
 
 impl ServingEngine {
     /// Seed the engine from a registry (spawns the scheduler thread).
-    /// The registry must not be empty. Registration order fixes slot
-    /// order; later swaps replace slots in place at epoch > 0.
+    /// The registry must not be empty, and every name in
+    /// [`EngineConfig::tenants`] must be registered. Registration
+    /// order fixes slot order; later swaps replace slots in place at
+    /// epoch > 0.
     pub fn new(registry: ModelRegistry, cfg: EngineConfig) -> crate::Result<Self> {
         if registry.is_empty() {
             return Err(anyhow::anyhow!("serving engine needs at least one model"));
         }
         let (names, models, versions) = registry.into_parts();
+        let queue_cap = cfg.queue_cap.max(1);
+        let mut tenants: Vec<Tenant> = names
+            .iter()
+            .map(|_| Tenant { weight: 1, quota: queue_cap })
+            .collect();
+        for (name, tc) in &cfg.tenants {
+            let i = names.iter().position(|n| n == name).ok_or_else(|| {
+                anyhow::anyhow!("tenant config for unregistered model {name:?}")
+            })?;
+            tenants[i] = Tenant {
+                weight: tc.weight.max(1) as u64,
+                quota: if tc.quota == 0 { queue_cap } else { tc.quota },
+            };
+        }
         let slots: Vec<Slot> = names
             .into_iter()
             .zip(models)
@@ -300,16 +501,22 @@ impl ServingEngine {
             })
             .collect();
         let n = slots.len();
+        let max_batch = cfg.max_batch.max(1);
+        let quantum = if cfg.quantum == 0 { max_batch } else { cfg.quantum };
         let shared = Arc::new(Shared {
             reg: Mutex::new(Arc::new(Snapshot { epoch: 0, slots })),
-            cfg_max_batch: cfg.max_batch.max(1),
+            cfg_max_batch: max_batch,
             cfg_max_wait: cfg.max_wait,
-            cfg_queue_cap: cfg.queue_cap.max(1),
+            cfg_queue_cap: queue_cap,
+            cfg_quantum: quantum.max(1) as u64,
+            cfg_admission: cfg.admission_control,
+            tenants,
+            svc_ns: (0..n).map(|_| AtomicU64::new(0)).collect(),
             pool: cfg.pool,
-            q: Mutex::new(QState { live_epoch: vec![0; n], ..QState::default() }),
+            q: Mutex::new(QState::new(n)),
             batch_x: Mutex::new(Vec::new()),
             work: Condvar::new(),
-            done: Condvar::new(),
+            done: std::array::from_fn(|_| Condvar::new()),
         });
         let sched_shared = shared.clone();
         let scheduler = std::thread::Builder::new()
@@ -438,10 +645,11 @@ impl ServingEngine {
     }
 
     /// Validate and enqueue a request; returns its ticket. Typed
-    /// failures: unknown model, empty/mis-sized input, full queue
-    /// (backpressure), engine shut down. Admission pins the model
-    /// epoch: the logits this ticket redeems are computed by the
-    /// backend that was live at queue insertion, even across swaps.
+    /// failures: unknown model, empty/mis-sized input, per-tenant
+    /// quota, full queue (backpressure), infeasible deadline, engine
+    /// shut down. Admission pins the model epoch: the logits this
+    /// ticket redeems are computed by the backend that was live at
+    /// queue insertion, even across swaps.
     pub fn submit(&self, req: InferRequest) -> Result<Ticket, ServingError> {
         let sh = &self.shared;
         let input = req.input;
@@ -483,12 +691,52 @@ impl ServingEngine {
                     // exact and per-thread results monotonic in epoch)
                     continue;
                 }
-                if q.queue.len() >= sh.cfg_queue_cap {
+                let quota = sh.tenants[slot].quota;
+                if q.per_slot_queued[slot] >= quota {
+                    // the per-tenant rejection outranks QueueFull: a
+                    // quota-limited tenant learns it is the one being
+                    // throttled even when the queue is also full
+                    // lint:allow(lock-hygiene) fixed order q -> stats; stats is a leaf lock
+                    s.stats.lock().unwrap_or_else(|e| e.into_inner()).rejected_quota += 1;
+                    return Err(ServingError::QuotaExceeded {
+                        model: req.model.clone(),
+                        quota,
+                    });
+                }
+                if q.total_queued >= sh.cfg_queue_cap {
+                    // lint:allow(lock-hygiene) fixed order q -> stats; stats is a leaf lock
+                    s.stats.lock().unwrap_or_else(|e| e.into_inner()).rejected_full += 1;
                     return Err(ServingError::QueueFull { cap: sh.cfg_queue_cap });
+                }
+                if sh.cfg_admission {
+                    if let Some(d) = deadline {
+                        // conservative backlog-drain estimate: every
+                        // queued row, plus this request's own, at each
+                        // slot's measured per-row service time (0 until
+                        // first measured — admission never rejects on a
+                        // cold engine)
+                        let mut est_ns =
+                            (rows as u64).saturating_mul(sh.svc_est_ns(slot));
+                        for mq in q.ring.iter() {
+                            est_ns = est_ns.saturating_add(
+                                (mq.rows as u64)
+                                    .saturating_mul(sh.svc_est_ns(mq.slot)),
+                            );
+                        }
+                        let est = Duration::from_nanos(est_ns);
+                        if est > d {
+                            // lint:allow(lock-hygiene) fixed order q -> stats; stats is a leaf lock
+                            s.stats.lock().unwrap_or_else(|e| e.into_inner()).rejected_infeasible += 1;
+                            return Err(ServingError::DeadlineInfeasible {
+                                estimated: est,
+                                deadline: d,
+                            });
+                        }
+                    }
                 }
                 let ticket = q.next_ticket;
                 q.next_ticket += 1;
-                q.queue.push_back(Pending {
+                q.enqueue(Pending {
                     ticket,
                     slot,
                     epoch: s.epoch,
@@ -535,9 +783,12 @@ impl ServingEngine {
         Poll::Failed(ServingError::UnknownTicket(t.0))
     }
 
-    /// Block until the ticket completes; consumes the result.
+    /// Block until the ticket completes; consumes the result. Parks on
+    /// the ticket's condvar shard — completions of unrelated tickets
+    /// (outside the shard) do not wake this caller.
     pub fn wait(&self, t: Ticket) -> Result<Vec<f32>, ServingError> {
         let sh = &self.shared;
+        let done = &sh.done[done_shard(t.0)];
         let mut q = sh.q.lock().expect("serving queue poisoned");
         loop {
             if let Some(r) = q.results.remove(&t.0) {
@@ -546,7 +797,7 @@ impl ServingEngine {
             if !q.is_pending(t.0) {
                 return Err(ServingError::UnknownTicket(t.0));
             }
-            q = sh.done.wait(q).expect("serving queue poisoned");
+            q = done.wait(q).expect("serving queue poisoned");
         }
     }
 
@@ -555,6 +806,12 @@ impl ServingEngine {
     pub fn infer_sync(&self, req: InferRequest) -> Result<Vec<f32>, ServingError> {
         let t = self.submit(req)?;
         self.wait(t)
+    }
+
+    /// Width of the compute pool batches run on (the soak harness
+    /// stamps this into its reports).
+    pub fn pool_width(&self) -> usize {
+        self.shared.pool().threads()
     }
 
     /// Snapshot of one model's serving counters (cumulative across
@@ -605,7 +862,7 @@ impl Drop for ServingEngine {
 /// margin the subtraction lands in the past and dispatch is immediate.
 const DEADLINE_DISPATCH_MARGIN: Duration = Duration::from_millis(5);
 
-/// A batch extracted for dispatch (already removed from the queue).
+/// A batch extracted for dispatch (already removed from its queue).
 /// All requests share one `(slot, epoch)` — batches are epoch-pure by
 /// construction.
 struct Extracted {
@@ -614,52 +871,157 @@ struct Extracted {
     reqs: Vec<Pending>,
 }
 
+/// Deficit-round-robin selection: rotate the ring until the front
+/// queue's credit covers its head request, granting `quantum × weight`
+/// once per fresh visit. The chosen queue stays at the front (possibly
+/// across several dispatches while its deficit lasts — that is what
+/// makes shares proportional to weights); every full rotation strictly
+/// grows every backlogged queue's deficit, so selection terminates in
+/// at most `O(max_head_rows / quantum)` rotations.
+fn drr_select(q: &mut QState, quantum: u64, tenants: &[Tenant]) {
+    loop {
+        let front = q.ring.front_mut().expect("drr_select on empty ring");
+        if !front.visited {
+            let w = tenants[front.slot].weight;
+            front.deficit = front.deficit.saturating_add(quantum.saturating_mul(w));
+            front.visited = true;
+        }
+        let head_rows =
+            front.reqs.front().expect("ring entries are nonempty").rows as u64;
+        if front.deficit >= head_rows {
+            return;
+        }
+        // not enough credit yet: rotate to the back, keep the deficit
+        front.visited = false;
+        let mq = q.ring.pop_front().expect("checked nonempty");
+        q.ring.push_back(mq);
+    }
+}
+
+/// Extract the selected (front) queue's batch in ticket order: up to
+/// `min(max_batch, deficit)` rows, the head request always included.
+/// The first non-fitting request ends the scan — later smaller
+/// requests never leapfrog it, so same-model completion keeps FIFO
+/// order. Afterwards the queue keeps the ring floor while its deficit
+/// covers its next head, rotates with the remainder otherwise, and is
+/// retired to the spare list when drained (forfeiting credit).
+fn extract_batch(q: &mut QState, max_batch: usize) -> Extracted {
+    let (slot, epoch, reqs) = {
+        let front = q.ring.front_mut().expect("extract on empty ring");
+        let cap_rows = (front.deficit.min(max_batch as u64)) as usize;
+        // lint:allow(hot-path-alloc) O(batch) container; payloads are moved, not copied
+        let mut reqs: Vec<Pending> = Vec::new();
+        let mut total = 0usize;
+        while let Some(p) = front.reqs.front() {
+            if total != 0 && total + p.rows > cap_rows {
+                break;
+            }
+            let p = front.reqs.pop_front().expect("checked front");
+            total += p.rows;
+            front.rows = front.rows.saturating_sub(p.rows);
+            reqs.push(p);
+            if total >= cap_rows {
+                break;
+            }
+        }
+        front.deficit = front.deficit.saturating_sub(total as u64);
+        (front.slot, front.epoch, reqs)
+    };
+    for p in reqs.iter() {
+        q.queued.remove(&p.ticket);
+        q.in_flight.insert(p.ticket);
+    }
+    q.total_queued = q.total_queued.saturating_sub(reqs.len());
+    q.per_slot_queued[slot] =
+        q.per_slot_queued[slot].saturating_sub(reqs.len());
+    let (drained, keep_floor) = {
+        let front = q.ring.front().expect("ring front");
+        match front.reqs.front() {
+            None => (true, false),
+            Some(next) => (false, front.deficit >= next.rows as u64),
+        }
+    };
+    if drained {
+        let mut mq = q.ring.pop_front().expect("checked front");
+        mq.deficit = 0;
+        mq.visited = false;
+        mq.rows = 0;
+        if q.spare.len() < SPARE_QUEUES {
+            q.spare.push(mq);
+        }
+    } else if !keep_floor {
+        // turn over: rotate to the back with the remainder; the next
+        // fresh visit grants another quantum
+        let front = q.ring.front_mut().expect("ring front");
+        front.visited = false;
+        let mq = q.ring.pop_front().expect("checked front");
+        q.ring.push_back(mq);
+    }
+    Extracted { slot, epoch, reqs }
+}
+
 fn scheduler_loop(sh: &Shared) {
     loop {
         let batch = {
             let mut q = sh.q.lock().expect("serving queue poisoned");
             loop {
-                if q.queue.is_empty() {
+                if q.total_queued == 0 {
                     if q.shutdown {
                         return;
                     }
                     q = sh.work.wait(q).expect("serving queue poisoned");
                     continue;
                 }
-                // the coalescing key is (slot, epoch): a swap mid-queue
-                // splits one model's requests into two never-mixed runs
-                let head_slot = q.queue[0].slot;
-                let head_epoch = q.queue[0].epoch;
-                let oldest = q.queue[0].submitted;
+                // pick the next tenant queue by deficit-round-robin;
+                // afterwards the candidate is the ring front (stable
+                // across the batching hold below — submits only append)
+                drr_select(&mut q, sh.cfg_quantum, &sh.tenants);
+                let front = q.ring.front().expect("selected front");
+                let oldest =
+                    front.reqs.front().expect("nonempty queue").submitted;
+                // this dispatch's row budget: the DRR credit, capped by
+                // max_batch, floored by the head request (which always
+                // dispatches alone if oversized)
+                let cap_rows =
+                    (front.deficit.min(sh.cfg_max_batch as u64)) as usize;
                 let mut rows_ready = 0usize;
-                // the hold window is bounded by max_wait from the oldest
-                // request AND by the earliest deadline of ANY queued
-                // request (with a margin so the wake lands *before* the
-                // deadline): a tight deadline must force a flush — of
-                // the head batch, then its own model's — not expire
-                // behind an unrelated hold on an idle engine
-                let mut hold_until = oldest + sh.cfg_max_wait;
-                for p in q.queue.iter() {
-                    if p.slot == head_slot && p.epoch == head_epoch {
-                        rows_ready += p.rows;
+                for p in front.reqs.iter() {
+                    if rows_ready != 0 && rows_ready + p.rows > cap_rows {
+                        break;
                     }
-                    if let Some(d) = p.deadline {
-                        let dispatch_by = d
-                            .checked_sub(DEADLINE_DISPATCH_MARGIN)
-                            .unwrap_or_else(Instant::now);
-                        if dispatch_by < hold_until {
-                            hold_until = dispatch_by;
+                    rows_ready += p.rows;
+                    if rows_ready >= cap_rows {
+                        break;
+                    }
+                }
+                // the hold window is bounded by max_wait from the
+                // selected queue's oldest request AND by the earliest
+                // deadline of ANY queued request (with a margin so the
+                // wake lands *before* the deadline): a tight deadline
+                // must force a flush — of the selected batch, then its
+                // own model's — not expire behind an unrelated hold
+                let mut hold_until = oldest + sh.cfg_max_wait;
+                for mq in q.ring.iter() {
+                    for p in mq.reqs.iter() {
+                        if let Some(d) = p.deadline {
+                            let dispatch_by = d
+                                .checked_sub(DEADLINE_DISPATCH_MARGIN)
+                                .unwrap_or_else(Instant::now);
+                            if dispatch_by < hold_until {
+                                hold_until = dispatch_by;
+                            }
                         }
                     }
                 }
                 let window_left =
                     hold_until.saturating_duration_since(Instant::now());
-                if rows_ready < sh.cfg_max_batch
+                if rows_ready < cap_rows
                     && !window_left.is_zero()
                     && !q.shutdown
                 {
                     // hold for more same-model arrivals, bounded by the
-                    // oldest request's batching window
+                    // selected queue's batching window; the re-entered
+                    // pick sees `visited` set and grants no new credit
                     let (guard, _) = sh
                         .work
                         .wait_timeout(q, window_left)
@@ -667,36 +1029,7 @@ fn scheduler_loop(sh: &Shared) {
                     q = guard;
                     continue;
                 }
-                // extract same-(slot, epoch) requests in ticket order up
-                // to max_batch rows (the first request always fits). A
-                // matching request that does NOT fit ends the scan —
-                // later smaller requests must not leapfrog it, so
-                // same-model completion keeps FIFO order.
-                // lint:allow(hot-path-alloc) O(batch) container; payloads are moved, not copied
-                let mut reqs: Vec<Pending> = Vec::new();
-                let mut total_rows = 0usize;
-                let mut i = 0usize;
-                while i < q.queue.len() {
-                    let p = &q.queue[i];
-                    if p.slot != head_slot || p.epoch != head_epoch {
-                        i += 1;
-                        continue;
-                    }
-                    if total_rows != 0
-                        && total_rows + p.rows > sh.cfg_max_batch
-                    {
-                        break;
-                    }
-                    total_rows += p.rows;
-                    let p = q.queue.remove(i).expect("indexed pending");
-                    q.queued.remove(&p.ticket);
-                    q.in_flight.insert(p.ticket);
-                    reqs.push(p);
-                    if total_rows >= sh.cfg_max_batch {
-                        break;
-                    }
-                }
-                break Extracted { slot: head_slot, epoch: head_epoch, reqs };
+                break extract_batch(&mut q, sh.cfg_max_batch);
             }
         };
         dispatch(sh, batch);
@@ -724,8 +1057,10 @@ fn dispatch(sh: &Shared, batch: Extracted) {
     {
         let mut st = stats.lock().unwrap_or_else(|e| e.into_inner());
         for p in &dead {
+            let waited = dispatch_t.duration_since(p.submitted).as_secs_f64();
             st.expired += 1;
-            st.queue_s += dispatch_t.duration_since(p.submitted).as_secs_f64();
+            st.queue_s += waited;
+            st.queue_h.record(waited);
         }
     }
     for p in &dead {
@@ -766,6 +1101,14 @@ fn dispatch(sh: &Shared, batch: Extracted) {
             }
         });
         let infer_s = t_infer.elapsed().as_secs_f64();
+        if result.is_ok() && rows > 0 {
+            // fold the measured per-row cost into the admission
+            // estimate (EWMA, α = 1/8; first sample seeds directly)
+            let obs = (infer_s * 1e9 / rows as f64) as u64;
+            let old = sh.svc_ns[batch.slot].load(Ordering::Relaxed);
+            let new = if old == 0 { obs } else { (old * 7 + obs) / 8 };
+            sh.svc_ns[batch.slot].store(new, Ordering::Relaxed);
+        }
         let done_t = Instant::now();
         {
             // lint:allow(lock-hygiene) fixed order batch_x -> stats; stats is a leaf lock
@@ -774,16 +1117,20 @@ fn dispatch(sh: &Shared, batch: Extracted) {
             st.infer_s += infer_s;
             st.max_batch_rows = st.max_batch_rows.max(rows as u64);
             for p in &live {
-                st.queue_s +=
+                let waited =
                     dispatch_t.duration_since(p.submitted).as_secs_f64();
+                st.queue_s += waited;
+                st.queue_h.record(waited);
             }
             match &result {
                 Ok(_) => {
                     st.rows += rows as u64;
                     st.completed += live.len() as u64;
                     for p in &live {
-                        st.latency_s +=
+                        let lat =
                             done_t.duration_since(p.submitted).as_secs_f64();
+                        st.latency_s += lat;
+                        st.latency_h.record(lat);
                     }
                 }
                 Err(_) => st.failed += live.len() as u64,
@@ -810,11 +1157,15 @@ fn dispatch(sh: &Shared, batch: Extracted) {
         }
     }
 
+    // wake only the condvar shards of tickets finished (or evicted)
+    // here — a batch for one client no longer wakes every waiter
+    let mut wake_mask: u32 = 0;
     let mut q = sh.q.lock().expect("serving queue poisoned");
     for (ticket, r) in outcome {
         q.in_flight.remove(&ticket);
         q.results.insert(ticket, r);
         q.finished_order.push_back(ticket);
+        wake_mask |= 1u32 << done_shard(ticket);
     }
     let epoch_drained = q.note_finished(batch.slot, batch.epoch, n_reqs);
     // retention cap: abandoned (never-redeemed) results are evicted
@@ -823,19 +1174,26 @@ fn dispatch(sh: &Shared, batch: Extracted) {
     // is in finished_order (consumed tickets just leave stale order
     // entries, removed harmlessly here), so bounding the order bounds
     // the map. The cap is wide enough (4× queue_cap) that a live
-    // waiter — woken by the notify_all below — cannot realistically
-    // lose its result.
+    // waiter — woken through its shard below — cannot realistically
+    // lose its result; its shard is notified anyway so even then it
+    // observes UnknownTicket instead of sleeping forever.
     let cap = sh.cfg_queue_cap.saturating_mul(4).max(64);
     while q.finished_order.len() > cap {
         match q.finished_order.pop_front() {
             Some(old) => {
                 q.results.remove(&old);
+                wake_mask |= 1u32 << done_shard(old);
             }
             None => break,
         }
     }
     drop(q);
-    sh.done.notify_all();
+    let mut m = wake_mask;
+    while m != 0 {
+        let i = m.trailing_zeros() as usize;
+        sh.done[i].notify_all();
+        m &= m - 1;
+    }
     if epoch_drained {
         // the superseded epoch's last outstanding request just
         // finished: when `live`/`dead` drop at the end of this call,

@@ -33,15 +33,31 @@
 //!   typically come from a [`crate::store::ModelStore`] version.
 //!   Tested under concurrent mixed-model load in
 //!   `tests/serving_swap.rs`.
-//! * **Backpressure.** The queue is bounded
-//!   ([`EngineConfig::queue_cap`]); a full queue rejects with the typed
-//!   [`ServingError::QueueFull`] instead of buffering unboundedly.
+//! * **Weighted fair share.** The scheduler picks the next batch by
+//!   deficit-round-robin across per-`(slot, epoch)` model queues with
+//!   configurable per-model weights ([`TenantConfig::weight`] via
+//!   [`EngineConfig::tenants`]) — a chatty tenant gets its weighted
+//!   share of dispatched rows, never the whole engine. Within a model,
+//!   ticket order is preserved, so the bit-identical batching contract
+//!   above is unchanged. See the deficit-round-robin notes in the
+//!   [`engine`](self) module docs; property-tested in
+//!   `tests/serving_fair.rs` and soak-tested by [`crate::soak`].
+//! * **Backpressure + quotas.** The queue is bounded globally
+//!   ([`EngineConfig::queue_cap`] → typed [`ServingError::QueueFull`])
+//!   and per model ([`TenantConfig::quota`] → typed
+//!   [`ServingError::QuotaExceeded`]), so one tenant can neither
+//!   buffer unboundedly nor squeeze the others out of the shared queue.
 //! * **Deadlines.** A request may carry a relative deadline; requests
 //!   still queued when it passes are failed with
 //!   [`ServingError::DeadlineExpired`] — their compute is never run.
+//!   Deadline-feasibility admission control additionally rejects at
+//!   `submit`, with [`ServingError::DeadlineInfeasible`], requests
+//!   whose deadline cannot be met given the current queue backlog and
+//!   a measured per-row service-time estimate — the client learns
+//!   immediately instead of burning queue capacity on a doomed wait.
 //! * **Metrics.** Per-model [`crate::metrics::ServingCounters`]
-//!   (throughput, coalescing, queue/latency sums) via
-//!   [`ServingEngine::stats`].
+//!   (throughput, coalescing, queue/latency sums, p50/p95/p99
+//!   histograms, typed rejection counts) via [`ServingEngine::stats`].
 //!
 //! Two backend implementations:
 //! [`crate::backend::sparse_infer::SparseInfer`] (the
@@ -53,6 +69,7 @@ mod engine;
 
 use std::fmt;
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::backend::native::NativeBackend;
 use crate::backend::sparse_infer::SparseInfer;
@@ -62,7 +79,8 @@ use crate::runtime::manifest::ModelEntry;
 use crate::util::ThreadPool;
 
 pub use engine::{
-    EngineConfig, InferRequest, ModelVersion, Poll, ServingEngine, Ticket,
+    EngineConfig, InferRequest, ModelVersion, Poll, ServingEngine,
+    TenantConfig, Ticket,
 };
 
 /// Typed serving errors — the scheduler's control-flow outcomes
@@ -85,8 +103,15 @@ pub enum ServingError {
     DuplicateModel(String),
     /// The bounded request queue is full — back off and retry.
     QueueFull { cap: usize },
+    /// The model's per-tenant queue quota is exhausted — this tenant
+    /// must back off, but other models' submits still go through.
+    QuotaExceeded { model: String, quota: usize },
     /// The request's deadline passed while it was still queued.
     DeadlineExpired,
+    /// Admission control: given the measured per-row service time and
+    /// the current backlog, the request's deadline cannot be met —
+    /// rejected at submit, never enqueued.
+    DeadlineInfeasible { estimated: Duration, deadline: Duration },
     /// The engine is shutting down and accepts no new requests.
     ShutDown,
     /// The ticket was never issued, or its result was already taken.
@@ -114,9 +139,18 @@ impl fmt::Display for ServingError {
             ServingError::QueueFull { cap } => {
                 write!(f, "request queue full (cap {cap})")
             }
+            ServingError::QuotaExceeded { model, quota } => {
+                write!(f, "model {model:?} queue quota exhausted (quota {quota})")
+            }
             ServingError::DeadlineExpired => {
                 write!(f, "deadline expired before dispatch")
             }
+            ServingError::DeadlineInfeasible { estimated, deadline } => write!(
+                f,
+                "deadline {}us infeasible: estimated backlog {}us at submit",
+                deadline.as_micros(),
+                estimated.as_micros()
+            ),
             ServingError::ShutDown => write!(f, "serving engine shut down"),
             ServingError::UnknownTicket(t) => {
                 write!(f, "ticket {t} unknown or already consumed")

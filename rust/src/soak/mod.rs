@@ -1,0 +1,377 @@
+//! Deterministic soak-test subsystem for the serving engine.
+//!
+//! A soak run replays a seeded, pre-materialized arrival schedule
+//! ([`gen`]) against a *real* [`ServingEngine`] from N submitter
+//! threads, then grades the observed behaviour against explicit
+//! invariants ([`score`]): no admitted ticket is ever lost, no tenant
+//! starves past its weight-scaled bound, the quota/backpressure
+//! accounting closes exactly against the engine's own counters, and
+//! spot-checked logits are bit-identical to serial reference calls.
+//!
+//! Determinism is split in two: the *load* (arrival order, model mix,
+//! row counts, deadlines, input values) is a pure function of the
+//! seed, while the *interleaving* the engine sees is real — threads
+//! race, batches coalesce differently run to run. The invariants are
+//! exactly the properties that must hold across every interleaving,
+//! which is what makes a soak score meaningful rather than a golden
+//! trace diff. Wired up as the `soak` CLI subcommand and
+//! `make bench-soak` → `BENCH_soak.json`.
+
+pub mod gen;
+pub mod score;
+
+pub use gen::{Arrival, Profile, XorShift64};
+pub use score::{
+    Invariant, ModelScore, ModelTally, Outcome, ReqRecord, SoakReport,
+};
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::bail;
+
+use crate::metrics::ServingCounters;
+use crate::serving::{
+    InferBackend, InferRequest, ServingEngine, ServingError, Ticket,
+};
+use crate::util::ThreadPool;
+
+/// One model in the soak mix: the engine-registered name, the backend
+/// used for serial reference calls, and the fair-share weight the
+/// engine was configured with (the scorer turns it into a wait bound).
+pub struct ModelUnderTest {
+    pub name: String,
+    pub backend: Arc<dyn InferBackend>,
+    pub weight: u32,
+}
+
+/// Soak run shape. `requests` is the total across all submitters;
+/// `tick` maps the schedule's virtual ticks onto wall-clock time, so
+/// shrinking it compresses the same logical run into less real time.
+#[derive(Clone, Debug)]
+pub struct SoakConfig {
+    pub profile: Profile,
+    pub seed: u64,
+    pub submitters: usize,
+    pub requests: usize,
+    pub tick: Duration,
+    /// Spot-check every Nth request per submitter (0 = never).
+    pub spot_every: usize,
+    /// Max unresolved tickets a submitter carries before it blocks on
+    /// the oldest — bounds client-side reordering of `wait` calls.
+    pub window: usize,
+    /// Base of the starvation bound: model `i` may wait at most
+    /// `slack × total_weight / weight_i`. Client-observed waits
+    /// include submitter drain lag, so keep this generous.
+    pub starvation_slack: Duration,
+}
+
+impl Default for SoakConfig {
+    fn default() -> Self {
+        SoakConfig {
+            profile: Profile::AdversarialDeadline,
+            seed: 42,
+            submitters: 4,
+            requests: 256,
+            tick: Duration::from_micros(50),
+            spot_every: 7,
+            window: 32,
+            starvation_slack: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Virtual ticks → wall-clock offset.
+fn ticks(tick: Duration, n: u64) -> Duration {
+    Duration::from_nanos((tick.as_nanos() as u64).saturating_mul(n))
+}
+
+fn classify_reject(e: ServingError) -> Outcome {
+    match e {
+        ServingError::QueueFull { .. } => Outcome::RejectedFull,
+        ServingError::QuotaExceeded { .. } => Outcome::RejectedQuota,
+        ServingError::DeadlineInfeasible { .. } => Outcome::RejectedInfeasible,
+        _ => Outcome::RejectedOther,
+    }
+}
+
+type PendingEntry = (Ticket, usize, Instant, Option<Vec<f32>>, usize);
+
+/// Block on one admitted ticket and classify its terminal outcome.
+/// Spot-checked requests recompute their logits through the backend
+/// directly on a width-1 pool and compare bit-for-bit.
+fn resolve(
+    engine: &ServingEngine,
+    models: &[ModelUnderTest],
+    serial: &ThreadPool,
+    entry: PendingEntry,
+) -> ReqRecord {
+    let (t, model, submitted, spot_x, rows) = entry;
+    match engine.wait(t) {
+        Ok(logits) => {
+            let wait = submitted.elapsed();
+            let spot = spot_x.map(|x| {
+                match models[model].backend.infer_batch(serial, &x, rows) {
+                    Ok(want) => {
+                        want.len() == logits.len()
+                            && want
+                                .iter()
+                                .zip(&logits)
+                                .all(|(a, b)| a.to_bits() == b.to_bits())
+                    }
+                    Err(_) => false,
+                }
+            });
+            ReqRecord { model, outcome: Outcome::Completed { spot }, wait }
+        }
+        Err(e) => {
+            let wait = submitted.elapsed();
+            let outcome = match e {
+                ServingError::DeadlineExpired => Outcome::Expired,
+                ServingError::Backend(_) => Outcome::FailedBackend,
+                // UnknownTicket / ShutDown for a ticket we hold is
+                // exactly what "lost" means
+                _ => Outcome::Lost,
+            };
+            ReqRecord { model, outcome, wait }
+        }
+    }
+}
+
+/// Run one soak profile against `engine` and score it. The engine must
+/// be freshly constructed (zero counters) with every model in `models`
+/// registered — cumulative counters from earlier traffic would break
+/// the accounting cross-check.
+pub fn run(
+    engine: &ServingEngine,
+    models: &[ModelUnderTest],
+    cfg: &SoakConfig,
+) -> crate::Result<SoakReport> {
+    if models.is_empty() {
+        bail!("soak run needs at least one model");
+    }
+    for m in models {
+        match engine.stats(&m.name) {
+            None => bail!("model {:?} is not registered in the engine", m.name),
+            Some(st) => {
+                if st.submitted + st.rejected() != 0 {
+                    bail!(
+                        "engine has prior traffic for {:?} — soak needs a \
+                         fresh engine to close accounting",
+                        m.name
+                    );
+                }
+            }
+        }
+    }
+
+    let schedules = gen::schedule(
+        cfg.profile,
+        cfg.seed,
+        cfg.submitters,
+        cfg.requests,
+        models.len(),
+        cfg.spot_every,
+    );
+    let serial = ThreadPool::new(1);
+    let window = cfg.window.max(1);
+    let start = Instant::now();
+
+    let records: Vec<Vec<ReqRecord>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(schedules.len());
+        for (sub, sched) in schedules.iter().enumerate() {
+            let serial = &serial;
+            handles.push(scope.spawn(move || {
+                let mut recs: Vec<ReqRecord> = Vec::with_capacity(sched.len());
+                let mut pending: VecDeque<PendingEntry> = VecDeque::new();
+                for (i, a) in sched.iter().enumerate() {
+                    let target = start + ticks(cfg.tick, a.at_ticks);
+                    let now = Instant::now();
+                    if target > now {
+                        std::thread::sleep(target - now);
+                    }
+                    let m = &models[a.model];
+                    let dim = m.backend.input_dim();
+                    let mut rng = XorShift64::for_request(
+                        cfg.seed,
+                        sub as u64,
+                        i as u64,
+                    );
+                    let x: Vec<f32> = (0..dim * a.rows)
+                        .map(|_| (rng.uniform() * 2.0 - 1.0) as f32)
+                        .collect();
+                    let keep = if a.spot_check { Some(x.clone()) } else { None };
+                    let mut req = InferRequest::new(m.name.clone(), x);
+                    if let Some(dt) = a.deadline_ticks {
+                        req = req.with_deadline(ticks(cfg.tick, dt));
+                    }
+                    let submitted_at = Instant::now();
+                    match engine.submit(req) {
+                        Ok(t) => pending.push_back((
+                            t,
+                            a.model,
+                            submitted_at,
+                            keep,
+                            a.rows,
+                        )),
+                        Err(e) => recs.push(ReqRecord {
+                            model: a.model,
+                            outcome: classify_reject(e),
+                            wait: Duration::ZERO,
+                        }),
+                    }
+                    while pending.len() > window {
+                        let entry = pending.pop_front().expect("len checked");
+                        recs.push(resolve(engine, models, serial, entry));
+                    }
+                }
+                while let Some(entry) = pending.pop_front() {
+                    recs.push(resolve(engine, models, serial, entry));
+                }
+                recs
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("soak submitter panicked"))
+            .collect()
+    });
+
+    let mut tallies = vec![ModelTally::default(); models.len()];
+    for recs in &records {
+        for r in recs {
+            tallies[r.model].push(r);
+        }
+    }
+    let stats: Vec<ServingCounters> = models
+        .iter()
+        .map(|m| engine.stats(&m.name).expect("model vanished mid-run"))
+        .collect();
+    let names: Vec<(String, u32)> =
+        models.iter().map(|m| (m.name.clone(), m.weight)).collect();
+
+    Ok(score::evaluate(
+        cfg.profile,
+        cfg.seed,
+        engine.pool_width(),
+        &names,
+        tallies,
+        &stats,
+        cfg.starvation_slack,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::{EngineConfig, ModelRegistry, TenantConfig};
+
+    /// Deterministic toy backend: logit = 2x, row-independent.
+    struct Echo {
+        name: &'static str,
+        dim: usize,
+    }
+
+    impl InferBackend for Echo {
+        fn name(&self) -> &str {
+            self.name
+        }
+
+        fn input_dim(&self) -> usize {
+            self.dim
+        }
+
+        fn n_classes(&self) -> usize {
+            self.dim
+        }
+
+        fn infer_batch(
+            &self,
+            _pool: &ThreadPool,
+            x: &[f32],
+            bsz: usize,
+        ) -> crate::Result<Vec<f32>> {
+            assert_eq!(x.len(), bsz * self.dim);
+            Ok(x.iter().map(|v| v * 2.0).collect())
+        }
+    }
+
+    fn engine_two_models(width: usize) -> (ServingEngine, Vec<ModelUnderTest>) {
+        let a: Arc<dyn InferBackend> = Arc::new(Echo { name: "hot", dim: 6 });
+        let b: Arc<dyn InferBackend> = Arc::new(Echo { name: "cold", dim: 4 });
+        let mut reg = ModelRegistry::new();
+        reg.register(a.clone()).unwrap();
+        reg.register(b.clone()).unwrap();
+        let cfg = EngineConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 128,
+            pool: Some(Arc::new(ThreadPool::new(width))),
+            tenants: vec![
+                ("hot".into(), TenantConfig { weight: 3, quota: 0 }),
+                ("cold".into(), TenantConfig { weight: 1, quota: 0 }),
+            ],
+            ..EngineConfig::default()
+        };
+        let engine = ServingEngine::new(reg, cfg).unwrap();
+        let models = vec![
+            ModelUnderTest { name: "hot".into(), backend: a, weight: 3 },
+            ModelUnderTest { name: "cold".into(), backend: b, weight: 1 },
+        ];
+        (engine, models)
+    }
+
+    #[test]
+    fn smoke_steady_run_passes() {
+        let (engine, models) = engine_two_models(2);
+        let cfg = SoakConfig {
+            profile: Profile::Steady,
+            requests: 60,
+            submitters: 2,
+            tick: Duration::from_micros(20),
+            spot_every: 5,
+            starvation_slack: Duration::from_secs(5),
+            ..SoakConfig::default()
+        };
+        let report = run(&engine, &models, &cfg).unwrap();
+        assert!(report.passed(), "{}", report.render());
+        assert_eq!(report.pool_width, 2);
+        let attempts: u64 =
+            report.models.iter().map(|m| m.tally.attempts).sum();
+        assert_eq!(attempts, 60);
+        let checks: u64 =
+            report.models.iter().map(|m| m.tally.spot_checks).sum();
+        assert!(checks > 0, "no spot checks completed");
+    }
+
+    #[test]
+    fn reusing_a_dirty_engine_is_rejected() {
+        let (engine, models) = engine_two_models(1);
+        let cfg = SoakConfig {
+            profile: Profile::Steady,
+            requests: 10,
+            submitters: 1,
+            tick: Duration::from_micros(10),
+            ..SoakConfig::default()
+        };
+        run(&engine, &models, &cfg).unwrap();
+        let err = run(&engine, &models, &cfg).unwrap_err();
+        assert!(err.to_string().contains("prior traffic"), "{err}");
+    }
+
+    #[test]
+    fn unregistered_model_is_rejected() {
+        let (engine, _) = engine_two_models(1);
+        let ghost: Arc<dyn InferBackend> =
+            Arc::new(Echo { name: "ghost", dim: 2 });
+        let models = vec![ModelUnderTest {
+            name: "ghost".into(),
+            backend: ghost,
+            weight: 1,
+        }];
+        let err =
+            run(&engine, &models, &SoakConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("not registered"), "{err}");
+    }
+}

@@ -1,0 +1,555 @@
+//! Soak-run scoring: fold per-submitter request records into per-model
+//! tallies, cross-check them against the engine's own counters, and
+//! grade the run against the four soak invariants.
+//!
+//! All aggregation walks `Vec`s indexed by model position — no hash
+//! iteration — and `render()`/`to_json()` emit fields in a fixed
+//! order, so a report for a given `(seed, profile, width)` is
+//! byte-stable run to run wherever the underlying counts are.
+
+use std::time::Duration;
+
+use crate::metrics::{LatencyHisto, ServingCounters};
+use crate::util::json::Json;
+
+use super::gen::Profile;
+
+/// Client-side outcome of one scheduled request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Logits delivered; `Some(ok)` when this request was spot-checked
+    /// against the serial reference.
+    Completed { spot: Option<bool> },
+    /// Admitted, then dropped at dispatch past its deadline.
+    Expired,
+    /// Admitted, reached the backend, and the backend failed.
+    FailedBackend,
+    /// Rejected at submit by global backpressure.
+    RejectedFull,
+    /// Rejected at submit by the model's queue quota.
+    RejectedQuota,
+    /// Rejected at submit by deadline-feasibility admission control.
+    RejectedInfeasible,
+    /// Rejected at submit for any other reason (treated as a failure
+    /// of the harness config, not of the engine).
+    RejectedOther,
+    /// Admitted but never resolvable — the invariant every other
+    /// outcome exists to rule out.
+    Lost,
+}
+
+/// One request's record as seen by its submitter thread.
+#[derive(Clone, Copy, Debug)]
+pub struct ReqRecord {
+    pub model: usize,
+    pub outcome: Outcome,
+    /// submit → resolve, client-observed. Zero for rejected requests.
+    pub wait: Duration,
+}
+
+/// Per-model client-side tally folded from [`ReqRecord`]s.
+#[derive(Clone, Debug, Default)]
+pub struct ModelTally {
+    pub attempts: u64,
+    pub admitted: u64,
+    pub completed: u64,
+    pub expired: u64,
+    pub failed: u64,
+    pub rejected_full: u64,
+    pub rejected_quota: u64,
+    pub rejected_infeasible: u64,
+    pub rejected_other: u64,
+    pub lost: u64,
+    pub max_wait: Duration,
+    pub spot_checks: u64,
+    pub spot_mismatches: u64,
+}
+
+impl ModelTally {
+    pub fn push(&mut self, r: &ReqRecord) {
+        self.attempts += 1;
+        match r.outcome {
+            Outcome::Completed { spot } => {
+                self.admitted += 1;
+                self.completed += 1;
+                if let Some(ok) = spot {
+                    self.spot_checks += 1;
+                    if !ok {
+                        self.spot_mismatches += 1;
+                    }
+                }
+            }
+            Outcome::Expired => {
+                self.admitted += 1;
+                self.expired += 1;
+            }
+            Outcome::FailedBackend => {
+                self.admitted += 1;
+                self.failed += 1;
+            }
+            Outcome::RejectedFull => self.rejected_full += 1,
+            Outcome::RejectedQuota => self.rejected_quota += 1,
+            Outcome::RejectedInfeasible => self.rejected_infeasible += 1,
+            Outcome::RejectedOther => self.rejected_other += 1,
+            Outcome::Lost => {
+                self.admitted += 1;
+                self.lost += 1;
+            }
+        }
+        if r.wait > self.max_wait {
+            self.max_wait = r.wait;
+        }
+    }
+}
+
+/// Per-model scored row of the final report.
+#[derive(Clone, Debug)]
+pub struct ModelScore {
+    pub name: String,
+    pub weight: u32,
+    pub tally: ModelTally,
+    /// `max_wait` must stay under this (starvation invariant).
+    pub wait_bound: Duration,
+    /// Engine-side p50/p99 end-to-end latency, seconds.
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+/// One graded invariant: name, verdict, and a deterministic detail
+/// line explaining the numbers behind the verdict.
+#[derive(Clone, Debug)]
+pub struct Invariant {
+    pub name: &'static str,
+    pub passed: bool,
+    pub detail: String,
+}
+
+/// The scored result of one soak run at one pool width.
+#[derive(Clone, Debug)]
+pub struct SoakReport {
+    pub profile: &'static str,
+    pub seed: u64,
+    pub pool_width: usize,
+    pub models: Vec<ModelScore>,
+    pub invariants: Vec<Invariant>,
+    /// Run-wide end-to-end percentiles (all models' histograms merged).
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+impl SoakReport {
+    pub fn passed(&self) -> bool {
+        self.invariants.iter().all(|i| i.passed)
+    }
+
+    /// Deterministic multi-line summary: header, one row per model in
+    /// registration order, one row per invariant in fixed order.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "soak profile={} seed={} width={}: {}\n",
+            self.profile,
+            self.seed,
+            self.pool_width,
+            if self.passed() { "PASS" } else { "FAIL" }
+        );
+        for m in &self.models {
+            let t = &m.tally;
+            s.push_str(&format!(
+                "  {} (w{}): {} attempts, {} admitted, {} completed, \
+                 {} expired, {} failed, {} rejected \
+                 (full {}, quota {}, infeasible {}), {} lost; \
+                 max wait {:.1}ms (bound {:.1}ms); p50 {:.3}ms p99 {:.3}ms; \
+                 spot {}/{}\n",
+                m.name,
+                m.weight,
+                t.attempts,
+                t.admitted,
+                t.completed,
+                t.expired,
+                t.failed,
+                t.rejected_full + t.rejected_quota + t.rejected_infeasible
+                    + t.rejected_other,
+                t.rejected_full,
+                t.rejected_quota,
+                t.rejected_infeasible,
+                t.lost,
+                t.max_wait.as_secs_f64() * 1e3,
+                m.wait_bound.as_secs_f64() * 1e3,
+                m.p50_s * 1e3,
+                m.p99_s * 1e3,
+                t.spot_checks - t.spot_mismatches,
+                t.spot_checks,
+            ));
+        }
+        for inv in &self.invariants {
+            s.push_str(&format!(
+                "  [{}] {}: {}\n",
+                if inv.passed { "ok" } else { "FAIL" },
+                inv.name,
+                inv.detail
+            ));
+        }
+        s
+    }
+
+    /// JSON object for `BENCH_soak.json` aggregation — fixed key set,
+    /// models and invariants as ordered arrays.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("profile", Json::str(self.profile)),
+            ("seed", Json::num(self.seed as f64)),
+            ("pool_width", Json::num(self.pool_width as f64)),
+            ("passed", Json::Bool(self.passed())),
+            ("p50_s", Json::num(self.p50_s)),
+            ("p99_s", Json::num(self.p99_s)),
+            (
+                "models",
+                Json::Arr(
+                    self.models
+                        .iter()
+                        .map(|m| {
+                            let t = &m.tally;
+                            Json::obj(vec![
+                                ("name", Json::str(&m.name)),
+                                ("weight", Json::num(m.weight as f64)),
+                                ("attempts", Json::num(t.attempts as f64)),
+                                ("admitted", Json::num(t.admitted as f64)),
+                                ("completed", Json::num(t.completed as f64)),
+                                ("expired", Json::num(t.expired as f64)),
+                                ("failed", Json::num(t.failed as f64)),
+                                (
+                                    "rejected_full",
+                                    Json::num(t.rejected_full as f64),
+                                ),
+                                (
+                                    "rejected_quota",
+                                    Json::num(t.rejected_quota as f64),
+                                ),
+                                (
+                                    "rejected_infeasible",
+                                    Json::num(t.rejected_infeasible as f64),
+                                ),
+                                ("lost", Json::num(t.lost as f64)),
+                                (
+                                    "max_wait_s",
+                                    Json::num(t.max_wait.as_secs_f64()),
+                                ),
+                                ("p50_s", Json::num(m.p50_s)),
+                                ("p99_s", Json::num(m.p99_s)),
+                                (
+                                    "spot_checks",
+                                    Json::num(t.spot_checks as f64),
+                                ),
+                                (
+                                    "spot_mismatches",
+                                    Json::num(t.spot_mismatches as f64),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "invariants",
+                Json::Arr(
+                    self.invariants
+                        .iter()
+                        .map(|i| {
+                            Json::obj(vec![
+                                ("name", Json::str(i.name)),
+                                ("passed", Json::Bool(i.passed)),
+                                ("detail", Json::str(&i.detail)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Grade one run. `models` pairs each model's name with its configured
+/// weight; `tallies` and `stats` are indexed in the same order.
+pub fn evaluate(
+    profile: Profile,
+    seed: u64,
+    pool_width: usize,
+    models: &[(String, u32)],
+    tallies: Vec<ModelTally>,
+    stats: &[ServingCounters],
+    starvation_slack: Duration,
+) -> SoakReport {
+    let total_weight: u64 =
+        models.iter().map(|(_, w)| *w as u64).sum::<u64>().max(1);
+
+    let mut merged = LatencyHisto::default();
+    for st in stats {
+        merged.merge(&st.latency_h);
+    }
+
+    let mut scored = Vec::with_capacity(models.len());
+    for (i, (name, weight)) in models.iter().enumerate() {
+        // f(weight): a model holding share w/W of the machine may wait
+        // up to slack × W/w — lighter tenants are allowed
+        // proportionally longer tails, but never unbounded ones.
+        let bound = Duration::from_secs_f64(
+            starvation_slack.as_secs_f64() * total_weight as f64
+                / (*weight).max(1) as f64,
+        );
+        scored.push(ModelScore {
+            name: name.clone(),
+            weight: *weight,
+            tally: tallies[i].clone(),
+            wait_bound: bound,
+            p50_s: stats[i].latency_h.p50(),
+            p99_s: stats[i].latency_h.p99(),
+        });
+    }
+
+    let mut invariants = Vec::with_capacity(4);
+
+    // 1. Zero lost tickets: every admitted request resolved to a
+    // terminal outcome and nothing fell through the client taxonomy.
+    {
+        let lost: u64 = scored.iter().map(|m| m.tally.lost).sum();
+        let other: u64 = scored.iter().map(|m| m.tally.rejected_other).sum();
+        let mut closed = true;
+        for m in &scored {
+            let t = &m.tally;
+            let rejected = t.rejected_full + t.rejected_quota
+                + t.rejected_infeasible + t.rejected_other;
+            if t.attempts != t.admitted + rejected
+                || t.admitted != t.completed + t.expired + t.failed + t.lost
+            {
+                closed = false;
+            }
+        }
+        invariants.push(Invariant {
+            name: "zero-lost-tickets",
+            passed: lost == 0 && other == 0 && closed,
+            detail: format!(
+                "{lost} lost, {other} unclassified rejects, \
+                 client taxonomy {}",
+                if closed { "closed" } else { "OPEN" }
+            ),
+        });
+    }
+
+    // 2. Accounting closes, client vs engine: per model the engine's
+    // counters must equal the client-observed counts exactly, and the
+    // engine's own identity submitted = completed + failed + expired
+    // must hold once drained.
+    {
+        let mut mismatches = Vec::new();
+        for (i, m) in scored.iter().enumerate() {
+            let t = &m.tally;
+            let st = &stats[i];
+            let pairs: [(&str, u64, u64); 7] = [
+                ("submitted", t.admitted, st.submitted),
+                ("completed", t.completed, st.completed),
+                ("expired", t.expired, st.expired),
+                ("failed", t.failed, st.failed),
+                ("rejected_full", t.rejected_full, st.rejected_full),
+                ("rejected_quota", t.rejected_quota, st.rejected_quota),
+                (
+                    "rejected_infeasible",
+                    t.rejected_infeasible,
+                    st.rejected_infeasible,
+                ),
+            ];
+            for (field, client, engine) in pairs {
+                if client != engine {
+                    mismatches.push(format!(
+                        "{} {field} client {client} != engine {engine}",
+                        m.name
+                    ));
+                }
+            }
+            if st.submitted != st.completed + st.failed + st.expired {
+                mismatches.push(format!(
+                    "{} engine identity open: {} != {}+{}+{}",
+                    m.name, st.submitted, st.completed, st.failed, st.expired
+                ));
+            }
+        }
+        invariants.push(Invariant {
+            name: "accounting-closes",
+            passed: mismatches.is_empty(),
+            detail: if mismatches.is_empty() {
+                "submitted = completed + expired + failed and all \
+                 rejection classes match engine counters"
+                    .to_string()
+            } else {
+                mismatches.join("; ")
+            },
+        });
+    }
+
+    // 3. Starvation bound: client-observed max wait per model stays
+    // under slack × (total_weight / weight). Client waits include
+    // submitter-side drain lag, so the slack must be generous — the
+    // invariant catches order-of-magnitude starvation, not jitter.
+    {
+        let mut worst = Vec::new();
+        for m in &scored {
+            if m.tally.max_wait > m.wait_bound {
+                worst.push(format!(
+                    "{} waited {:.1}ms > bound {:.1}ms",
+                    m.name,
+                    m.tally.max_wait.as_secs_f64() * 1e3,
+                    m.wait_bound.as_secs_f64() * 1e3
+                ));
+            }
+        }
+        invariants.push(Invariant {
+            name: "starvation-bound",
+            passed: worst.is_empty(),
+            detail: if worst.is_empty() {
+                "max wait within slack x (total_weight / weight) for \
+                 every model"
+                    .to_string()
+            } else {
+                worst.join("; ")
+            },
+        });
+    }
+
+    // 4. Spot-checked logits bit-identical to the serial reference.
+    {
+        let checks: u64 = scored.iter().map(|m| m.tally.spot_checks).sum();
+        let bad: u64 = scored.iter().map(|m| m.tally.spot_mismatches).sum();
+        invariants.push(Invariant {
+            name: "logits-bit-identical",
+            passed: bad == 0,
+            detail: format!("{}/{checks} spot checks exact", checks - bad),
+        });
+    }
+
+    SoakReport {
+        profile: profile.name(),
+        seed,
+        pool_width,
+        models: scored,
+        invariants,
+        p50_s: merged.p50(),
+        p99_s: merged.p99(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(model: usize, outcome: Outcome, wait_ms: u64) -> ReqRecord {
+        ReqRecord { model, outcome, wait: Duration::from_millis(wait_ms) }
+    }
+
+    fn tally_of(records: &[ReqRecord], model: usize) -> ModelTally {
+        let mut t = ModelTally::default();
+        for r in records.iter().filter(|r| r.model == model) {
+            t.push(r);
+        }
+        t
+    }
+
+    #[test]
+    fn clean_run_passes_all_invariants() {
+        let records = vec![
+            rec(0, Outcome::Completed { spot: Some(true) }, 3),
+            rec(0, Outcome::Completed { spot: None }, 5),
+            rec(0, Outcome::Expired, 2),
+            rec(1, Outcome::Completed { spot: Some(true) }, 8),
+            rec(1, Outcome::RejectedQuota, 0),
+        ];
+        let models =
+            vec![("hot".to_string(), 3u32), ("cold".to_string(), 1u32)];
+        let tallies =
+            vec![tally_of(&records, 0), tally_of(&records, 1)];
+        let mut s0 = ServingCounters::default();
+        s0.submitted = 3;
+        s0.completed = 2;
+        s0.expired = 1;
+        s0.latency_h.record(3e-3);
+        s0.latency_h.record(5e-3);
+        let mut s1 = ServingCounters::default();
+        s1.submitted = 1;
+        s1.completed = 1;
+        s1.rejected_quota = 1;
+        s1.latency_h.record(8e-3);
+        let report = evaluate(
+            Profile::Steady,
+            42,
+            4,
+            &models,
+            tallies,
+            &[s0, s1],
+            Duration::from_secs(1),
+        );
+        assert!(report.passed(), "{}", report.render());
+        assert_eq!(report.invariants.len(), 4);
+        // weighted bound: cold (w1 of W4) gets 4x the slack
+        assert_eq!(report.models[1].wait_bound, Duration::from_secs(4));
+        assert_eq!(report.models[0].wait_bound.as_millis(), 1333);
+        assert!(report.p99_s > 0.0);
+        // render + json are deterministic
+        assert_eq!(report.render(), report.render());
+        assert_eq!(report.to_json().to_string(),
+                   report.to_json().to_string());
+        assert!(report.render().contains("PASS"));
+    }
+
+    #[test]
+    fn lost_ticket_and_drift_fail_the_run() {
+        let records = vec![
+            rec(0, Outcome::Completed { spot: Some(false) }, 3),
+            rec(0, Outcome::Lost, 500),
+        ];
+        let models = vec![("m".to_string(), 1u32)];
+        let tallies = vec![tally_of(&records, 0)];
+        let mut st = ServingCounters::default();
+        st.submitted = 2;
+        st.completed = 2; // drifted vs client view
+        let report = evaluate(
+            Profile::AdversarialDeadline,
+            7,
+            1,
+            &models,
+            tallies,
+            &[st],
+            Duration::from_secs(1),
+        );
+        assert!(!report.passed());
+        let by_name = |n: &str| {
+            report.invariants.iter().find(|i| i.name == n).unwrap().passed
+        };
+        assert!(!by_name("zero-lost-tickets"));
+        assert!(!by_name("accounting-closes"));
+        assert!(!by_name("logits-bit-identical"));
+        assert!(report.render().contains("FAIL"));
+    }
+
+    #[test]
+    fn starvation_bound_scales_with_weight() {
+        let records = vec![rec(0, Outcome::Completed { spot: None }, 2500)];
+        let models = vec![("slow".to_string(), 1u32)];
+        let tallies = vec![tally_of(&records, 0)];
+        let mut st = ServingCounters::default();
+        st.submitted = 1;
+        st.completed = 1;
+        let report = evaluate(
+            Profile::HotSkew,
+            1,
+            1,
+            &models,
+            tallies,
+            &[st],
+            Duration::from_secs(2),
+        );
+        // sole tenant: bound = slack x 1/1 = 2s < 2.5s wait
+        assert!(!report.passed());
+        assert!(report
+            .invariants
+            .iter()
+            .any(|i| i.name == "starvation-bound" && !i.passed));
+    }
+}

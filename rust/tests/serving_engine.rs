@@ -79,7 +79,7 @@ fn slow_engine(delay_ms: u64, queue_cap: usize) -> ServingEngine {
         max_batch: 1,
         max_wait: Duration::ZERO,
         queue_cap,
-        pool: None,
+        ..EngineConfig::default()
     })
     .unwrap()
 }
@@ -138,6 +138,7 @@ fn concurrent_interleaved_requests_are_bit_identical_to_serial() {
             max_wait: Duration::from_millis(2),
             queue_cap: 1024,
             pool: Some(Arc::new(ThreadPool::new(width))),
+            ..EngineConfig::default()
         })
         .unwrap();
 
@@ -247,7 +248,7 @@ fn short_deadline_on_an_idle_engine_dispatches_early_not_expires() {
         max_batch: 64,
         max_wait: Duration::from_secs(10),
         queue_cap: 16,
-        pool: None,
+        ..EngineConfig::default()
     })
     .unwrap();
     let t0 = std::time::Instant::now();
@@ -306,7 +307,7 @@ fn backend_panic_fails_the_batch_but_not_the_engine() {
         max_batch: 1,
         max_wait: Duration::ZERO,
         queue_cap: 16,
-        pool: None,
+        ..EngineConfig::default()
     })
     .unwrap();
     let bad = engine

@@ -141,6 +141,7 @@ fn hot_swap_under_concurrent_load_is_epoch_pinned_and_lossless() {
             max_wait: Duration::from_millis(2),
             queue_cap: 1024,
             pool: Some(Arc::new(ThreadPool::new(width))),
+            ..EngineConfig::default()
         })
         .unwrap();
         assert_eq!(engine.epoch(), 0);
@@ -249,7 +250,7 @@ fn requests_admitted_before_swap_finish_on_their_admitted_version() {
         max_batch: 2,
         max_wait: Duration::ZERO,
         queue_cap: 64,
-        pool: None,
+        ..EngineConfig::default()
     })
     .unwrap();
 
@@ -302,7 +303,7 @@ fn rollback_mid_traffic_restores_the_previous_version() {
         max_batch: 1,
         max_wait: Duration::ZERO,
         queue_cap: 64,
-        pool: None,
+        ..EngineConfig::default()
     })
     .unwrap();
     let x = vec![3.0f32; 4];
@@ -381,7 +382,7 @@ fn superseded_backends_are_reclaimed_after_drain() {
         max_batch: 4,
         max_wait: Duration::ZERO,
         queue_cap: 64,
-        pool: None,
+        ..EngineConfig::default()
     })
     .unwrap();
     let x = vec![1.0f32; 4];

@@ -1,0 +1,220 @@
+//! Integration tests of the deterministic soak subsystem driving a
+//! real multi-tenant `ServingEngine`: the acceptance run (adversarial
+//! profile, two weighted models, pool widths {1, 4}, every invariant
+//! green), schedule determinism, and accounting closure between client
+//! and engine counters.
+// Crate-root style allowances, matching rust/src/lib.rs.
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use admm_nn::serving::{
+    EngineConfig, InferBackend, InferRequest, ModelRegistry, ServingEngine,
+    TenantConfig,
+};
+use admm_nn::soak::{self, gen, ModelUnderTest, Profile, SoakConfig};
+use admm_nn::util::ThreadPool;
+
+/// Deterministic non-identity backend: logit = 2·input + class index.
+/// Cheap enough to soak quickly, nontrivial enough that a scatter bug
+/// (wrong rows to the wrong ticket) cannot cancel out.
+struct Affine {
+    tag: &'static str,
+    dim: usize,
+}
+
+impl InferBackend for Affine {
+    fn name(&self) -> &str {
+        self.tag
+    }
+
+    fn input_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_classes(&self) -> usize {
+        self.dim
+    }
+
+    fn infer_batch(
+        &self,
+        _pool: &ThreadPool,
+        x: &[f32],
+        bsz: usize,
+    ) -> admm_nn::Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(bsz * self.dim);
+        for r in 0..bsz {
+            for c in 0..self.dim {
+                out.push(2.0 * x[r * self.dim + c] + c as f32);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Fresh two-tenant (3:1) engine + the matching soak model list.
+fn engine_and_models(width: usize) -> (ServingEngine, Vec<ModelUnderTest>) {
+    let hot: Arc<dyn InferBackend> = Arc::new(Affine { tag: "hot", dim: 6 });
+    let cold: Arc<dyn InferBackend> = Arc::new(Affine { tag: "cold", dim: 4 });
+    let mut reg = ModelRegistry::new();
+    reg.register_named("hot".into(), hot.clone()).unwrap();
+    reg.register_named("cold".into(), cold.clone()).unwrap();
+    let engine = ServingEngine::new(reg, EngineConfig {
+        max_batch: 8,
+        max_wait: Duration::from_micros(200),
+        queue_cap: 128,
+        pool: Some(Arc::new(ThreadPool::new(width))),
+        tenants: vec![
+            ("hot".into(), TenantConfig { weight: 3, quota: 0 }),
+            ("cold".into(), TenantConfig { weight: 1, quota: 0 }),
+        ],
+        ..EngineConfig::default()
+    })
+    .unwrap();
+    let models = vec![
+        ModelUnderTest { name: "hot".into(), backend: hot, weight: 3 },
+        ModelUnderTest { name: "cold".into(), backend: cold, weight: 1 },
+    ];
+    (engine, models)
+}
+
+fn cfg(profile: Profile, requests: usize) -> SoakConfig {
+    SoakConfig {
+        profile,
+        seed: 42,
+        submitters: 2,
+        requests,
+        tick: Duration::from_micros(20),
+        spot_every: 5,
+        window: 16,
+        starvation_slack: Duration::from_secs(5),
+    }
+}
+
+/// The acceptance run from the issue: fixed seed, adversarial-deadline
+/// profile, two weighted models, pool widths {1, 4} — all four
+/// invariants must hold at both widths.
+#[test]
+fn adversarial_soak_passes_all_invariants_at_widths_one_and_four() {
+    for width in [1usize, 4] {
+        let (engine, models) = engine_and_models(width);
+        let report = soak::run(
+            &engine,
+            &models,
+            &cfg(Profile::AdversarialDeadline, 96),
+        )
+        .expect("soak run");
+
+        assert!(report.passed(), "width {width}:\n{}", report.render());
+        assert_eq!(report.pool_width, width);
+        assert_eq!(report.seed, 42);
+        assert_eq!(report.profile, "adversarial");
+
+        let names: Vec<&str> =
+            report.invariants.iter().map(|i| i.name).collect();
+        assert_eq!(
+            names,
+            [
+                "zero-lost-tickets",
+                "accounting-closes",
+                "starvation-bound",
+                "logits-bit-identical",
+            ],
+            "width {width}"
+        );
+
+        let attempts: u64 =
+            report.models.iter().map(|m| m.tally.attempts).sum();
+        assert_eq!(attempts, 96, "width {width}: every arrival accounted");
+        let checks: u64 =
+            report.models.iter().map(|m| m.tally.spot_checks).sum();
+        assert!(checks > 0, "width {width}: spot checks actually ran");
+    }
+}
+
+/// The same seed must produce the same schedule (arrival times, model
+/// choices, row counts, deadlines, spot-check marks) — and a different
+/// seed must not.
+#[test]
+fn schedules_are_a_pure_function_of_the_seed() {
+    for profile in Profile::all() {
+        let a = gen::schedule(profile, 7, 3, 120, 2, 5);
+        let b = gen::schedule(profile, 7, 3, 120, 2, 5);
+        assert_eq!(a, b, "{profile:?}: same seed, same schedule");
+        let c = gen::schedule(profile, 8, 3, 120, 2, 5);
+        assert_ne!(a, c, "{profile:?}: seed must matter");
+
+        let total: usize = a.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 120, "{profile:?}: every request scheduled");
+        for sub in &a {
+            for w in sub.windows(2) {
+                assert!(
+                    w[0].at_ticks <= w[1].at_ticks,
+                    "{profile:?}: arrivals sorted per submitter"
+                );
+            }
+        }
+    }
+}
+
+/// Accounting closes between the client-side tally and the engine's
+/// own counters after a steady soak — and the tallies agree with the
+/// report's per-model scores.
+#[test]
+fn soak_accounting_closes_against_engine_counters() {
+    let (engine, models) = engine_and_models(2);
+    let report =
+        soak::run(&engine, &models, &cfg(Profile::Steady, 80)).expect("soak");
+    assert!(report.passed(), "{}", report.render());
+
+    for score in &report.models {
+        let st = engine.stats(&score.name).expect("engine stats");
+        let t = &score.tally;
+        assert_eq!(t.admitted, st.submitted, "{}: admitted", score.name);
+        assert_eq!(t.completed, st.completed, "{}: completed", score.name);
+        assert_eq!(t.expired, st.expired, "{}: expired", score.name);
+        assert_eq!(t.failed, st.failed, "{}: failed", score.name);
+        assert_eq!(
+            t.rejected_full + t.rejected_quota + t.rejected_infeasible,
+            st.rejected(),
+            "{}: rejections",
+            score.name
+        );
+        assert_eq!(t.lost, 0, "{}: no ticket vanished", score.name);
+        assert_eq!(
+            t.attempts,
+            t.admitted
+                + t.rejected_full
+                + t.rejected_quota
+                + t.rejected_infeasible
+                + t.rejected_other,
+            "{}: client taxonomy closed",
+            score.name
+        );
+    }
+}
+
+/// A soak must refuse an engine with prior traffic (accounting could
+/// not close) — and a fresh run right after proves the same engine
+/// shape is otherwise fine.
+#[test]
+fn soak_requires_a_fresh_engine() {
+    let (engine, models) = engine_and_models(1);
+    engine
+        .infer_sync(InferRequest::new("hot", vec![0.5; 6]))
+        .expect("warm request");
+    let err = soak::run(&engine, &models, &cfg(Profile::Steady, 16))
+        .expect_err("dirty engine must be rejected");
+    assert!(
+        err.to_string().contains("prior traffic"),
+        "unexpected error: {err:#}"
+    );
+
+    let (fresh, models) = engine_and_models(1);
+    let report =
+        soak::run(&fresh, &models, &cfg(Profile::Steady, 16)).expect("soak");
+    assert!(report.passed(), "{}", report.render());
+}
